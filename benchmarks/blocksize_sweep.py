@@ -1,0 +1,28 @@
+"""Paper Table 5: effect of block size b and γ on latency and recall (k=largest)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, index, oracle_for, query_batch, time_fn
+from repro.core import RetrievalConfig, jit_retrieve
+from repro.eval.metrics import recall_vs_oracle
+
+
+def run() -> list[Row]:
+    qb = query_batch()
+    k = 100
+    rows = []
+    for b in [4, 8, 16, 32]:
+        idx = index(b=b, c=16)
+        oracle_ids = oracle_for(idx, k)
+        ns = idx.n_superblocks
+        for frac, label in [(16, "gamma_lo"), (4, "gamma_hi")]:
+            gamma = max(4, ns // frac)
+            cfg = RetrievalConfig("lsp0", k=k, gamma=gamma, gamma0=4, beta=0.5)
+            fn = jit_retrieve(idx, cfg, impl="ref")
+            us = time_fn(fn, qb)
+            res = fn(qb)
+            rec = recall_vs_oracle(np.asarray(res.doc_ids), oracle_ids)
+            rows.append(Row(f"table5/b{b}/{label}", us, f"recall@{k}={rec:.3f};gamma={gamma}"))
+    return rows

@@ -1,0 +1,82 @@
+"""Shared fixtures + timing for the paper-table benchmarks.
+
+All benchmarks run on the synthetic Zipf corpus (MS MARCO is not shippable offline;
+see DESIGN.md §1 faithfulness note) and validate the paper's COMPARATIVE claims.
+CPU timings are latency proxies — the roofline benchmark covers TPU projections.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import lru_cache
+
+import jax
+import numpy as np
+
+from repro.core import make_query_batch, retrieve_exact
+from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
+from repro.index.builder import IndexBuildConfig, build_index
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+CORPUS_CFG = CorpusConfig(n_docs=16384, vocab=2048, n_topics=32, seed=0)
+N_QUERIES = 32
+K_DEFAULT = 10
+
+
+@lru_cache(maxsize=None)
+def corpus():
+    return make_corpus(CORPUS_CFG)
+
+
+@lru_cache(maxsize=None)
+def queries():
+    return tuple(map(tuple, [(tuple(t), tuple(w)) for t, w in make_queries(CORPUS_CFG, corpus(), N_QUERIES)]))
+
+
+@lru_cache(maxsize=None)
+def query_batch():
+    qs = [(np.asarray(t), np.asarray(w)) for t, w in queries()]
+    return make_query_batch(qs, CORPUS_CFG.vocab)
+
+
+@lru_cache(maxsize=None)
+def index(b: int = 8, c: int = 16, bound_bits: int = 4, flat: bool = True, avg: bool = True):
+    cor = corpus()
+    return build_index(
+        cor.doc_ptr, cor.tids, cor.ws, cor.vocab,
+        IndexBuildConfig(b=b, c=c, bound_bits=bound_bits, build_flat_inv=flat, build_avg=avg, kmeans_iters=4),
+    )
+
+
+@lru_cache(maxsize=None)
+def oracle(k: int = K_DEFAULT):
+    ids, vals = retrieve_exact(index(), query_batch(), k=k)
+    return np.asarray(ids), np.asarray(vals)
+
+
+def oracle_for(idx, k: int):
+    ids, _ = retrieve_exact(idx, query_batch(), k=k)
+    return np.asarray(ids)
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Mean wall time per call in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,31 @@
+"""Paper Table 9: Flat-Inv vs Fwd document index latency across block sizes."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, corpus, oracle_for, query_batch, time_fn
+from repro.core import RetrievalConfig, jit_retrieve
+from repro.eval.metrics import recall_vs_oracle
+from repro.index.builder import IndexBuildConfig, build_index
+
+
+def run() -> list[Row]:
+    cor = corpus()
+    qb = query_batch()
+    k = 100
+    rows = []
+    for b in [8, 32, 96]:
+        idx = build_index(
+            cor.doc_ptr, cor.tids, cor.ws, cor.vocab, IndexBuildConfig(b=b, c=16, kmeans_iters=2)
+        )
+        oracle_ids = oracle_for(idx, k)
+        ns = idx.n_superblocks
+        for layout in ("fwd", "flat"):
+            cfg = RetrievalConfig("lsp0", k=k, gamma=max(4, ns // 4), gamma0=4, beta=0.5, doc_layout=layout)
+            fn = jit_retrieve(idx, cfg, impl="ref")
+            us = time_fn(fn, qb)
+            res = fn(qb)
+            rec = recall_vs_oracle(np.asarray(res.doc_ids), oracle_ids)
+            rows.append(Row(f"table9/b{b}/{layout}", us, f"recall@{k}={rec:.3f}"))
+    return rows

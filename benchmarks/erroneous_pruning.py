@@ -1,0 +1,33 @@
+"""Paper Fig. 2: erroneous pruning — fraction of queries where SP returns zero /
+partial results as μ shrinks, vs LSP variants (which never fail)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, index, query_batch
+from repro.core import RetrievalConfig, jit_retrieve
+from repro.eval.metrics import failed_queries, partial_queries
+
+
+def run() -> list[Row]:
+    idx = index()
+    qb = query_batch()
+    ns = idx.n_superblocks
+    rows = []
+    for mu in [0.1, 0.2, 0.3, 0.5]:
+        for variant in ("sp", "lsp1"):
+            cfg = RetrievalConfig(variant, k=10, gamma=max(16, ns // 8), gamma0=4, mu=mu, eta=1.0, beta=1.0)
+            res = jit_retrieve(idx, cfg, impl="ref")(qb)
+            ids = np.asarray(res.doc_ids)
+            rows.append(
+                Row(
+                    f"fig2/{variant}/mu{mu}",
+                    0.0,
+                    f"failed={failed_queries(ids):.3f};partial={partial_queries(ids):.3f}",
+                )
+            )
+    sp_fail = float(rows[0].derived.split(";")[0].split("=")[1])
+    lsp_fail = float(rows[1].derived.split(";")[0].split("=")[1])
+    rows.append(Row("fig2/claim", 0.0, f"sp_fails_at_mu0.1={sp_fail > 0};lsp_never_fails={lsp_fail == 0}"))
+    return rows

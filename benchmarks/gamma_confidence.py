@@ -1,0 +1,34 @@
+"""Paper Fig. 4 / Table 1: order-statistics confidence P_γ(R) that the γ-th ranked
+superblock contains a top-k document, derived from training queries."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, index, oracle_for, query_batch
+from repro.core import ops
+from repro.core.gamma_analysis import (
+    contains_topk,
+    p_contains_topk_by_bin,
+    p_gamma_contains,
+    sbmax_ratio_distribution,
+)
+
+
+def run() -> list[Row]:
+    rows = []
+    for k, bc_label in [(10, "k10"), (100, "k100")]:
+        idx = index(b=8, c=16)
+        qb = query_batch()
+        oracle_ids = oracle_for(idx, k)
+        sbmax = np.asarray(ops.sbmax(idx.sb_bounds, qb.tids, qb.ws, "ref"))
+        edges, cdf, ratios = sbmax_ratio_distribution(sbmax, 64)
+        cont = contains_topk(idx, oracle_ids)
+        prb = p_contains_topk_by_bin(ratios, cont, edges)
+        ns = idx.n_superblocks
+        gammas = np.array([1, ns // 16, ns // 8, ns // 4, ns // 2])
+        pg = p_gamma_contains(np.maximum(gammas, 1), ns, edges, cdf, prb)
+        for g, p in zip(gammas, pg):
+            rows.append(Row(f"fig4/{bc_label}/gamma{max(int(g),1)}", 0.0, f"P_gamma_R={p:.4f};confidence={1-p:.4f}"))
+        assert (np.diff(pg) <= 1e-9).all(), "P_gamma(R) must be non-increasing"
+    return rows

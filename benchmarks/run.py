@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV (plus a roofline summary pointer).
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run table5 fig2  # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        blocksize_sweep,
+        compression_ablation,
+        dense_retrieval,
+        docindex_compare,
+        erroneous_pruning,
+        gamma_confidence,
+        index_sizes,
+        latency_suite,
+        variant_grid,
+        zeroshot_sweep,
+    )
+
+    suites = {
+        "table2": latency_suite.run,
+        "table4": zeroshot_sweep.run,
+        "table5": blocksize_sweep.run,
+        "table6": variant_grid.run,
+        "table7": index_sizes.run,
+        "table8": compression_ablation.run,
+        "table9": docindex_compare.run,
+        "fig2": erroneous_pruning.run,
+        "fig4": gamma_confidence.run,
+        "dense": dense_retrieval.run,
+    }
+    selected = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.time()
+        for row in suites[name]():
+            print(row.csv(), flush=True)
+        print(f"# suite {name} done in {time.time() - t0:.1f}s", flush=True)
+    # roofline artifacts are produced from the dry-run by benchmarks/roofline.py
+    print("# roofline: see results/roofline_16x16.md and results/roofline_2x16x16.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Tables 3 + 6: LSP/0 vs LSP/1 vs LSP/2 across (γ, μ) — grid-search view."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, index, oracle_for, query_batch, time_fn
+from repro.core import RetrievalConfig, jit_retrieve
+from repro.eval.metrics import recall_vs_oracle
+
+
+def run() -> list[Row]:
+    idx = index(b=8, c=16)
+    qb = query_batch()
+    k = 100
+    oracle_ids = oracle_for(idx, k)
+    ns = idx.n_superblocks
+    rows = []
+    for gamma in [ns // 16, ns // 8, ns // 4]:
+        for variant, mu in [("lsp0", 0.0), ("lsp1", 0.2), ("lsp1", 0.33), ("lsp2", 0.2)]:
+            cfg = RetrievalConfig(variant, k=k, gamma=max(4, gamma), gamma0=4, mu=mu or 0.5, eta=1.0, beta=0.5)
+            fn = jit_retrieve(idx, cfg, impl="ref")
+            us = time_fn(fn, qb)
+            res = fn(qb)
+            rec = recall_vs_oracle(np.asarray(res.doc_ids), oracle_ids)
+            tag = f"{variant}" + (f"_mu{mu}" if variant != "lsp0" else "")
+            rows.append(Row(f"table6/gamma{gamma}/{tag}", us, f"recall@{k}={rec:.3f}"))
+    return rows

@@ -1,0 +1,67 @@
+"""Serving example: batched retrieval engine with latency percentiles, plus the
+sharded (multi-device) retriever when more than one JAX device is available.
+
+    PYTHONPATH=src python examples/serve_retrieval.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python examples/serve_retrieval.py --sharded
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import RetrievalConfig, jit_retrieve, make_query_batch
+from repro.core.query import QueryBatch
+from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
+from repro.index.builder import IndexBuildConfig, build_index
+from repro.serve.engine import RetrievalEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded", action="store_true", help="index sharded over devices")
+    ap.add_argument("--n-requests", type=int, default=64)
+    args = ap.parse_args()
+
+    ccfg = CorpusConfig(n_docs=16384, vocab=2048, n_topics=32, seed=0)
+    corpus = make_corpus(ccfg)
+    idx = build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab,
+                      IndexBuildConfig(b=8, c=16, build_avg=False))
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=max(16, idx.n_superblocks // 8), beta=0.33)
+
+    if args.sharded and len(jax.devices()) >= 4:
+        from repro.distributed.retrieval import make_mesh_retriever, shard_index
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(model=2, data=2)
+        shards = shard_index(idx, 2)
+        run, _ = make_mesh_retriever(shards, cfg, mesh)
+        print(f"sharded retriever over mesh {dict(mesh.shape)}")
+
+        def retriever(qb: QueryBatch):
+            ids, vals = run(qb)
+            return ids, vals
+        batch_q = 4  # query batch must divide the data axis
+    else:
+        fn = jit_retrieve(idx, cfg)
+
+        def retriever(qb: QueryBatch):
+            res = fn(qb)
+            return res.doc_ids, res.scores
+        batch_q = 8
+
+    eng = RetrievalEngine(retriever, corpus.vocab, max_batch=batch_q, nq_max=64, max_wait_ms=2.0)
+    queries = make_queries(ccfg, corpus, args.n_requests)
+    futures = [eng.submit(t, w) for t, w in queries]
+    results = [f.result(timeout=300) for f in futures]
+    eng.shutdown()
+
+    stats = eng.stats.summary()
+    print(f"served {stats['requests']} requests in {stats['batches']} batches")
+    print(f"latency ms: mean={stats['mean_ms']:.1f} p50={stats['p50_ms']:.1f} p99={stats['p99_ms']:.1f}")
+    print("sample result ids:", results[0][0][:5].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.common.registry import Registry
+from repro.common import tree_utils

@@ -1,0 +1,99 @@
+"""Minimal functional parameter-pytree "module" utilities (no flax in this container).
+
+Conventions used across ``repro.models``:
+  * a module is ``init(key, cfg, ...) -> params`` plus ``apply(params, cfg, x, ...)``;
+  * params are nested dicts of jnp arrays, checkpoint/shard friendly;
+  * initializers follow standard fan-in scaling and take explicit dtypes so that
+    bf16-compute / fp32-master-weight policies live in the trainer, not the model.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def split_keys(key: jax.Array, n: int) -> Sequence[jax.Array]:
+    return jax.random.split(key, n)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float | None = None):
+    """Fan-in scaled truncated-normal weight (LeCun-ish; matches common LM practice)."""
+    std = scale if scale is not None else in_dim**-0.5
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim), jnp.float32) * std
+    return w.astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32, std: float = 0.02):
+    e = jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim), jnp.float32) * std
+    return e.astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMS reduction in f32, normalization multiply in the activation dtype — the
+    f32 full-activation copy of the naive formulation dominated prefill temp memory
+    (15+ live f32[B,S,D] buffers; see EXPERIMENTS.md §Perf)."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * inv * gamma.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    return jax.nn.silu(x_gate) * x_up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def ambient_axis_size(name: str) -> int:
+    """Size of a mesh axis in the ambient mesh context (1 when absent)."""
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    if mesh.empty or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def maybe_shard(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint iff an ambient mesh is active (no-op in unit tests).
+
+    Axis names in `spec` that the ambient mesh lacks are dropped, so model code can
+    annotate with the full ("pod","data","model") vocabulary and still run on small
+    test meshes.
+    """
+    from jax._src.mesh import thread_resources
+    from jax.sharding import PartitionSpec
+
+    mesh = thread_resources.env.physical_mesh
+    if mesh.empty:
+        return x
+
+    def filt(part):
+        if part is None:
+            return None
+        parts = part if isinstance(part, tuple) else (part,)
+        kept = tuple(p for p in parts if p in mesh.axis_names)
+        return kept if kept else None
+
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*[filt(s) for s in spec]))

@@ -1,0 +1,64 @@
+"""Pytree helpers shared by optimizer / checkpoint / trainer layers."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree: Any, s) -> Any:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_dot(a: Any, b: Any) -> jnp.ndarray:
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.zeros((), jnp.float32))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    sq = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def param_count(tree: Any) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def param_bytes(tree: Any) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_cast(tree: Any, dtype) -> Any:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def flatten_with_paths(tree: Any) -> dict[str, Any]:
+    """Flatten a pytree into {'a/b/0': leaf} for checkpointing."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)

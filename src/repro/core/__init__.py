@@ -1,0 +1,6 @@
+"""The paper's primary contribution: LSP superblock-pruned sparse retrieval."""
+
+from repro.core.config import RetrievalConfig, recommended
+from repro.core.lsp import RetrievalResult, jit_retrieve, retrieve
+from repro.core.exact import retrieve_exact
+from repro.core.query import QueryBatch, make_query_batch

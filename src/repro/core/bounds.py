@@ -1,0 +1,69 @@
+"""Pure-jnp reference math for bound computation over packed indexes.
+
+These functions are both (a) the oracle the Pallas kernels are tested against and
+(b) the default execution path on non-TPU backends. The packed layout is the
+lane-strided segment format of repro.index.pack (value v of segment s lives at word
+s*G + v%G, bit-lane v//G).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.index.layout import PackedBounds
+
+
+def unpack_strided(words: jnp.ndarray, bits: int, granule_words: int) -> jnp.ndarray:
+    """uint32 [..., W] -> int32 [..., W * vpw] in logical value order."""
+    vpw = 32 // bits
+    g = granule_words
+    w = words.shape[-1]
+    s = w // g
+    segs = words.reshape(*words.shape[:-1], s, 1, g)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[:, None]
+    mask = jnp.uint32((1 << bits) - 1)
+    vals = (segs >> shifts) & mask  # [..., s, vpw, g]
+    return vals.reshape(*words.shape[:-1], s * vpw * g).astype(jnp.int32)
+
+
+def fold_scale(pb: PackedBounds, tids: jnp.ndarray, ws: jnp.ndarray):
+    """Fold per-term row scales into the query weights: returns (ws', const_scale).
+
+    Per-row quantization scales enter the bound sum as sum_i ws[i]*scale[tid[i]]*q —
+    pre-scaling ws keeps the packed-bound kernels scale-free.
+    """
+    if jnp.ndim(pb.scale) == 0:
+        return ws, pb.scale
+    sc = jnp.asarray(pb.scale)[jnp.clip(tids, 0, pb.packed.shape[0] - 1)]
+    return ws * sc, 1.0
+
+
+def bound_scores(pb: PackedBounds, tids: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
+    """BoundSum / SBMax (paper Eq. 1): [Q, N] = sum_i ws[:, i] * W[tids[:, i], :].
+
+    Sentinel tids (== vocab) carry ws == 0; clamping the row index keeps the gather
+    in-bounds and the zero weight kills the contribution.
+    """
+    ws, scale = fold_scale(pb, tids, ws)
+    rows = pb.packed[jnp.clip(tids, 0, pb.packed.shape[0] - 1)]  # [Q, nq, W] u32
+    vals = unpack_strided(rows, pb.bits, pb.granule_words)[..., : pb.n]  # [Q, nq, N]
+    return jnp.einsum("qi,qin->qn", ws, vals.astype(jnp.float32)) * scale
+
+
+def gathered_block_bounds(
+    blk: PackedBounds, c: int, tids: jnp.ndarray, ws: jnp.ndarray, sel_sb: jnp.ndarray
+) -> jnp.ndarray:
+    """Block BoundSum restricted to selected superblocks' blocks: [Q, S, c].
+
+    blk.packed rows hold blocks in superblock-contiguous granules of cw = c*bits/32
+    words — the word-aligned random-access unit (the paper's selectors-first property).
+    """
+    cw = c * blk.bits // 32
+    assert blk.granule_words == cw, "block matrix must be packed at superblock granule"
+    ws, scale = fold_scale(blk, tids, ws)
+    v = blk.packed.shape[0]
+    packed3 = blk.packed.reshape(v, -1, cw)  # [V, NS, cw]
+    # double gather (term rows x selected superblocks): [Q, nq, S, cw]
+    sel = packed3[jnp.clip(tids, 0, v - 1)[:, :, None], sel_sb[:, None, :]]
+    vals = unpack_strided(sel, blk.bits, cw)  # [Q, nq, S, c]
+    return jnp.einsum("qi,qisc->qsc", ws, vals.astype(jnp.float32)) * scale

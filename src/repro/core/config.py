@@ -1,0 +1,37 @@
+"""Online retrieval configuration (the paper's query-time parameters)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class RetrievalConfig:
+    variant: str = "lsp0"  # lsp0 | lsp1 | lsp2 | sp | bmp | exact
+    k: int = 10
+    gamma: int = 250  # guaranteed top-γ superblocks (paper §4.1)
+    mu: float = 0.5  # threshold overestimation for max bounds (LSP/1, LSP/2, SP)
+    eta: float = 1.0  # block-level overestimation / SP avg-bound factor
+    beta: float = 0.33  # query pruning: keep top β fraction of query terms (bounds only)
+    # --- TPU batching budgets (static shapes; see DESIGN.md §2) ---
+    gamma0: int = 32  # round-0 superblocks scored to seed the threshold θ
+    sb_budget: int = 0  # cap on visited superblocks; 0 -> gamma (lsp0) / 2*gamma (lsp1/2/sp)
+    block_budget: int = 0  # cap on scored blocks; 0 -> visited_superblocks * c
+    use_kernels: bool = True  # Pallas kernels vs pure-jnp reference ops
+    doc_layout: str = "fwd"  # fwd | flat
+
+    def resolved_sb_budget(self) -> int:
+        if self.sb_budget:
+            return self.sb_budget
+        return self.gamma if self.variant in ("lsp0", "bmp") else 2 * self.gamma
+
+
+# Paper-recommended zero-shot configurations (§Conclusion):
+#   k=10   -> γ=250 (or 500), β=0.33, b=16, c=16, 4-bit SIMDBP-256*, Fwd docs
+#   k=1000 -> γ=1000 (or 2000), β=0.5, b=4..8, c=16
+def recommended(k: int, variant: str = "lsp0") -> RetrievalConfig:
+    if k <= 10:
+        return RetrievalConfig(variant=variant, k=k, gamma=250, beta=0.33)
+    if k <= 100:
+        return RetrievalConfig(variant=variant, k=k, gamma=500, beta=0.33)
+    return RetrievalConfig(variant=variant, k=k, gamma=1000, beta=0.5)

@@ -1,0 +1,180 @@
+"""LSP/0, LSP/1, LSP/2 + SP and BMP baselines — batched, static-shape, jit-able.
+
+Faithful reproduction of the paper's traversal semantics, restructured for TPU
+(DESIGN.md §2). The CPU implementation's continuously-updated threshold θ becomes a
+two-round scheme:
+
+  round 0  score all documents of the top-γ₀ superblocks; θ = k-th best score.
+  round 1  apply the variant's superblock pruning rule with θ, compute block
+           BoundSums for surviving superblocks, prune blocks at θ/η, score the rest.
+
+Round-0 superblocks are exactly the first γ₀ entries of the SBMax-descending order, so
+round 1 skips them and the union of both rounds equals the paper's visitation set. The
+two-round θ is never larger than the CPU's θ at the same traversal point, i.e. we prune
+at most as aggressively — recall is preserved or slightly improved at equal parameters.
+
+Variant pruning rules (paper §4.1), applied to the SBMax-sorted candidate list:
+  LSP/0  visit top-γ superblocks with SBMax >= θ; nothing else.
+  LSP/1  LSP/0 ∪ { X : SBMax(X) > θ/μ }           (both sets are prefixes!)
+  LSP/2  LSP/0 ∪ { X : SBMax(X) > θ/μ or SBavg(X) > θ/η }   (SP rule + guarantee)
+  SP     { X : SBMax(X) > θ/μ or SBavg(X) > θ/η }  — no guarantee; can fail (Fig. 2)
+  BMP    no superblock level: BoundSum over all blocks, prune at θ/η.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.core.config import RetrievalConfig
+from repro.core.query import QueryBatch, prune_terms, scatter_dense
+from repro.core.scoring import NEG, score_blocks_flat, score_blocks_fwd, score_positions_fwd
+from repro.index.layout import LSPIndex
+
+
+class RetrievalResult(NamedTuple):
+    doc_ids: jnp.ndarray  # int32 [Q, k] original doc ids, -1 where no result
+    scores: jnp.ndarray  # float32 [Q, k]
+    n_superblocks_visited: jnp.ndarray  # int32 [Q]
+    n_blocks_scored: jnp.ndarray  # int32 [Q]
+
+
+def _kth_threshold(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """θ = k-th best score (0 if fewer than k valid docs -> prunes nothing unsafely)."""
+    vals, _ = jax.lax.top_k(scores, min(k, scores.shape[-1]))
+    return jnp.maximum(vals[:, -1], 0.0)
+
+
+def _score_superblock_docs(index: LSPIndex, qdense, sb_idx):
+    """Score every document of the given superblocks: [Q, S*c*b] scores + positions."""
+    span = index.c * index.b
+    pos = sb_idx[:, :, None] * span + jnp.arange(span)[None, None, :]
+    pos = pos.reshape(pos.shape[0], -1)
+    return score_positions_fwd(index, qdense, pos), pos
+
+
+def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: str = "auto") -> RetrievalResult:
+    variant = cfg.variant
+    if variant == "bmp":
+        return _retrieve_bmp(index, qb_full, cfg, impl)
+
+    ns, c = index.n_superblocks, index.c
+    gamma = min(cfg.gamma, ns)
+    g0 = min(cfg.gamma0, gamma)
+    budget = min(cfg.resolved_sb_budget(), ns)
+    qb = prune_terms(qb_full, cfg.beta)
+    qdense = scatter_dense(qb_full)
+
+    # ---- phase 1: superblock bounds (paper Eq. 1), full sorted candidate list
+    sbmax = ops.sbmax(index.sb_bounds, qb.tids, qb.ws, impl)  # [Q, NS]
+    top_vals, top_idx = jax.lax.top_k(sbmax, budget)
+
+    # ---- round 0: seed θ from the guaranteed head of the list
+    scores0, pos0 = _score_superblock_docs(index, qdense, top_idx[:, :g0])
+    theta = _kth_threshold(scores0, cfg.k)  # [Q]
+
+    # ---- variant eligibility over ranks [g0, budget)
+    rank = jnp.arange(budget)[None, :]
+    th = theta[:, None]
+    in_gamma = (rank < gamma) & (top_vals >= th)
+    if variant == "lsp0":
+        eligible = in_gamma
+    elif variant == "lsp1":
+        eligible = in_gamma | (top_vals > th / cfg.mu)
+    elif variant in ("lsp2", "sp"):
+        assert index.sb_avg is not None, f"{variant} needs superblock averages in the index"
+        sbavg = ops.sbmax(index.sb_avg, qb.tids, qb.ws, impl)
+        avg_vals = jnp.take_along_axis(sbavg, top_idx, axis=1)
+        sp_rule = (top_vals > th / cfg.mu) | (avg_vals > th / cfg.eta)
+        eligible = (in_gamma | sp_rule) if variant == "lsp2" else sp_rule
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    if variant == "sp":
+        # Faithful SP has NO guaranteed visitation: round 0 only seeds θ (the paper's
+        # threshold-estimation role) and its documents are NOT returned — this is what
+        # lets erroneous pruning produce empty results (paper Fig. 2).
+        scores0 = jnp.full_like(scores0, NEG)
+    else:
+        eligible = eligible & (rank >= g0)  # round 0 already scored these
+
+    # ---- phase 2: block bounds for surviving superblocks, prune at θ/η
+    blk_bounds = ops.gathered_block_bounds(
+        index.blk_bounds, c, qb.tids, qb.ws, top_idx, impl
+    )  # [Q, budget, c]
+    blk_bounds = jnp.where(eligible[:, :, None], blk_bounds, NEG)
+    blk_keep = blk_bounds > th[:, :, None] / cfg.eta
+
+    flat_bounds = jnp.where(blk_keep, blk_bounds, NEG).reshape(blk_bounds.shape[0], -1)
+    block_budget = cfg.block_budget or budget * c
+    block_budget = min(block_budget, budget * c)
+    bvals, bidx = jax.lax.top_k(flat_bounds, block_budget)  # over [Q, budget*c]
+    sel_sb = jnp.take_along_axis(top_idx, bidx // c, axis=1)
+    blk_ids = sel_sb * c + bidx % c
+    blk_mask = bvals > NEG / 2
+
+    # ---- phase 3: document scoring
+    score_fn = score_blocks_flat if cfg.doc_layout == "flat" else score_blocks_fwd
+    scores1, pos1 = score_fn(index, qdense, blk_ids, blk_mask)
+
+    # ---- merge rounds, final top-k
+    all_scores = jnp.concatenate([scores0, scores1], axis=1)
+    all_pos = jnp.concatenate([pos0, pos1], axis=1)
+    vals, idx = jax.lax.top_k(all_scores, cfg.k)
+    pos_k = jnp.take_along_axis(all_pos, idx, axis=1)
+    ids = index.doc_remap[jnp.clip(pos_k, 0, index.doc_remap.shape[0] - 1)]
+    ids = jnp.where(vals > NEG / 2, ids, -1)
+
+    return RetrievalResult(
+        doc_ids=ids,
+        scores=jnp.where(vals > NEG / 2, vals, jnp.float32(NEG)),
+        n_superblocks_visited=g0 + eligible.sum(axis=1, dtype=jnp.int32),
+        n_blocks_scored=blk_mask.sum(axis=1, dtype=jnp.int32) + g0 * c,
+    )
+
+
+def _retrieve_bmp(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: str) -> RetrievalResult:
+    """BMP baseline: single-level block filtering (Mallia et al. '24) on our layout."""
+    nb, b = index.n_blocks, index.b
+    qb = prune_terms(qb_full, cfg.beta)
+    qdense = scatter_dense(qb_full)
+
+    boundsum = ops.sbmax(index.blk_bounds, qb.tids, qb.ws, impl)  # [Q, NB]
+    b0 = min(max(cfg.gamma0 * index.c, cfg.k // b + 1), nb)
+    v0, i0 = jax.lax.top_k(boundsum, b0)
+    scores0, pos0 = score_blocks_fwd(index, qdense, i0, jnp.ones_like(i0, bool))
+    theta = _kth_threshold(scores0, cfg.k)
+
+    budget = min(cfg.block_budget or 4 * cfg.gamma * index.c, nb)
+    vals, idx = jax.lax.top_k(boundsum, budget)
+    rank = jnp.arange(budget)[None, :]
+    eligible = (vals > theta[:, None] / cfg.eta) & (rank >= b0)
+    scores1, pos1 = score_blocks_fwd(index, qdense, idx, eligible)
+
+    all_scores = jnp.concatenate([scores0, scores1], axis=1)
+    all_pos = jnp.concatenate([pos0, pos1], axis=1)
+    tvals, tidx = jax.lax.top_k(all_scores, cfg.k)
+    pos_k = jnp.take_along_axis(all_pos, tidx, axis=1)
+    ids = index.doc_remap[jnp.clip(pos_k, 0, index.doc_remap.shape[0] - 1)]
+    ids = jnp.where(tvals > NEG / 2, ids, -1)
+    return RetrievalResult(
+        doc_ids=ids,
+        scores=jnp.where(tvals > NEG / 2, tvals, jnp.float32(NEG)),
+        n_superblocks_visited=jnp.zeros(ids.shape[0], jnp.int32),
+        n_blocks_scored=b0 + eligible.sum(axis=1, dtype=jnp.int32),
+    )
+
+
+def jit_retrieve(index: LSPIndex, cfg: RetrievalConfig, impl: str = "auto"):
+    """Compile a retriever closed over the index. QueryBatch.vocab is static (shapes
+    depend on it), so the jit boundary takes only the tids/ws arrays."""
+    vocab = index.vocab
+
+    @jax.jit
+    def fn(tids, ws):
+        return retrieve(index, QueryBatch(tids, ws, vocab), cfg, impl=impl)
+
+    return lambda qb: fn(qb.tids, qb.ws)

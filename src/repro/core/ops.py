@@ -1,0 +1,43 @@
+"""Dispatch layer: Pallas kernels on TPU, pure-jnp reference elsewhere.
+
+impl:
+  "auto"      kernel on TPU, ref otherwise (CPU runs of kernels use interpret mode
+              and are validated separately in tests/test_kernels_*.py)
+  "ref"       always pure jnp
+  "kernel"    always Pallas (interpret=True off-TPU)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds
+from repro.index.layout import PackedBounds
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sbmax(pb: PackedBounds, tids: jnp.ndarray, ws: jnp.ndarray, impl: str = "auto") -> jnp.ndarray:
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return bounds.bound_scores(pb, tids, ws)
+    from repro.kernels.sbmax.ops import sbmax_op
+
+    return sbmax_op(pb, tids, ws, interpret=not _on_tpu())
+
+
+def gathered_block_bounds(
+    pb: PackedBounds,
+    c: int,
+    tids: jnp.ndarray,
+    ws: jnp.ndarray,
+    sel_sb: jnp.ndarray,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return bounds.gathered_block_bounds(pb, c, tids, ws, sel_sb)
+    from repro.kernels.boundsum_gather.ops import boundsum_gather_op
+
+    return boundsum_gather_op(pb, c, tids, ws, sel_sb, interpret=not _on_tpu())

@@ -1,0 +1,62 @@
+"""Query-side preparation: padding, β term pruning, dense scatter."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QueryBatch(NamedTuple):
+    """Padded batch of sparse queries. Sentinel term id == vocab, weight == 0."""
+
+    tids: jnp.ndarray  # int32 [Q, nq_max]
+    ws: jnp.ndarray  # float32 [Q, nq_max]
+    vocab: int
+
+    @property
+    def nq_max(self) -> int:
+        return self.tids.shape[1]
+
+
+def make_query_batch(queries: list[tuple[np.ndarray, np.ndarray]], vocab: int, nq_max: int = 0) -> QueryBatch:
+    """queries: list of (tids, weights). Sorted by weight desc so β-pruning is a prefix."""
+    if not nq_max:
+        nq_max = max((len(t) for t, _ in queries), default=1)
+        nq_max = max(8, -(-nq_max // 8) * 8)
+    q = len(queries)
+    tids = np.full((q, nq_max), vocab, np.int32)
+    ws = np.zeros((q, nq_max), np.float32)
+    for i, (t, w) in enumerate(queries):
+        order = np.argsort(-np.asarray(w, np.float32), kind="stable")[:nq_max]
+        tids[i, : len(order)] = np.asarray(t)[order]
+        ws[i, : len(order)] = np.asarray(w, np.float32)[order]
+    return QueryBatch(jnp.asarray(tids), jnp.asarray(ws), vocab)
+
+
+def prune_terms(qb: QueryBatch, beta: float) -> QueryBatch:
+    """Keep the highest-weighted ceil(β * n_terms_i) terms of each query (paper's
+    query pruning; used for candidate generation only — scoring uses the full query)."""
+    if beta >= 1.0:
+        return qb
+    valid = (qb.tids < qb.vocab).astype(jnp.int32)
+    n_valid = valid.sum(axis=1, keepdims=True)
+    keep_n = jnp.ceil(beta * n_valid).astype(jnp.int32)
+    # terms are weight-sorted at batch construction -> keep a prefix
+    idx = jnp.arange(qb.nq_max)[None, :]
+    keep = idx < keep_n
+    return QueryBatch(
+        jnp.where(keep, qb.tids, qb.vocab),
+        jnp.where(keep, qb.ws, 0.0),
+        qb.vocab,
+    )
+
+
+def scatter_dense(qb: QueryBatch) -> jnp.ndarray:
+    """[Q, vocab+1] dense query vectors; sentinel column (== vocab) stays 0."""
+    q = qb.tids.shape[0]
+    dense = jnp.zeros((q, qb.vocab + 1), jnp.float32)
+    dense = dense.at[jnp.arange(q)[:, None], qb.tids].add(qb.ws)
+    return dense.at[:, qb.vocab].set(0.0)

@@ -1,0 +1,38 @@
+"""Initial top-k threshold estimation (paper ref. [39]).
+
+The batched pipeline's round 0 (score top-γ₀ superblocks) already provides an
+*underestimate-safe* θ. This module adds the cheaper sampling estimator for callers
+that want to shrink γ₀: score a uniform sample of documents and take an order-statistic
+corrected k-quantile. Underestimation is the safe direction (prunes less); we shrink
+the estimate by `safety` to stay on that side.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.query import QueryBatch, scatter_dense
+from repro.core.scoring import score_positions_fwd
+from repro.index.layout import LSPIndex
+
+
+def estimate_theta(
+    index: LSPIndex,
+    qb: QueryBatch,
+    k: int,
+    n_sample: int = 1024,
+    safety: float = 0.9,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """[Q] estimated k-th best score. E[k-th of corpus] ~ (k * n_sample / n_docs)-th of
+    a uniform sample; we take that order statistic and scale by `safety`."""
+    n_pad = index.doc_remap.shape[0]
+    n_sample = min(n_sample, n_pad)
+    key = jax.random.PRNGKey(seed)
+    pos = jax.random.choice(key, n_pad, (n_sample,), replace=False)
+    qdense = scatter_dense(qb)
+    scores = score_positions_fwd(index, qdense, jnp.broadcast_to(pos, (qb.tids.shape[0], n_sample)))
+    k_eff = max(1, int(round(k * n_sample / max(index.n_docs, 1))))
+    vals, _ = jax.lax.top_k(scores, k_eff)
+    return jnp.maximum(vals[:, -1] * safety, 0.0)

@@ -1,0 +1,265 @@
+"""Per-architecture sharding rules (PartitionSpecs) for params and inputs.
+
+Conventions (TPU v5e two-pod mesh, axes pod/data/model):
+  * LM: Megatron TP over `model` (attention heads + FFN hidden), DP over pod+data,
+    vocab/embedding sharded over `model`, MoE experts over `model` (EP);
+  * KV caches: heads over `model`; for single-sequence long-context decode the cache
+    LENGTH shards over `data` (sequence parallelism) since batch can't;
+  * recsys: one stacked embedding table row-sharded over `model` (EP analogue),
+    dense MLPs replicated, batch over pod+data;
+  * GNN: edge-parallel — edge arrays sharded over every axis, node arrays replicated
+    (fits: 2.4M x 100 f32 = 980MB), segment-sums psum-reduced;
+  * retrieval (the paper's workload): index unit dims (superblocks/blocks/docs)
+    sharded over `model`, queries over pod+data (see repro/distributed/retrieval.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import LMParams, LayerParams
+from repro.models.ffn import DenseFFNParams, MoEParams
+from repro.models.attention import AttnParams
+
+
+def _batch(mesh) -> Any:
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+# ------------------------------------------------------------------ LM
+def lm_param_specs(params: LMParams, mesh, fsdp: bool = True, kv_shard: bool = True) -> LMParams:
+    """Megatron TP over `model` + (optionally) FSDP over `data` on the other matmul
+    dim — 2D weight sharding is what fits the 400B-class archs in 16GB/chip; GSPMD
+    inserts the FSDP all-gathers. `pod` stays pure DP (params replicated across pods,
+    gradients reduced over DCN).
+
+    kv_shard=False replicates the K/V projections' head dim: with GQA (8 KV heads)
+    on a 16-way model axis, sharding KV heads pads 2x and forces halo exchanges in
+    attention — for train/prefill the KV tensors are small, so Q-heads shard and KV
+    replicates (decode keeps kv_shard=True: there the KV *cache* dominates memory).
+
+    With a pod axis, FSDP spans (data, pod): 400B-class params/grads at fp32 need all
+    512 chips (ZeRO-3 over DCN, prefetched) — pure pod-DP would double-book 6.25GB of
+    master weights per device."""
+    f = (("data", "pod") if "pod" in mesh.axis_names else "data") if fsdp else None
+    kv = "model" if kv_shard else None
+
+    def attn_spec(p: AttnParams) -> AttnParams:
+        return AttnParams(
+            wq=P(f, "model"),
+            wk=P(f, kv),
+            wv=P(f, kv),
+            wo=P("model", f),
+            q_gamma=None if p.q_gamma is None else P(None),
+            k_gamma=None if p.k_gamma is None else P(None),
+        )
+
+    def ffn_spec(p):
+        if isinstance(p, MoEParams):
+            return MoEParams(
+                router=P(None, None),
+                w_gate=P("model", f, None),  # EP over model + FSDP over d_model
+                w_up=P("model", f, None),
+                w_down=P("model", None, f),
+                shared=None if p.shared is None else DenseFFNParams(
+                    P(f, "model"), P(f, "model"), P("model", f)
+                ),
+            )
+        return DenseFFNParams(P(f, "model"), P(f, "model"), P("model", f))
+
+    layers = tuple(
+        LayerParams(attn=attn_spec(lp.attn), ffn=ffn_spec(lp.ffn), norm1=P(None), norm2=P(None))
+        for lp in params.layers
+    )
+    return LMParams(
+        embed=P("model", None),
+        layers=layers,
+        final_norm=P(None),
+        lm_head=None if params.lm_head is None else P(None, "model"),
+    )
+
+
+def stacked_lm_param_specs(
+    stacked_params, mesh, fsdp: bool = True, kv_shard: bool = True
+):
+    """Specs for models.stacked.StackedLMParams: per-position layer specs with a
+    leading None (the n_groups scan axis); embed/head as in lm_param_specs.
+    FSDP spans (data, pod) on multi-pod meshes (see lm_param_specs)."""
+    from repro.models.stacked import StackedLMParams
+
+    f = (("data", "pod") if "pod" in mesh.axis_names else "data") if fsdp else None
+    kv = "model" if kv_shard else None
+
+    def layer_spec(lp: LayerParams, prepend) -> LayerParams:
+        a = lp.attn
+        attn_s = AttnParams(
+            wq=prepend(P(f, "model")),
+            wk=prepend(P(f, kv)),
+            wv=prepend(P(f, kv)),
+            wo=prepend(P("model", f)),
+            q_gamma=None if a.q_gamma is None else prepend(P(None)),
+            k_gamma=None if a.k_gamma is None else prepend(P(None)),
+        )
+        if isinstance(lp.ffn, MoEParams):
+            # EP over model x TP over the expert hidden dim (NOT FSDP over d_model):
+            # FSDP would re-all-gather ~48GB of expert weights per microbatch; TP on
+            # d_ff_expert keeps weights resident-sharded and exchanges only the small
+            # [E_loc, tokens, D] activation psum (llama4 train: 3.9TB -> see §Perf).
+            ffn_s = MoEParams(
+                router=prepend(P(None, None)),
+                w_gate=prepend(P("model", None, f)),
+                w_up=prepend(P("model", None, f)),
+                w_down=prepend(P("model", f, None)),
+                shared=None if lp.ffn.shared is None else DenseFFNParams(
+                    prepend(P(f, "model")), prepend(P(f, "model")), prepend(P("model", f))
+                ),
+            )
+        else:
+            ffn_s = DenseFFNParams(
+                prepend(P(f, "model")), prepend(P(f, "model")), prepend(P("model", f))
+            )
+        return LayerParams(attn=attn_s, ffn=ffn_s, norm1=prepend(P(None)), norm2=prepend(P(None)))
+
+    stk = lambda spec: None if spec is None else P(*((None,) + tuple(spec)))
+    flat = lambda spec: spec
+    return StackedLMParams(
+        embed=P("model", None),
+        groups=tuple(layer_spec(g, stk) for g in stacked_params.groups),
+        tail=tuple(layer_spec(t, flat) for t in stacked_params.tail),
+        final_norm=P(None),
+        lm_head=None if stacked_params.lm_head is None else P(None, "model"),
+    )
+
+
+def adafactor_state_specs(param_specs):
+    """Factored-moment specs derived from param specs: vr drops the last axis,
+    vc drops the second-to-last (matching repro/optim/adafactor.py shapes)."""
+    from repro.optim.adafactor import FactoredMoment
+
+    def mk(spec):
+        if spec is None:  # absent param (e.g. no qk-norm) -> absent moment
+            return None
+        parts = tuple(spec)
+        if len(parts) >= 2:
+            return FactoredMoment(P(*parts[:-1]), P(*(parts[:-2] + parts[-1:])))
+        return FactoredMoment(spec, P())
+
+    leaves, treedef = jax.tree.flatten(
+        param_specs, is_leaf=lambda x: isinstance(x, P) or x is None
+    )
+    return treedef.unflatten([mk(s) for s in leaves])
+
+
+def lm_batch_specs(mesh, seq_sharded: bool = False):
+    """tokens/labels [B, S]."""
+    b = _batch(mesh)
+    return P(b, None) if not seq_sharded else P(b, "model")
+
+
+def kv_cache_spec(mesh, batch: int, kv_heads: int, stacked: bool = False):
+    """Merged-layout cache [B, L, KV*hd] (+leading n_groups when stacked).
+
+    The merged head dim always divides `model` (KV*hd >= 1024), matching the natural
+    wk/wv column sharding. When the batch is too small to shard (long_500k batch=1)
+    the cache LENGTH shards over pod+data instead — sequence parallelism.
+    """
+    b = _batch(mesh)
+    bsz = mesh.shape["data"] * (mesh.shape["pod"] if "pod" in mesh.axis_names else 1)
+    spec = P(b, None, "model") if batch >= bsz else P(None, b, "model")
+    if stacked:
+        spec = P(*((None,) + tuple(spec)))
+    return spec
+
+
+def decode_state_specs(state, mesh, batch: int, kv_heads: int, stacked: bool = False):
+    from repro.models.attention import LayerKVCache
+
+    spec = kv_cache_spec(mesh, batch, kv_heads, stacked=stacked)
+    caches = tuple(LayerKVCache(spec, spec) for _ in state.caches)
+    if stacked:
+        from repro.models.stacked import StackedDecodeState
+
+        flat_spec = kv_cache_spec(mesh, batch, kv_heads, stacked=False)
+        tail = tuple(LayerKVCache(flat_spec, flat_spec) for _ in state.tail_caches)
+        return StackedDecodeState(caches=caches, tail_caches=tail, pos=P())
+    from repro.models.transformer import DecodeState
+
+    return DecodeState(caches=caches, pos=P())
+
+
+# ------------------------------------------------------------------ recsys
+def recsys_param_specs(params, mesh):
+    """Row-shard the stacked embedding table; replicate MLPs."""
+    from repro.models.recsys import EmbedTables
+
+    def spec(path, leaf):
+        return P()
+
+    specs = jax.tree.map(lambda _: P(), params)
+    # replace the table spec
+    def fix(p):
+        if isinstance(p, EmbedTables):
+            return EmbedTables(table=P("model", None), offsets=p.offsets)
+        return p
+
+    # params are NamedTuples containing EmbedTables as first field across our models
+    return jax.tree.map(
+        fix, specs, is_leaf=lambda x: isinstance(x, EmbedTables)
+    )
+
+
+def recsys_batch_spec(mesh, batch: int, candidates: bool = False):
+    b = _batch(mesh)
+    if candidates:
+        return P("model", None)  # candidate set sharded over model
+    return P(b, None)
+
+
+# ------------------------------------------------------------------ GNN
+def gnn_specs(mesh):
+    all_axes = tuple(mesh.axis_names)
+    return {
+        "node": P(),  # replicated node arrays
+        "edge": P(all_axes),  # edge-parallel over every axis
+        "batch_graphs": P(_batch(mesh)),
+    }
+
+
+# ------------------------------------------------------------------ retrieval index
+def index_specs(index, mesh):
+    """LSPIndex pytree specs: unit dims over `model`, vocab-major packed rows whole."""
+    from repro.index.layout import FlatInv, FwdDocs, LSPIndex, PackedBounds
+
+    def pb(x: PackedBounds) -> PackedBounds:
+        return PackedBounds(
+            packed=P(None, "model"), bits=x.bits, scale=x.scale, n=x.n, granule_words=x.granule_words
+        )
+
+    return LSPIndex(
+        b=index.b,
+        c=index.c,
+        n_docs=index.n_docs,
+        vocab=index.vocab,
+        n_blocks=index.n_blocks,
+        n_superblocks=index.n_superblocks,
+        sb_bounds=pb(index.sb_bounds),
+        blk_bounds=pb(index.blk_bounds),
+        sb_avg=None if index.sb_avg is None else pb(index.sb_avg),
+        docs_fwd=FwdDocs(
+            tids=P("model", None), ws=P("model", None), scale=index.docs_fwd.scale, t_max=index.docs_fwd.t_max
+        ),
+        docs_flat=None
+        if index.docs_flat is None
+        else FlatInv(
+            tids=P("model"),
+            local_dids=P("model"),
+            ws=P("model"),
+            block_ptr=P("model"),
+            max_block_nnz=index.docs_flat.max_block_nnz,
+            scale=index.docs_flat.scale,
+        ),
+        doc_remap=P("model"),
+    )

@@ -1,0 +1,34 @@
+"""Hierarchical distributed top-k (shard_map building block).
+
+Local top-k per shard -> all_gather of (value, global-id) pairs over the index axis ->
+final top-k. Collective volume is P * k * 8B per query — independent of corpus size,
+which is what makes index-sharded retrieval collective-light (see §Roofline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def distributed_topk(
+    scores: jnp.ndarray,  # [Q, N_local]
+    k: int,
+    axis_name: str,
+    local_offset: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (vals [Q, k], global_ids [Q, k]) across the sharded N dimension."""
+    n_local = scores.shape[-1]
+    k_local = min(k, n_local)
+    lv, li = jax.lax.top_k(scores, k_local)
+    if local_offset is None:
+        local_offset = jax.lax.axis_index(axis_name) * n_local
+    gi = li + local_offset
+    av = jax.lax.all_gather(lv, axis_name, axis=1, tiled=True)  # [Q, P*k]
+    ai = jax.lax.all_gather(gi, axis_name, axis=1, tiled=True)
+    vals, idx = jax.lax.top_k(av, k)
+    return vals, jnp.take_along_axis(ai, idx, axis=1)
+
+
+def pmax_scalar(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    return jax.lax.pmax(x, axis_name)

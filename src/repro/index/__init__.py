@@ -1,0 +1,2 @@
+from repro.index.layout import FlatInv, FwdDocs, LSPIndex, PackedBounds
+from repro.index.builder import build_index, IndexBuildConfig

@@ -1,0 +1,85 @@
+"""Similarity-based block formation (paper §3: "blocks are formed based on similarity,
+and each block uniformly contains b documents").
+
+Pipeline (the standard BMP/SP recipe, adapted to run fast in JAX):
+  1. random-project sparse docs to a small dense space (d_proj) — k-means over raw
+     30k-300k-dim sparse vectors is pointless; a JL projection preserves the cosine
+     geometry the clustering needs;
+  2. Lloyd k-means with K ~= n_docs / (b*c) (one cluster ~ one superblock's worth);
+  3. order documents by (cluster, distance-to-centroid) and chunk uniformly into
+     blocks of exactly b docs; c consecutive blocks form a superblock.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def project_docs(
+    doc_ptr: np.ndarray, tids: np.ndarray, ws: np.ndarray, vocab: int, d_proj: int, seed: int
+) -> np.ndarray:
+    """Sparse CSR docs -> L2-normalized dense [n_docs, d_proj] via random projection."""
+    rng = np.random.default_rng(seed)
+    proj = rng.standard_normal((vocab, d_proj), dtype=np.float32) / np.sqrt(d_proj)
+    n_docs = len(doc_ptr) - 1
+    out = np.zeros((n_docs, d_proj), np.float32)
+    # segment matmul: out[d] = sum_j ws[j] * proj[tids[j]] for j in doc d
+    contrib = ws[:, None] * proj[tids]
+    np.add.at(out, np.repeat(np.arange(n_docs), np.diff(doc_ptr)), contrib)
+    norms = np.linalg.norm(out, axis=1, keepdims=True)
+    return out / np.maximum(norms, 1e-9)
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 8, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Plain Lloyd iterations (jit'd). Returns (assignments [n], centroids [k, d])."""
+    key = jax.random.PRNGKey(seed)
+    xj = jnp.asarray(x)
+    init_idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    cent = xj[init_idx]
+
+    @jax.jit
+    def step(cent):
+        # [n, k] squared distances via |x|^2 - 2 x.c + |c|^2 (|x|^2 constant -> drop)
+        d = -2.0 * xj @ cent.T + jnp.sum(cent * cent, axis=1)[None, :]
+        assign = jnp.argmin(d, axis=1)
+        one_hot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+        counts = one_hot.sum(0)
+        sums = one_hot.T @ xj
+        new_cent = sums / jnp.maximum(counts, 1.0)[:, None]
+        # keep empty clusters where they were
+        new_cent = jnp.where(counts[:, None] > 0, new_cent, cent)
+        return new_cent, assign
+
+    assign = None
+    for _ in range(iters):
+        cent, assign = step(cent)
+    return np.asarray(assign), np.asarray(cent)
+
+
+def block_order(
+    doc_ptr: np.ndarray,
+    tids: np.ndarray,
+    ws: np.ndarray,
+    vocab: int,
+    b: int,
+    c: int,
+    d_proj: int = 64,
+    kmeans_iters: int = 8,
+    seed: int = 0,
+) -> np.ndarray:
+    """Return doc_remap: position -> original doc id, similarity-ordered, padded to a
+    multiple of b*c with repeats of the last doc masked out downstream by remap >= n."""
+    n_docs = len(doc_ptr) - 1
+    x = project_docs(doc_ptr, tids, ws, vocab, d_proj, seed)
+    k = max(1, int(np.ceil(n_docs / (b * c))))
+    if n_docs <= b:  # degenerate tiny corpus
+        order = np.arange(n_docs)
+    else:
+        assign, cent = kmeans(x, k, iters=kmeans_iters, seed=seed)
+        dist = np.einsum("nd,nd->n", x - cent[assign], x - cent[assign])
+        order = np.lexsort((dist, assign))
+    pad = (-n_docs) % (b * c)
+    # pad positions point past n_docs (sentinel empty docs)
+    return np.concatenate([order, np.full(pad, n_docs, np.int64)]).astype(np.int32)

@@ -1,0 +1,115 @@
+"""Index data structures (device-resident pytrees) + size accounting (paper Table 7).
+
+Device layouts implemented for scoring: ``FwdDocs`` (Seismic-style forward index) and
+``FlatInv`` (paper's flat compact inverted index). The Rust-artifact layouts BMP-Inv and
+Compact-Inv exist here only as byte-accounting formulas for the Table 7 reproduction —
+their nested-vector overheads are pointer bookkeeping that has no JAX equivalent.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PackedBounds(NamedTuple):
+    """Term-major packed block/superblock max (or avg) term weights.
+
+    packed: uint32 [V, n_words] — row t = term t's bounds over all N units, bit-packed
+    (see repro.index.pack). For the block-level matrix, n units are ordered so that
+    superblock s owns the contiguous range [s*c, (s+1)*c) — the gather granule of the
+    boundsum_gather kernel (the selectors-first random-access property).
+    """
+
+    packed: jnp.ndarray
+    bits: int
+    scale: object  # float (global) or float32 [V] (per-term row scales)
+    n: int  # logical number of units (n_blocks or n_superblocks)
+    granule_words: int  # lane-strided packing granule (see repro.index.pack)
+
+    @property
+    def vocab(self) -> int:
+        return self.packed.shape[0]
+
+
+class FwdDocs(NamedTuple):
+    """Forward index: per-document padded (term-id, weight) lists, block-ordered.
+
+    Document i lives in block i // b. tids padded with ``vocab`` (sentinel row of the
+    dense query is zero). Weights are 8-bit quantized (paper follows BMP here).
+    """
+
+    tids: jnp.ndarray  # int32 [n_docs_padded, t_max]
+    ws: jnp.ndarray  # uint8  [n_docs_padded, t_max]
+    scale: float
+    t_max: int
+
+
+class FlatInv(NamedTuple):
+    """Flat compact inverted index (paper Fig. 5a): one consolidated postings array
+    (term-id, local-doc-id, weight) sorted by (block, term), plus block offsets."""
+
+    tids: jnp.ndarray  # int32 [nnz_padded]
+    local_dids: jnp.ndarray  # int32 [nnz_padded]  (doc position within block, < b)
+    ws: jnp.ndarray  # uint8 [nnz_padded]
+    block_ptr: jnp.ndarray  # int32 [n_blocks + 1] offsets into postings
+    max_block_nnz: int  # max postings of any block (static gather budget)
+    scale: float
+
+
+class LSPIndex(NamedTuple):
+    """The built two-level index (a pytree; shardable over the `model` mesh axis)."""
+
+    b: int  # docs per block
+    c: int  # blocks per superblock
+    n_docs: int
+    vocab: int
+    n_blocks: int
+    n_superblocks: int
+    sb_bounds: PackedBounds  # superblock max weights
+    blk_bounds: PackedBounds  # block max weights (superblock-contiguous order)
+    sb_avg: Optional[PackedBounds]  # superblock avg-of-block-max (SP / LSP2 only)
+    docs_fwd: FwdDocs
+    docs_flat: Optional[FlatInv]
+    doc_remap: jnp.ndarray  # int32 [n_docs_padded]: position -> original doc id
+
+
+# ----------------------------------------------------------------- size accounting
+# Byte formulas mirroring paper §4.3 / Table 7. `nnz` is total postings count.
+
+
+def bmp_inv_bytes(nnz: int, n_blocks: int, vocab_per_block: np.ndarray) -> int:
+    """Rust nested Vec<Vec<(u32,u8)>>: 24B header per vector + postings (5B each)."""
+    n_vecs = int(vocab_per_block.sum()) + n_blocks  # per (block,term) vec + outer vecs
+    return 24 * n_vecs + 5 * nnz
+
+
+def compact_inv_bytes(nnz: int, n_blocks: int, vocab_per_block: np.ndarray) -> int:
+    """b<=256 -> 1B lengths; 65k terms -> 2B term ids; no per-vec capacity/ptr."""
+    n_lists = int(vocab_per_block.sum())
+    return n_lists * (2 + 1) + 2 * nnz + 8 * n_blocks  # tid+len per list, (did,w) 2B
+
+
+def flat_inv_bytes(nnz_padded: int, n_blocks: int) -> int:
+    # int32 tid (we budget 2B logical term ids at 65k vocab) + 1B local did + 1B w
+    return 4 * nnz_padded + 4 * (n_blocks + 1)
+
+
+def fwd_bytes(n_docs_padded: int, t_max: int) -> int:
+    return n_docs_padded * t_max * (4 + 1)  # int32 tid + u8 weight
+
+
+def dense_bounds_bytes(vocab: int, n_units: int, bits: int = 8) -> int:
+    """BMP-Dense: uncompressed dense max-weight matrix."""
+    return vocab * n_units * bits // 8
+
+
+def sparse_bounds_bytes(nnz_block_terms: int) -> int:
+    """BMP-Sparse: (block_id u32, weight u8) per nonzero block-term."""
+    return 5 * nnz_block_terms
+
+
+def packed_bounds_bytes(pb: PackedBounds) -> int:
+    return int(np.prod(pb.packed.shape)) * 4

@@ -1,0 +1,101 @@
+"""Bit-packing for block/superblock maximum term weights.
+
+TPU adaptation of the paper's SIMDBP-256* (§4.3). The paper packs groups of 256
+integers at a variable per-group bit width, with all selectors hoisted to the front of
+each term's list so that any group can be decoded at a random position. On TPU,
+variable-width decode buys nothing (no per-lane shifts at variable widths; VMEM loads
+are tile-granular), so we keep the two properties that matter and drop the one that
+does not:
+
+  kept   * term-major layout: one packed row of N block (or superblock) bounds per
+           term, so a query gathers exactly its n_q rows;
+  kept   * O(1) random access at group granularity: fixed width => group g of term t
+           lives at word offset ``t * words_per_row + g * words_per_group``; this is
+           the role the hoisted selectors played;
+  dropped* variable per-group width: we use fixed 4-bit (or 8-bit) lanes, which is the
+           paper's own recommended operating point (4-bit quant) anyway.
+
+Packing is little-endian within a 32-bit word: value j of word w occupies bits
+[j*bits, (j+1)*bits).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def vals_per_word(bits: int) -> int:
+    assert 32 % bits == 0, bits
+    return 32 // bits
+
+
+# Kernel tile width in words (lane count of the unpack VREG tile). Rows packed with
+# granule_words == SEG_WORDS unpack one grid step into a full (vpw, 128) tile.
+SEG_WORDS = 128
+
+
+def pack_rows_strided(q: np.ndarray, bits: int, granule_words: int) -> np.ndarray:
+    """Lane-strided segment packing: TPU-native SIMDBP layout.
+
+    Rows are split into segments of ``granule_words * vpw`` logical values; value v of
+    segment s is stored at word ``s*G + (v % G)``, bit-lane ``v // G``. Unpacking a
+    segment with vectorized shifts then yields a (vpw, G) tile whose C-order flatten is
+    the contiguous run of logical values — i.e. the unpack is pure VREG work with no
+    in-kernel transpose/reshape shuffles. This plays the role SIMDBP-256*'s
+    hoisted-selector group layout plays for AVX2 (random access at group granularity,
+    decode order aligned with the SIMD lanes).
+
+    granule_words choices used by the index:
+      * superblock matrix: SEG_WORDS (kernel tiles a row by 128-word chunks);
+      * block matrix: cw = c*bits/32, so one granule == one superblock's c blocks ==
+        the random-access unit of the boundsum_gather kernel.
+    """
+    assert q.ndim == 2
+    vpw = vals_per_word(bits)
+    g = granule_words
+    seg_vals = g * vpw
+    r, n = q.shape
+    n_pad = (-n) % seg_vals
+    if n_pad:
+        q = np.concatenate([q, np.zeros((r, n_pad), q.dtype)], axis=1)
+    s = q.shape[1] // seg_vals
+    q4 = q.astype(np.uint32).reshape(r, s, vpw, g)
+    shifts = (np.arange(vpw, dtype=np.uint32) * bits)[None, None, :, None]
+    words = (q4 << shifts).sum(axis=2, dtype=np.uint32)  # [r, s, g]
+    return words.reshape(r, s * g)
+
+
+def unpack_rows_strided(packed: np.ndarray, bits: int, granule_words: int, n: int) -> np.ndarray:
+    """Inverse of pack_rows_strided (numpy)."""
+    vpw = vals_per_word(bits)
+    g = granule_words
+    r, w = packed.shape
+    s = w // g
+    words = packed.reshape(r, s, 1, g)
+    shifts = (np.arange(vpw, dtype=np.uint32) * bits)[None, None, :, None]
+    mask = np.uint32((1 << bits) - 1)
+    vals = (words >> shifts) & mask  # [r, s, vpw, g]
+    return vals.reshape(r, s * vpw * g)[:, :n].astype(np.uint8 if bits <= 8 else np.uint16)
+
+
+def pack_rows(q: np.ndarray, bits: int) -> np.ndarray:
+    """Pack uint rows [R, N] -> uint32 [R, ceil(N/vpw)]. Pads N with zeros."""
+    assert q.ndim == 2
+    vpw = vals_per_word(bits)
+    r, n = q.shape
+    n_pad = (-n) % vpw
+    if n_pad:
+        q = np.concatenate([q, np.zeros((r, n_pad), q.dtype)], axis=1)
+    q = q.astype(np.uint32).reshape(r, -1, vpw)
+    shifts = (np.arange(vpw, dtype=np.uint32) * bits)[None, None, :]
+    return (q << shifts).sum(axis=2, dtype=np.uint32)
+
+
+def unpack_rows(packed: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """Inverse of pack_rows -> uint8/uint16 [R, n]."""
+    vpw = vals_per_word(bits)
+    shifts = (np.arange(vpw, dtype=np.uint32) * bits)[None, None, :]
+    mask = np.uint32((1 << bits) - 1)
+    vals = (packed[:, :, None] >> shifts) & mask
+    vals = vals.reshape(packed.shape[0], -1)[:, :n]
+    return vals.astype(np.uint8 if bits <= 8 else np.uint16)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  sbmax           SIMD BoundSum -> VPU unpack + weighted accumulate over packed
+                  superblock (or block) maximum term weights
+  boundsum_gather random-access block BoundSum for selected superblocks
+                  (the selectors-first random-access decode of SIMDBP-256*)
+  dequant_matmul  4-bit dequant GEMM (dense-embedding LSP scoring, MXU)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+ref.py (pure-jnp oracle). Validated on CPU with interpret=True.
+"""

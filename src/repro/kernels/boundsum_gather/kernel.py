@@ -1,0 +1,83 @@
+"""Random-access block BoundSum for selected superblocks (Pallas TPU).
+
+out[q, s, b] = sum_i ws[q, i] * unpack(packed3[tids[q, i], sel[q, s], :])[b]
+
+packed3 is the block-level max-weight matrix viewed [V, NS, cw]: superblock granules of
+cw = c*bits/32 words, the word-aligned random-access unit that the paper's
+selectors-first SIMDBP-256* layout provides on CPU. Each grid step DMAs exactly one
+(term row x superblock granule) — a small load by design: two-level pruning is *about*
+touching only the selected superblocks' block metadata. The DMA pipeline hides the
+latency across the (Q, S, nq) grid; Q and S are parallel dims.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tids_ref, ws_ref, sel_ref, packed_ref, out_ref, *, bits: int, cw: int):
+    q = pl.program_id(0)
+    i = pl.program_id(2)
+    vpw = 32 // bits
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = ws_ref[q, i]
+
+    @pl.when(w != 0.0)
+    def _acc():
+        gran = packed_ref[0, 0, :]  # [cw] uint32
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (vpw, cw), 0) * bits
+        mask = jnp.uint32((1 << bits) - 1)
+        vals = (gran[None, :] >> shifts) & mask  # [vpw, cw] -> value order j*cw + w'
+        out_ref[0, 0] += w * vals.astype(jnp.float32)
+
+
+def boundsum_gather_pallas(
+    packed: jnp.ndarray,  # uint32 [V, NS * cw] block-level matrix, granule cw
+    c: int,
+    bits: int,
+    tids: jnp.ndarray,  # int32 [Q, nq] pre-clamped
+    ws: jnp.ndarray,  # float32 [Q, nq]
+    sel_sb: jnp.ndarray,  # int32 [Q, S] selected superblock ids
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns float32 [Q, S, c] unscaled block bound sums."""
+    cw = c * bits // 32
+    vpw = 32 // bits
+    v = packed.shape[0]
+    packed3 = packed.reshape(v, -1, cw)
+    q, nq = tids.shape
+    s = sel_sb.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, cw=cw),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(q, s, nq),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, cw),
+                    lambda qi, si, i, tids_ref, ws_ref, sel_ref: (
+                        tids_ref[qi, i],
+                        sel_ref[qi, si],
+                        0,
+                    ),
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, 1, vpw, cw), lambda qi, si, i, *_: (qi, si, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((q, s, vpw, cw), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(tids, ws, sel_sb, packed3)
+    return out.reshape(q, s, vpw * cw)

@@ -1,0 +1,31 @@
+"""Jit'd wrapper for the boundsum_gather kernel over a PackedBounds block matrix."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.layout import PackedBounds
+from repro.kernels.boundsum_gather.kernel import boundsum_gather_pallas
+
+
+@partial(jax.jit, static_argnames=("c", "bits", "interpret"))
+def _call(packed, c, bits, scale, tids, ws, sel_sb, interpret):
+    tids = jnp.clip(tids, 0, packed.shape[0] - 1).astype(jnp.int32)
+    raw = boundsum_gather_pallas(
+        packed, c, bits, tids, ws.astype(jnp.float32), sel_sb.astype(jnp.int32), interpret
+    )
+    return raw * scale
+
+
+def boundsum_gather_op(
+    pb: PackedBounds, c: int, tids, ws, sel_sb, interpret: bool = False
+) -> jnp.ndarray:
+    from repro.core.bounds import fold_scale
+
+    cw = c * pb.bits // 32
+    assert pb.granule_words == cw, "block matrix must be packed at superblock granule"
+    ws, scale = fold_scale(pb, tids, ws)
+    return _call(pb.packed, c, pb.bits, jnp.float32(scale), tids, ws, sel_sb, interpret)

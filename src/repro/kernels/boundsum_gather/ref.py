@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for boundsum_gather (shared reference math, unscaled contract)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bounds import unpack_strided
+
+
+def boundsum_gather_ref(packed, c: int, bits: int, tids, ws, sel_sb) -> jnp.ndarray:
+    cw = c * bits // 32
+    v = packed.shape[0]
+    packed3 = packed.reshape(v, -1, cw)
+    sel = packed3[jnp.clip(tids, 0, v - 1)[:, :, None], sel_sb[:, None, :]]
+    vals = unpack_strided(sel, bits, cw)  # [Q, nq, S, c]
+    return jnp.einsum("qi,qisc->qsc", ws, vals.astype(jnp.float32))

@@ -1,0 +1,16 @@
+"""Jit'd wrapper for 4-bit dequant GEMM with scale + logical-N slicing."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dequant_matmul.kernel import dequant_matmul_pallas
+
+
+@partial(jax.jit, static_argnames=("bits", "n", "scale", "interpret"))
+def dequant_matmul_op(x, packed_w, bits: int, n: int, scale: float, interpret: bool = False):
+    raw = dequant_matmul_pallas(x, packed_w, bits, interpret=interpret)
+    return raw[:, :n] * scale

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for dequant_matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bounds import unpack_strided
+
+
+def dequant_matmul_ref(x: jnp.ndarray, packed_w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    from repro.kernels.dequant_matmul.kernel import TW
+
+    w = unpack_strided(packed_w, bits, TW).astype(x.dtype)  # [K, N_pad]
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

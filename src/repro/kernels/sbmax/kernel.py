@@ -1,0 +1,82 @@
+"""SBMax / BoundSum Pallas TPU kernel (paper Eq. 1; the SIMD BoundSum hot spot).
+
+out[q, n] = sum_i ws[q, i] * unpack(packed[tids[q, i], :])[n]
+
+The packed matrix uses the lane-strided segment layout (repro.index.pack): one grid
+step loads a (1, TW) word tile of one term's row and unpacks it into a full
+(vpw, TW=128) VREG tile with a vectorized shift — value order matches the output tile
+with no transpose. Query term rows are gathered through scalar-prefetched term ids
+(PrefetchScalarGridSpec index_map), the TPU analogue of the random-access row fetch
+the paper's hoisted selectors enable on CPU.
+
+Grid: (Q, n_seg, nq) — nq innermost and marked "arbitrary" so consecutive steps
+accumulate into the same output window (standard reduction pattern); Q and segments
+are parallel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TW = 128  # word-tile width == pack.SEG_WORDS == lane count
+
+
+def _kernel(tids_ref, ws_ref, packed_ref, out_ref, *, bits: int):
+    i = pl.program_id(2)  # query-term index (reduction dim)
+    q = pl.program_id(0)
+    vpw = 32 // bits
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = ws_ref[q, i]
+
+    @pl.when(w != 0.0)
+    def _acc():
+        row = packed_ref[0, :]  # [TW] uint32
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (vpw, TW), 0) * bits
+        mask = jnp.uint32((1 << bits) - 1)
+        vals = (row[None, :] >> shifts) & mask  # [vpw, TW]
+        out_ref[0, 0] += w * vals.astype(jnp.float32)
+
+
+def sbmax_pallas(
+    packed: jnp.ndarray,  # uint32 [V, W]  (W % TW == 0)
+    tids: jnp.ndarray,  # int32 [Q, nq]  (pre-clamped to < V)
+    ws: jnp.ndarray,  # float32 [Q, nq] (0 for padded terms)
+    bits: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns float32 [Q, W * vpw] of *unscaled* quantized bound sums."""
+    v, w_words = packed.shape
+    assert w_words % TW == 0, f"packed width {w_words} not a multiple of {TW}"
+    n_seg = w_words // TW
+    q, nq = tids.shape
+    vpw = 32 // bits
+
+    grid = (q, n_seg, nq)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, TW), lambda qi, s, i, tids_ref, ws_ref: (tids_ref[qi, i], s)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, vpw, TW), lambda qi, s, i, *_: (qi, s, 0, 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((q, n_seg, vpw, TW), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(tids, ws, packed)
+    return out.reshape(q, n_seg * vpw * TW)

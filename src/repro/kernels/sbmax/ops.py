@@ -1,0 +1,25 @@
+"""Jit'd wrapper: PackedBounds -> SBMax scores via the Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.layout import PackedBounds
+from repro.kernels.sbmax.kernel import sbmax_pallas
+
+
+@partial(jax.jit, static_argnames=("bits", "n", "interpret"))
+def _call(packed, tids, ws, scale, bits: int, n: int, interpret: bool):
+    tids = jnp.clip(tids, 0, packed.shape[0] - 1).astype(jnp.int32)
+    raw = sbmax_pallas(packed, tids, ws.astype(jnp.float32), bits, interpret=interpret)
+    return raw[:, :n] * scale
+
+
+def sbmax_op(pb: PackedBounds, tids: jnp.ndarray, ws: jnp.ndarray, interpret: bool = False) -> jnp.ndarray:
+    from repro.core.bounds import fold_scale
+
+    ws, scale = fold_scale(pb, tids, ws)
+    return _call(pb.packed, tids, ws, jnp.float32(scale), pb.bits, pb.n, interpret)

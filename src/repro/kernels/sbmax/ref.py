@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the sbmax kernel (delegates to the shared reference math)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bounds import unpack_strided
+
+
+def sbmax_ref(packed: jnp.ndarray, tids: jnp.ndarray, ws: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """float32 [Q, W*vpw] unscaled bound sums; same contract as sbmax_pallas."""
+    from repro.kernels.sbmax.kernel import TW
+
+    rows = packed[jnp.clip(tids, 0, packed.shape[0] - 1)]  # [Q, nq, W]
+    vals = unpack_strided(rows, bits, TW)  # [Q, nq, N_pad]
+    return jnp.einsum("qi,qin->qn", ws, vals.astype(jnp.float32))

@@ -1,0 +1,158 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (the XLA_FLAGS line above runs before any other
+import, including jax — device count locks on first jax init).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multipod # 2x16x16 mesh
+
+Artifacts (memory analysis, cost analysis, collective bytes) are written to
+results/dryrun/<mesh>/<arch>__<shape>.json for the roofline stage.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import all_arch_names, get_arch  # noqa: E402
+from repro.launch.hlo_analysis import collective_bytes, fusion_stats  # noqa: E402
+from repro.launch.hlo_flops import analyze as hlo_analyze  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_cell  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
+    arch = get_arch(arch_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    record = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": mesh.size,
+        "status": "unknown",
+    }
+    if shape_name in arch.skip_shapes:
+        record.update(status="skipped", reason=arch.skip_shapes[shape_name], total_s=0.0)
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch_name}__{shape_name}.json"), "w") as f:
+            json.dump(record, f, indent=2, default=str)
+        return record
+
+    try:
+        with mesh:
+            cell = build_cell(arch, shape_name, mesh)
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate,
+            )
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            fus = fusion_stats(hlo)
+            adj = hlo_analyze(hlo)  # trip-count-adjusted (scan bodies x trips)
+
+        record.update(
+            status="ok",
+            kind=cell.kind,
+            note=cell.note,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            cost={
+                "flops": cost.get("flops") if cost else None,
+                "bytes_accessed": cost.get("bytes accessed") if cost else None,
+                "transcendentals": cost.get("transcendentals") if cost else None,
+            },
+            cost_adjusted={  # per-device, while-loop bodies multiplied by trip count
+                "flops": adj["flops"],
+                "bytes_accessed": adj["bytes"],
+                "bytes_major": adj["bytes_major"],  # dot/gather/scatter/reduce/colls only
+                "collective_bytes": adj["collectives"],
+            },
+            collectives=coll,
+            hlo_stats=fus,
+        )
+        print(compiled.memory_analysis())
+        ca = {k: v for k, v in (cost or {}).items() if k in ("flops", "bytes accessed")}
+        print(f"cost_analysis: {ca}")
+        print(f"collective bytes: {coll}")
+    except Exception as e:  # noqa: BLE001
+        record.update(status="failed", error=f"{type(e).__name__}: {e}", traceback=traceback.format_exc()[-2000:])
+    finally:
+        record["total_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch_name}__{shape_name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=str)
+    return record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", type=str, default=None)
+    p.add_argument("--shape", type=str, default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multipod", action="store_true")
+    p.add_argument("--skip-done", action="store_true", help="skip cells with an ok artifact")
+    p.add_argument("--out", type=str, default=None)
+    args = p.parse_args()
+
+    mesh_name = "2x16x16" if args.multipod else "16x16"
+    out_dir = args.out or os.path.abspath(os.path.join(RESULTS_DIR, mesh_name))
+
+    cells = []
+    if args.all:
+        for name in all_arch_names():
+            arch = get_arch(name)
+            for shape_name in arch.shapes:
+                cells.append((name, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_fail = n_skip = 0
+    for arch_name, shape_name in cells:
+        path = os.path.join(out_dir, f"{arch_name}__{shape_name}.json")
+        if args.skip_done and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {arch_name} x {shape_name} x {mesh_name}: cached, skipping")
+                    continue
+        print(f"\n=== {arch_name} x {shape_name} x {mesh_name} ===", flush=True)
+        rec = run_cell(arch_name, shape_name, args.multipod, out_dir)
+        print(f"[dryrun] status={rec['status']} t={rec['total_s']}s " + rec.get("error", ""))
+        n_ok += rec["status"] == "ok"
+        n_fail += rec["status"] == "failed"
+        n_skip += rec["status"] == "skipped"
+    print(f"\n[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped (see {out_dir})")
+
+
+if __name__ == "__main__":
+    main()

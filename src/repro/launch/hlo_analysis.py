@@ -1,0 +1,77 @@
+"""Extract collective-traffic and compute stats from compiled HLO text.
+
+cost_analysis() has no collective numbers — we parse the optimized HLO module and sum
+operand bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (per §Roofline instructions).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-reduce.5 = f32[16,128]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^=]*?\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+# tuple-shaped collectives: = (f32[..], f32[..]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: total_output_bytes, ..., 'total': sum, 'count': n_ops}."""
+    out: dict = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _TUPLE_RE.search(line)
+        if m:
+            kind = m.group(2)
+            for sm in _SHAPE_RE.finditer(m.group(1)):
+                out[kind] += _shape_bytes(sm.group(1), sm.group(2))
+            count += 1
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            out[m.group(3)] += _shape_bytes(m.group(1), m.group(2))
+            count += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES if k in out)
+    out["count"] = count
+    return dict(out)
+
+
+def fusion_stats(hlo_text: str) -> dict:
+    """Cheap structure counters used by the §Perf iteration log."""
+    return {
+        "n_fusions": hlo_text.count(" fusion("),
+        "n_while": hlo_text.count(" while("),
+        "n_allgather": hlo_text.count("all-gather("),
+        "n_allreduce": hlo_text.count("all-reduce("),
+        "n_reducescatter": hlo_text.count("reduce-scatter("),
+        "n_alltoall": hlo_text.count("all-to-all("),
+        "n_cpermute": hlo_text.count("collective-permute("),
+    }

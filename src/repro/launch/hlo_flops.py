@@ -1,0 +1,189 @@
+"""Trip-count-aware FLOP/byte accounting from optimized HLO text.
+
+XLA's cost_analysis() counts a while-loop body ONCE; our production models scan over
+layer groups / microbatches / KV blocks, so flat numbers undercount by the trip
+counts. This analyzer parses the HLO module text per computation (with a symbol
+table for operand shapes), builds the call graph (while bodies / fusions / calls),
+reads exact trip counts from the `known_trip_count` backend_config XLA attaches to
+while ops, and multiplies through:
+
+  flops       2*prod(out)*contraction for dot ops (+conv estimate), x trips
+  bytes       output+operand bytes per top-level op (fusion counts once), x trips
+  collectives output bytes per collective op, x trips (feeds the collective term)
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DT = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_DEF = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_OPCODE = re.compile(r"^(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z0-9\-]+)\(")
+_ARGS = re.compile(r"\(([^)]*)\)")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLED = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w\.\-]+)")
+_TRIP = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast", "iota", "copy", "after-all"}
+# ops whose operands/outputs genuinely hit HBM on TPU (elementwise chains fuse into
+# them); bytes_major below is the roofline memory-term proxy
+_MAJOR = {
+    "dot", "convolution", "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+    "reduce", "reduce-window", "sort", "cholesky", "triangular-solve", "fft",
+} | set(_COLLECTIVES)
+
+
+def _prod(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_prod(dims) * _DT.get(dt, 4) for dt, dims in _SHAPE.findall(text))
+
+
+@dataclass
+class Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    bytes_major: float = 0.0
+    coll: dict = field(default_factory=dict)
+    calls: list = field(default_factory=list)  # (callee, trip_multiplier)
+
+
+def _parse(hlo: str) -> tuple[dict[str, Comp], str]:
+    comps: dict[str, Comp] = {}
+    entry_name = ""
+    cur: Comp | None = None
+    symtab: dict[str, str] = {}  # %name -> shape text (e.g. "f32[128,128]")
+
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            cur = Comp(hdr.group(2))
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry_name = cur.name
+            symtab = {}
+            continue
+        if cur is None or not line or line.startswith("}"):
+            continue
+        d = _DEF.match(line)
+        if not d:
+            continue
+        name, rhs = d.group(1), d.group(2)
+        # record the def's (first) shape for operand lookups
+        sh = _SHAPE.search(rhs)
+        if sh:
+            symtab[name] = rhs[: rhs.find(")") + 1]
+        opm = _OPCODE.match(rhs)
+        opcode = opm.group(1) if opm else ""
+
+        # strip metadata/backend_config before arg parsing (they contain parens)
+        core = rhs.split(", metadata=")[0]
+        args_m = _ARGS.search(core[core.find(opcode) if opcode else 0 :])
+        arg_names = _OPERAND.findall(args_m.group(1)) if args_m else []
+
+        if opcode == "dot":
+            out = _SHAPE.search(rhs)
+            lhs_c = _LHS_C.search(rhs)
+            if out and lhs_c and arg_names:
+                lhs_shape = _SHAPE.search(symtab.get(arg_names[0], ""))
+                if lhs_shape:
+                    lhs_dims = [int(x) for x in lhs_shape.group(2).split(",") if x]
+                    contr = 1
+                    for ci in (int(c) for c in lhs_c.group(1).split(",") if c):
+                        if ci < len(lhs_dims):
+                            contr *= lhs_dims[ci]
+                    cur.flops += 2.0 * _prod(out.group(2)) * contr
+        elif opcode == "convolution":
+            out = _SHAPE.search(rhs)
+            if out and len(arg_names) >= 2:
+                ker = _SHAPE.search(symtab.get(arg_names[1], ""))
+                if ker:
+                    # flops ~= 2 * out_elems * kernel_elems / out_features
+                    kdims = [int(x) for x in ker.group(2).split(",") if x]
+                    odims = [int(x) for x in out.group(2).split(",") if x]
+                    ofeat = odims[-1] if odims else 1
+                    cur.flops += 2.0 * _prod(out.group(2)) * (_prod(ker.group(2)) / max(ofeat, 1))
+
+        if opcode in _COLLECTIVES:
+            out_b = _shapes_bytes(rhs.split(opcode)[0])
+            cur.coll[opcode] = cur.coll.get(opcode, 0) + out_b
+
+        if opcode and opcode not in _SKIP_BYTES:
+            out_b = _shapes_bytes(rhs.split(opcode)[0])
+            opr_b = sum(_shapes_bytes(symtab.get(a, "")) for a in arg_names)
+            cur.bytes += out_b + opr_b
+            if opcode in _MAJOR:
+                cur.bytes_major += out_b + opr_b
+            elif opcode == "fusion" and any(
+                k in rhs for k in ("kOutput", "kInput", "scatter", "gather")
+            ):
+                cur.bytes_major += out_b + opr_b
+
+        if opcode == "while":
+            trip = _TRIP.search(rhs)
+            mult = int(trip.group(1)) if trip else 1
+            body = None
+            for m in re.finditer(r"body=%?([\w\.\-]+)", rhs):
+                body = m.group(1)
+            cond = None
+            for m in re.finditer(r"condition=%?([\w\.\-]+)", rhs):
+                cond = m.group(1)
+            if body:
+                cur.calls.append((body, mult))
+            if cond:
+                cur.calls.append((cond, mult))
+        else:
+            for callee in _CALLED.findall(rhs):
+                cur.calls.append((callee, 1))
+
+    return comps, entry_name
+
+
+def analyze(hlo: str) -> dict:
+    comps, entry = _parse(hlo)
+    if not comps:
+        return {"flops": 0, "bytes": 0, "bytes_major": 0, "collectives": {"total": 0}}
+    if not entry:
+        called = {c for comp in comps.values() for c, _ in comp.calls}
+        cands = [n for n in comps if n not in called]
+        entry = cands[0] if cands else next(iter(comps))
+
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, stack=()) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, 0.0, {})
+        c = comps[name]
+        fl, by, bm, coll = c.flops, c.bytes, c.bytes_major, dict(c.coll)
+        for callee, mult in c.calls:
+            cf, cb, cm, cc = total(callee, stack + (name,))
+            fl += cf * mult
+            by += cb * mult
+            bm += cm * mult
+            for k, v in cc.items():
+                coll[k] = coll.get(k, 0) + v * mult
+        memo[name] = (fl, by, bm, coll)
+        return memo[name]
+
+    fl, by, bm, coll = total(entry)
+    coll["total"] = sum(coll.values())
+    return {"flops": fl, "bytes": by, "bytes_major": bm, "collectives": coll, "entry": entry}

@@ -1,0 +1,32 @@
+"""Production mesh construction. Import-safe: never touches jax device state at
+module import — only inside the function (dry-run sets XLA_FLAGS before any jax use).
+
+Target: TPU v5e, 256 chips/pod (16x16), 2 pods = 512 chips multi-pod.
+Axes: pod (DCN, slow), data (DP / batch), model (TP / EP / index shards).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1, data: int | None = None):
+    """Small mesh over whatever devices exist (CPU tests / local runs)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,75 @@
+"""Retrieval serving launcher: build (or load) an LSP index over a corpus and serve
+batched queries with latency percentiles.
+
+  PYTHONPATH=src python -m repro.launch.serve --n-docs 16384 --requests 128
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      PYTHONPATH=src python -m repro.launch.serve --sharded
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import RetrievalConfig, jit_retrieve
+from repro.core.query import QueryBatch
+from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
+from repro.index.builder import IndexBuildConfig, build_index
+from repro.serve.engine import RetrievalEngine
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--n-docs", type=int, default=16384)
+    p.add_argument("--vocab", type=int, default=2048)
+    p.add_argument("--b", type=int, default=8)
+    p.add_argument("--c", type=int, default=16)
+    p.add_argument("--k", type=int, default=10)
+    p.add_argument("--gamma", type=int, default=0, help="0 -> NS/8 (zero-shot scaled)")
+    p.add_argument("--variant", default="lsp0", choices=["lsp0", "lsp1", "lsp2", "sp", "bmp"])
+    p.add_argument("--requests", type=int, default=64)
+    p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--sharded", action="store_true")
+    args = p.parse_args()
+
+    ccfg = CorpusConfig(n_docs=args.n_docs, vocab=args.vocab, n_topics=32, seed=0)
+    corpus = make_corpus(ccfg)
+    idx = build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab,
+                      IndexBuildConfig(b=args.b, c=args.c))
+    gamma = args.gamma or max(16, idx.n_superblocks // 8)
+    cfg = RetrievalConfig(variant=args.variant, k=args.k, gamma=gamma, beta=0.33)
+    print(f"[serve] index NB={idx.n_blocks} NS={idx.n_superblocks}, {args.variant} γ={gamma}")
+
+    if args.sharded and len(jax.devices()) >= 4:
+        from repro.distributed.retrieval import make_mesh_retriever, shard_index
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(model=2, data=2)
+        run, _ = make_mesh_retriever(shard_index(idx, 2), cfg, mesh)
+        retriever = lambda qb: run(qb)
+        batch_q = 4
+        print(f"[serve] sharded over mesh {dict(mesh.shape)}")
+    else:
+        fn = jit_retrieve(idx, cfg)
+
+        def retriever(qb: QueryBatch):
+            res = fn(qb)
+            return res.doc_ids, res.scores
+
+        batch_q = args.max_batch
+
+    eng = RetrievalEngine(retriever, corpus.vocab, max_batch=batch_q, nq_max=64)
+    queries = make_queries(ccfg, corpus, args.requests)
+    futs = [eng.submit(t, w) for t, w in queries]
+    for f in futs:
+        f.result(timeout=600)
+    eng.shutdown()
+    s = eng.stats.summary()
+    print(f"[serve] {s['requests']} requests / {s['batches']} batches | "
+          f"mean {s['mean_ms']:.1f} ms p50 {s['p50_ms']:.1f} p99 {s['p99_ms']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 50 --reduced
+  PYTHONPATH=src python -m repro.launch.train --splade --steps 300   # sparse encoder
+
+Runs the real train step (remat + Adafactor/AdamW + checkpointing) on whatever devices
+exist: the reduced configs train on CPU; the full configs expect a TPU slice (the mesh
+comes from make_host_mesh / make_production_mesh). Checkpoint/restart: re-running the
+same command resumes from --ckpt-dir.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_names, get_arch
+from repro.data.pipeline import CounterPipeline, PipelineConfig, lm_synthetic_batch, splade_synthetic_batch
+from repro.models.sparse_encoder import SpladeBatch, init_encoder, splade_100m_config, splade_loss
+from repro.models.stacked import init_lm_stacked, lm_loss_stacked
+from repro.optim import AdamW, Adafactor
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=all_arch_names(), default=None)
+    p.add_argument("--splade", action="store_true", help="train the SPLADE-style sparse encoder")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--reduced", action="store_true", help="CPU-smoke dims (same code paths)")
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--ckpt-every", type=int, default=25)
+    args = p.parse_args()
+
+    if args.splade:
+        cfg = splade_100m_config()
+        if args.reduced:
+            from repro.configs.base import LMCfg
+
+            cfg = LMCfg(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                        vocab=1024, head_dim=16, tie_embeddings=True)
+
+        def loss_fn(params, b):
+            return splade_loss(params, cfg, SpladeBatch(b["q_tokens"], b["q_mask"], b["d_tokens"], b["d_mask"]))
+
+        init_fn = lambda: init_encoder(jax.random.PRNGKey(0), cfg)
+        batch_fn = splade_synthetic_batch(cfg.vocab, args.batch, 12, 24)
+        opt = AdamW(lr=3e-4, warmup_steps=10, total_steps=args.steps)
+    else:
+        assert args.arch, "--arch or --splade required"
+        arch = get_arch(args.arch)
+        assert arch.family == "lm", "this launcher trains LM archs; see dryrun for others"
+        cfg = (arch.reduced() if args.reduced else arch).lm
+
+        def loss_fn(params, b):
+            loss, metrics = lm_loss_stacked(params, cfg, b["tokens"], b["labels"], remat=True)
+            return loss, metrics
+
+        init_fn = lambda: init_lm_stacked(jax.random.PRNGKey(0), cfg)
+        batch_fn = lm_synthetic_batch(cfg.vocab, args.batch, args.seq)
+        opt = Adafactor(lr=1e-3)
+
+    trainer = Trainer(
+        loss_fn, opt,
+        TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                      compute_dtype=jnp.bfloat16 if not args.reduced else jnp.float32),
+        init_fn,
+    )
+    pipe = CounterPipeline(PipelineConfig(global_batch=args.batch), batch_fn)
+    state = trainer.init_or_restore()
+    state = trainer.run(state, pipe, args.steps, log_every=max(args.steps // 10, 1))
+    print(f"[train] finished at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,278 @@
+"""Attention: GQA + RoPE + qk-norm + {full | sliding-window | chunked-local} patterns,
+with a pure-JAX flash-style streaming softmax for long sequences and a KV-cache decode
+path (ring buffer for local layers).
+
+Layer patterns (driven by LMCfg.attn_pattern / local_ratio):
+  full            causal attention, RoPE
+  hybrid_swa      gemma3: `local_ratio` sliding-window layers per 1 global layer
+  hybrid_chunked  llama4 iRoPE: `local_ratio` chunked-local (RoPE) per 1 global (NoPE)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import module as nn
+from repro.configs.base import LMCfg
+
+NEG_INF = -1e30
+
+
+def layer_kind(cfg: LMCfg, layer: int) -> str:
+    """'full' | 'swa' | 'chunked' | 'nope_global' for the given layer index."""
+    if cfg.attn_pattern == "full":
+        return "full"
+    period = cfg.local_ratio + 1
+    is_global = (layer + 1) % period == 0
+    if cfg.attn_pattern == "hybrid_swa":
+        return "full" if is_global else "swa"
+    if cfg.attn_pattern == "hybrid_chunked":
+        return "nope_global" if is_global else "chunked"
+    raise ValueError(cfg.attn_pattern)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [B, S, H, hd]; positions [B, S] (or [S]) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]  # [B, S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ params
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray  # [D, H*hd]
+    wk: jnp.ndarray  # [D, KV*hd]
+    wv: jnp.ndarray  # [D, KV*hd]
+    wo: jnp.ndarray  # [H*hd, D]
+    q_gamma: Optional[jnp.ndarray]  # [hd] qk-norm gains
+    k_gamma: Optional[jnp.ndarray]
+
+
+def init_attn(key, cfg: LMCfg, dtype=jnp.float32) -> AttnParams:
+    hd = cfg.resolved_head_dim()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return AttnParams(
+        wq=nn.dense_init(k1, cfg.d_model, cfg.n_heads * hd, dtype),
+        wk=nn.dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        wv=nn.dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        wo=nn.dense_init(k4, cfg.n_heads * hd, cfg.d_model, dtype),
+        q_gamma=nn.ones((hd,), dtype) if cfg.qk_norm else None,
+        k_gamma=nn.ones((hd,), dtype) if cfg.qk_norm else None,
+    )
+
+
+# ------------------------------------------------------------------ masking
+def _block_mask(kind: str, q_pos, k_pos, window: int):
+    """bool [Tq, Tk] allowed-attention mask for absolute positions."""
+    m = q_pos[:, None] >= k_pos[None, :]  # causal
+    if kind == "swa":
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    elif kind == "chunked":
+        m &= (q_pos[:, None] // window) == (k_pos[None, :] // window)
+    return m
+
+
+# ------------------------------------------------------------------ flash attention (pure JAX)
+def flash_attention(
+    q: jnp.ndarray,  # [B, S, H, hd]
+    k: jnp.ndarray,  # [B, S, KV, hd]
+    v: jnp.ndarray,
+    kind: str,
+    window: int,
+    q_block: int = 2048,
+    k_block: int = 1024,
+) -> jnp.ndarray:
+    """Streaming-softmax attention: O(S) memory, lax.scan over KV blocks per Q block.
+
+    Baseline iterates ALL KV blocks under the mask (the causal upper triangle is wasted
+    compute — a tracked §Perf hillclimb lever, see EXPERIMENTS.md).
+    """
+    b, s, h, hd = q.shape
+    g = k.shape[2]  # kv heads
+    rep = h // g
+    scale = hd**-0.5
+    q_block = min(q_block, s)
+    k_block = min(k_block, s)
+    nq, nk = s // q_block, s // k_block
+    assert s % q_block == 0 and s % k_block == 0
+
+    # GQA-native: K/V stay at their g kv-heads; the q-head group dim (rep) lives in
+    # the einsum instead of a materialized jnp.repeat (which copied K/V rep x — both
+    # HBM traffic and live-buffer cost at 32k sequence; see §Perf log).
+    kg = k.reshape(b, nk, k_block, g, hd)
+    vg = v.reshape(b, nk, k_block, g, hd)
+    qg = q.reshape(b, nq, q_block, g, rep, hd)
+
+    def per_qblock(qi, q_tile):  # q_tile [B, Tq, g, rep, hd]
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        # jax.checkpoint on the scan body: the backward pass recomputes the [Tq, Tk]
+        # score block instead of stacking nq*nk of them (which would materialize the
+        # full quadratic attention matrix — the bug this line fixed; see §Perf log).
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            ki, k_tile, v_tile = inp  # [B, Tk, g, hd]
+            k_pos = ki * k_block + jnp.arange(k_block)
+            mask = _block_mask(kind, q_pos, k_pos, window)  # [Tq, Tk]
+            scores = (
+                jnp.einsum("bqgrd,bkgd->bgrqk", q_tile, k_tile).astype(jnp.float32) * scale
+            )  # [B, g, rep, Tq, Tk]
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m_run, scores.max(-1))  # [B, g, rep, Tq]
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p, v_tile.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((b, g, rep, q_block), NEG_INF, jnp.float32),
+            jnp.zeros((b, g, rep, q_block), jnp.float32),
+            jnp.zeros((b, g, rep, q_block, hd), jnp.float32),
+        )
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kg.swapaxes(0, 1), vg.swapaxes(0, 1))
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]  # [B, g, rep, Tq, hd]
+        # cast INSIDE the map: the stacked per-q-block outputs otherwise live in f32
+        return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # [B, Tq, g, rep, hd]
+
+    outs = jax.lax.map(lambda args: per_qblock(*args), (jnp.arange(nq), qg.swapaxes(0, 1)))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+
+
+# ------------------------------------------------------------------ full layer fwd
+def attn_forward(
+    p: AttnParams, cfg: LMCfg, layer: int, x: jnp.ndarray, positions: jnp.ndarray
+) -> jnp.ndarray:
+    """Training/prefill attention. x [B, S, D] -> [B, S, D].
+
+    Sharding hints: heads shard over `model` when divisible; otherwise (llama4's 40
+    heads on a 16-way axis) the SEQUENCE shards and K/V replicate — without the hint
+    GSPMD factorizes the model axis across (heads, head_dim) and inserts a psum of
+    the score tensor inside every flash block (observed: 2.3TB/step collectives)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    kind = layer_kind(cfg, layer)
+    q = (x @ p.wq).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p.wk).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p.wv).reshape(b, s, cfg.n_kv_heads, hd)
+    nm = nn.ambient_axis_size("model")
+    if cfg.n_heads % max(nm, 1) == 0:
+        q = nn.maybe_shard(q, ("pod", "data"), None, "model", None)
+        if cfg.n_kv_heads % max(nm, 1) == 0:
+            k = nn.maybe_shard(k, ("pod", "data"), None, "model", None)
+            v = nn.maybe_shard(v, ("pod", "data"), None, "model", None)
+        else:
+            k = nn.maybe_shard(k, ("pod", "data"), None, None, None)
+            v = nn.maybe_shard(v, ("pod", "data"), None, None, None)
+    else:  # sequence-parallel attention, K/V replicated over model
+        q = nn.maybe_shard(q, ("pod", "data"), "model", None, None)
+        k = nn.maybe_shard(k, ("pod", "data"), None, None, None)
+        v = nn.maybe_shard(v, ("pod", "data"), None, None, None)
+    if cfg.qk_norm:
+        q = nn.rms_norm(q, p.q_gamma)
+        k = nn.rms_norm(k, p.k_gamma)
+    if kind != "nope_global":  # llama4 global layers use NoPE
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    mask_kind = "full" if kind == "nope_global" else kind
+    # block sizes: long sequences (prefill) want big q-blocks (fewer KV re-streams,
+    # §Perf P15); short-seq training wants small ones (smaller live score tiles)
+    qb_, kb_ = (2048, 1024) if s >= 8192 else (512, 512)
+    o = flash_attention(q, k, v, mask_kind, cfg.window, q_block=qb_, k_block=kb_)
+    return o.reshape(b, s, cfg.n_heads * hd) @ p.wo
+
+
+# ------------------------------------------------------------------ decode (KV cache)
+class LayerKVCache(NamedTuple):
+    """KV cache with MERGED head dims: [B, L, KV*hd].
+
+    The merged layout matches the natural column sharding of wk/wv (KV*hd cols over
+    `model`) and always divides the 16-way model axis even for 8-KV-head GQA archs —
+    the 4D [B, L, KV, hd] layout forces GSPMD into involuntary replication when
+    KV < model size (observed: +12GB/device on llama4 prefill)."""
+
+    k: jnp.ndarray  # [B, L, KV*hd]  (L = window for local layers, max_len for global)
+    v: jnp.ndarray
+
+
+def cache_len(cfg: LMCfg, layer: int, max_len: int) -> int:
+    kind = layer_kind(cfg, layer)
+    if kind in ("swa", "chunked") and cfg.window:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_layer_cache(cfg: LMCfg, layer: int, batch: int, max_len: int, dtype=jnp.bfloat16) -> LayerKVCache:
+    hd = cfg.resolved_head_dim()
+    ln = cache_len(cfg, layer, max_len)
+    shape = (batch, ln, cfg.n_kv_heads * hd)
+    return LayerKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attn_decode_step(
+    p: AttnParams,
+    cfg: LMCfg,
+    layer: int,
+    x: jnp.ndarray,  # [B, 1, D]
+    pos: jnp.ndarray,  # scalar int32: index of the new token
+    cache: LayerKVCache,
+) -> tuple[jnp.ndarray, LayerKVCache]:
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim()
+    kind = layer_kind(cfg, layer)
+    ln = cache.k.shape[1]
+
+    q = (x @ p.wq).reshape(b, 1, cfg.n_heads, hd)
+    k_new = (x @ p.wk).reshape(b, 1, cfg.n_kv_heads, hd)
+    v_new = (x @ p.wv).reshape(b, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = nn.rms_norm(q, p.q_gamma)
+        k_new = nn.rms_norm(k_new, p.k_gamma)
+    pos_b = jnp.full((b, 1), pos, jnp.int32)
+    if kind != "nope_global":
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos_b, cfg.rope_theta)
+
+    slot = pos % ln  # ring write for local layers; identity for full-length caches
+    k_flat = k_new.reshape(b, 1, cfg.n_kv_heads * hd).astype(cache.k.dtype)
+    v_flat = v_new.reshape(b, 1, cfg.n_kv_heads * hd).astype(cache.v.dtype)
+    k_c = jax.lax.dynamic_update_slice(cache.k, k_flat, (0, slot, 0))
+    v_c = jax.lax.dynamic_update_slice(cache.v, v_flat, (0, slot, 0))
+
+    # validity of cache slot j at decode position pos
+    j = jnp.arange(ln)
+    abs_pos = jnp.where(j <= slot, pos - slot + j, pos - slot - ln + j)  # ring -> absolute
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if kind == "swa":
+        valid &= pos - abs_pos < cfg.window
+    elif kind == "chunked":
+        valid &= (abs_pos // cfg.window) == (pos // cfg.window)
+
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k4 = k_c.reshape(b, ln, cfg.n_kv_heads, hd)
+    v4 = v_c.reshape(b, ln, cfg.n_kv_heads, hd)
+    kr = jnp.repeat(k4, rep, axis=2)
+    vr = jnp.repeat(v4, rep, axis=2)
+    scores = jnp.einsum("bqhd,bjhd->bhqj", q, kr.astype(q.dtype)).astype(jnp.float32) * hd**-0.5
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqj,bjhd->bqhd", probs.astype(q.dtype), vr.astype(q.dtype))
+    return o.reshape(b, 1, cfg.n_heads * hd) @ p.wo, LayerKVCache(k_c, v_c)

@@ -1,0 +1,115 @@
+"""FFN layers: dense SwiGLU and capacity-based top-k MoE (GShard-style dispatch).
+
+The MoE dispatch uses the standard fixed-capacity one-hot einsum formulation — static
+shapes, shards cleanly under pjit with experts on the `model` axis (EP) and tokens on
+`data`/`pod`. Tokens overflowing an expert's capacity are dropped (residual passes
+through), the industry-standard trade; capacity_factor controls the drop rate.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import module as nn
+from repro.configs.base import LMCfg, MoECfg
+
+
+class DenseFFNParams(NamedTuple):
+    w_gate: jnp.ndarray  # [D, F]
+    w_up: jnp.ndarray  # [D, F]
+    w_down: jnp.ndarray  # [F, D]
+
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray  # [D, E]
+    w_gate: jnp.ndarray  # [E, D, Fe]
+    w_up: jnp.ndarray  # [E, D, Fe]
+    w_down: jnp.ndarray  # [E, Fe, D]
+    shared: Optional[DenseFFNParams]  # always-on shared expert(s), fused into one
+
+
+def init_dense_ffn(key, d: int, f: int, dtype=jnp.float32) -> DenseFFNParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return DenseFFNParams(
+        nn.dense_init(k1, d, f, dtype),
+        nn.dense_init(k2, d, f, dtype),
+        nn.dense_init(k3, f, d, dtype),
+    )
+
+
+def init_moe(key, cfg: LMCfg, dtype=jnp.float32) -> MoEParams:
+    moe: MoECfg = cfg.moe
+    d, fe, e = cfg.d_model, moe.d_ff_expert, moe.n_experts
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    std = d**-0.5
+    shared = None
+    if moe.n_shared:
+        shared = init_dense_ffn(k5, d, fe * moe.n_shared, dtype)
+    return MoEParams(
+        router=nn.dense_init(k1, d, e, dtype),
+        w_gate=(jax.random.truncated_normal(k2, -2, 2, (e, d, fe), jnp.float32) * std).astype(dtype),
+        w_up=(jax.random.truncated_normal(k3, -2, 2, (e, d, fe), jnp.float32) * std).astype(dtype),
+        w_down=(jax.random.truncated_normal(k4, -2, 2, (e, fe, d), jnp.float32) * (fe**-0.5)).astype(dtype),
+        shared=shared,
+    )
+
+
+def dense_ffn(p: DenseFFNParams, x: jnp.ndarray) -> jnp.ndarray:
+    return nn.swiglu(x @ p.w_gate, x @ p.w_up) @ p.w_down
+
+
+MOE_GROUP_TOKENS = 4096  # GShard token-group size: capacity (and the dispatch
+# one-hot) is per group, so long sequences don't inflate the [.., E, C] tensors
+
+
+def moe_ffn(p: MoEParams, cfg: MoECfg, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar). GShard top-k capacity dispatch."""
+    b0, s0, d0 = x.shape
+    if s0 > MOE_GROUP_TOKENS and s0 % MOE_GROUP_TOKENS == 0:
+        ng = s0 // MOE_GROUP_TOKENS
+        y, aux = moe_ffn(p, cfg, x.reshape(b0 * ng, MOE_GROUP_TOKENS, d0))
+        return y.reshape(b0, s0, d0), aux
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(s * k * cfg.capacity_factor / e))
+
+    logits = x @ p.router  # [B, S, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    # top-k gates, renormalized
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [B, S, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # capacity assignment: position of each (token, choice) within its expert's queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # [B, S, k, E]
+    flat = onehot.reshape(b, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # tokens ahead of me in this expert
+    pos = pos.reshape(b, s, k, e)
+    within = (pos < cap) * onehot  # [B, S, k, E] keep-mask
+    pos_idx = jnp.einsum("bske,bske->bsk", pos, onehot)  # queue slot per choice
+    cap_oh = jax.nn.one_hot(pos_idx.astype(jnp.int32), cap, dtype=jnp.float32)  # [B, S, k, C]
+
+    # dispatch/combine einsums run in the activation dtype (bf16): the f32 one-hots
+    # otherwise force f32 [E,B,C,D] expert activations — 2x memory for no accuracy
+    # (gate weights themselves stay f32 until the final combine cast)
+    dispatch = jnp.einsum("bske,bskc->bsec", within, cap_oh).astype(x.dtype)  # 0/1
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gate_vals, within, cap_oh).astype(x.dtype)
+
+    xe = jnp.einsum("bsec,bsd->ebcd", dispatch, x)  # [E, B, C, D]
+    h = jnp.einsum("ebcd,edf->ebcf", xe, p.w_gate)
+    u = jnp.einsum("ebcd,edf->ebcf", xe, p.w_up)
+    act = jax.nn.silu(h) * u
+    ye = jnp.einsum("ebcf,efd->ebcd", act, p.w_down)  # [E, B, C, D]
+    y = jnp.einsum("bsec,ebcd->bsd", combine, ye)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=(0, 1))  # [E] mean router prob
+    ce = onehot[:, :, 0, :].mean(axis=(0, 1))  # [E] top-1 assignment fraction
+    aux = e * jnp.sum(me * ce)
+
+    if p.shared is not None:
+        y = y + dense_ffn(p.shared, x)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,204 @@
+"""RecSys models: DLRM (dot interaction), DIN (target attention), MIND (multi-interest
+capsule routing) on a shared embedding substrate.
+
+JAX has no nn.EmbeddingBag — lookups are jnp.take + masked segment reductions, built
+here as first-class ops. All tables are stacked into ONE [total_rows, D] matrix with
+per-field row offsets so the `model` mesh axis can row-shard a single array (the
+recsys EP analogue; see repro/distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import module as nn
+from repro.configs.base import RecsysCfg
+
+
+# ------------------------------------------------------------------ embedding substrate
+class EmbedTables(NamedTuple):
+    table: jnp.ndarray  # [total_rows, D] all fields stacked
+    offsets: jnp.ndarray  # int32 [n_fields] per-field start row
+
+
+def init_tables(key, cfg: RecsysCfg, dtype=jnp.float32) -> EmbedTables:
+    total = int(sum(cfg.vocab_sizes))
+    total = -(-total // 512) * 512  # pad rows so the model axis row-shards evenly
+    offsets = jnp.asarray(np.cumsum([0] + list(cfg.vocab_sizes[:-1])), jnp.int32)
+    table = nn.embed_init(key, total, cfg.embed_dim, dtype, std=1.0 / np.sqrt(cfg.embed_dim))
+    return EmbedTables(table, offsets)
+
+
+def field_lookup(t: EmbedTables, ids: jnp.ndarray) -> jnp.ndarray:
+    """ids int32 [B, F] (one id per field) -> [B, F, D]."""
+    return t.table[ids + t.offsets[None, :]]
+
+
+def bag_lookup(t: EmbedTables, field: int, ids: jnp.ndarray, mask: jnp.ndarray, reduce: str = "sum") -> jnp.ndarray:
+    """EmbeddingBag: ids [B, L] of one field + mask [B, L] -> [B, D] (sum/mean)."""
+    rows = t.table[ids + t.offsets[field]] * mask[..., None].astype(t.table.dtype)
+    s = rows.sum(axis=1)
+    if reduce == "mean":
+        s = s / jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    return s
+
+
+def seq_lookup(t: EmbedTables, ids: jnp.ndarray, fields: tuple) -> jnp.ndarray:
+    """History sequences: ids [B, L, F] -> [B, L, F*D] (concat per-field embeddings)."""
+    offs = t.offsets[jnp.asarray(fields, jnp.int32)]
+    rows = t.table[ids + offs[None, None, :]]  # [B, L, F, D]
+    return rows.reshape(*ids.shape[:2], -1)
+
+
+def _mlp_params(key, dims: tuple, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return tuple(nn.dense_init(k, i, o, dtype) for k, i, o in zip(keys, dims[:-1], dims[1:]))
+
+
+def _mlp(ws, x, final_act: bool = False):
+    for i, w in enumerate(ws):
+        x = x @ w
+        if i < len(ws) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ------------------------------------------------------------------ DLRM
+class DLRMParams(NamedTuple):
+    tables: EmbedTables
+    bot: tuple
+    top: tuple
+
+
+def init_dlrm(key, cfg: RecsysCfg, dtype=jnp.float32) -> DLRMParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_f = cfg.n_sparse + 1  # embeddings + bottom-MLP output
+    n_pairs = n_f * (n_f - 1) // 2
+    top_in = cfg.embed_dim + n_pairs
+    return DLRMParams(
+        tables=init_tables(k1, cfg, dtype),
+        bot=_mlp_params(k2, (cfg.n_dense,) + cfg.bot_mlp, dtype),
+        top=_mlp_params(k3, (top_in,) + cfg.top_mlp, dtype),
+    )
+
+
+def dlrm_forward(p: DLRMParams, cfg: RecsysCfg, dense: jnp.ndarray, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """dense [B, 13] f32, sparse_ids [B, 26] i32 -> logits [B]."""
+    bot = _mlp(p.bot, dense, final_act=True)  # [B, D]
+    embs = field_lookup(p.tables, sparse_ids)  # [B, F, D]
+    z = jnp.concatenate([bot[:, None, :], embs], axis=1)  # [B, F+1, D]
+    gram = jnp.einsum("bfd,bgd->bfg", z, z)  # [B, F+1, F+1]
+    iu, ju = jnp.triu_indices(z.shape[1], k=1)
+    pairs = gram[:, iu, ju]  # [B, n_pairs]
+    return _mlp(p.top, jnp.concatenate([bot, pairs], axis=1))[:, 0]
+
+
+# ------------------------------------------------------------------ DIN
+class DINParams(NamedTuple):
+    tables: EmbedTables
+    attn: tuple  # attention MLP over [h, t, h-t, h*t]
+    top: tuple
+
+
+def init_din(key, cfg: RecsysCfg, dtype=jnp.float32) -> DINParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    item_dim = cfg.n_sparse * cfg.embed_dim  # concat of per-field embeddings
+    top_in = 2 * item_dim  # [weighted history, target]
+    return DINParams(
+        tables=init_tables(k1, cfg, dtype),
+        attn=_mlp_params(k2, (4 * item_dim,) + cfg.attn_mlp + (1,), dtype),
+        top=_mlp_params(k3, (top_in,) + cfg.top_mlp, dtype),
+    )
+
+
+def din_forward(
+    p: DINParams, cfg: RecsysCfg, target_ids: jnp.ndarray, hist_ids: jnp.ndarray, hist_mask: jnp.ndarray
+) -> jnp.ndarray:
+    """target_ids [B, F] i32; hist_ids [B, L, F]; hist_mask [B, L] -> logits [B]."""
+    fields = tuple(range(cfg.n_sparse))
+    t = field_lookup(p.tables, target_ids).reshape(target_ids.shape[0], -1)  # [B, I]
+    h = seq_lookup(p.tables, hist_ids, fields)  # [B, L, I]
+    tb = jnp.broadcast_to(t[:, None, :], h.shape)
+    a_in = jnp.concatenate([h, tb, h - tb, h * tb], axis=-1)
+    scores = _mlp(p.attn, a_in)[..., 0]  # [B, L] — DIN: no softmax normalization
+    scores = scores * hist_mask.astype(scores.dtype)
+    interest = jnp.einsum("bl,bli->bi", scores, h)  # [B, I]
+    return _mlp(p.top, jnp.concatenate([interest, t], axis=-1))[:, 0]
+
+
+# ------------------------------------------------------------------ MIND
+class MINDParams(NamedTuple):
+    tables: EmbedTables
+    s_bilinear: jnp.ndarray  # [I, D_int] capsule transform (shared, B2I routing)
+    label_proj: tuple  # label-aware projection MLP
+
+
+def init_mind(key, cfg: RecsysCfg, dtype=jnp.float32) -> MINDParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    item_dim = cfg.n_sparse * cfg.embed_dim
+    return MINDParams(
+        tables=init_tables(k1, cfg, dtype),
+        s_bilinear=nn.dense_init(k2, item_dim, cfg.embed_dim, dtype),
+        label_proj=_mlp_params(k3, (cfg.embed_dim,) + cfg.top_mlp[:-1] + (cfg.embed_dim,), dtype),
+    )
+
+
+def _squash(z, axis=-1):
+    n2 = jnp.sum(jnp.square(z), axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * z / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(p: MINDParams, cfg: RecsysCfg, hist_ids, hist_mask) -> jnp.ndarray:
+    """Dynamic-routing capsules: hist [B, L, F] -> interests [B, K, D]."""
+    fields = tuple(range(cfg.n_sparse))
+    h = seq_lookup(p.tables, hist_ids, fields) @ p.s_bilinear  # [B, L, D]
+    b_mask = (hist_mask.astype(jnp.float32) - 1.0) * 1e9  # [B, L]
+    # fixed (non-learned, stop-grad) routing-logit init, as in the paper
+    blk = jax.random.normal(jax.random.PRNGKey(0), (1, h.shape[1], cfg.n_interests))
+    b_rout = jnp.broadcast_to(blk, (h.shape[0], h.shape[1], cfg.n_interests))
+    interests = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b_rout + b_mask[..., None], axis=-1)  # [B, L, K]
+        z = jnp.einsum("blk,bld->bkd", w, h)
+        interests = _squash(z)
+        b_rout = b_rout + jnp.einsum("bkd,bld->blk", jax.lax.stop_gradient(interests), h)
+    return interests
+
+
+def mind_user_vector(p, cfg, interests: jnp.ndarray, target_emb: jnp.ndarray, pow_p: float = 2.0):
+    """Label-aware attention over interests (training-time user vector)."""
+    scores = jnp.einsum("bkd,bd->bk", interests, target_emb)
+    w = jax.nn.softmax(pow_p * scores, axis=-1)
+    return jnp.einsum("bk,bkd->bd", w, interests)
+
+
+def mind_score_candidates(interests: jnp.ndarray, cand_embs: jnp.ndarray) -> jnp.ndarray:
+    """Serving: max over interests of dot(interest, candidate). [B,K,D]x[N,D]->[B,N]."""
+    return jnp.einsum("bkd,nd->bkn", interests, cand_embs).max(axis=1)
+
+
+def mind_item_embedding(p: MINDParams, cfg: RecsysCfg, item_ids: jnp.ndarray) -> jnp.ndarray:
+    """Candidate/target item embedding in interest space: [.., F] -> [.., D]."""
+    flat = field_lookup(p.tables, item_ids.reshape(-1, cfg.n_sparse)).reshape(
+        *item_ids.shape[:-1], -1
+    )
+    return flat @ p.s_bilinear
+
+
+# ------------------------------------------------------------------ losses
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    z = jnp.clip(logits, -30, 30)
+    return jnp.mean(jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def sampled_softmax_loss(user_vec: jnp.ndarray, target_emb: jnp.ndarray) -> jnp.ndarray:
+    """In-batch negatives: [B, D] x [B, D] -> softmax CE over the batch."""
+    logits = user_vec @ target_emb.T  # [B, B]
+    labels = jnp.arange(logits.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,119 @@
+"""SPLADE-style learned sparse encoder (Formal et al., the paper's LSR model family).
+
+Bidirectional transformer encoder + MLM head; sparse doc/query representation via
+  w_t = max_over_positions log(1 + relu(logit_t))
+trained with in-batch contrastive loss + FLOPS regularizer (the standard SPLADE
+recipe). This is the end-to-end training example's model (~100M params) — its output
+vectors feed repro/index/builder.py to build LSP indexes, closing the loop between the
+LM substrate and the paper's retrieval system.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import module as nn
+from repro.configs.base import LMCfg
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models.transformer import LayerParams, init_lm, LMParams
+
+
+def encoder_forward(params: LMParams, cfg: LMCfg, tokens: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Bidirectional encode: tokens [B, S], mask [B, S] -> term weights [B, V].
+
+    Reuses the decoder stack with a bidirectional (padding-only) mask by running
+    full attention over positions then masking padded tokens out of the max-pool.
+    """
+    b, s = tokens.shape
+    x = params.embed[tokens] * jnp.asarray(cfg.d_model**0.5, params.embed.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    for i, lp in enumerate(params.layers):
+        h = _bidir_attn(lp, cfg, i, nn.rms_norm(x, lp.norm1), positions, mask)
+        x = x + h
+        ff_in = nn.rms_norm(x, lp.norm2)
+        from repro.models.transformer import is_moe_layer
+
+        if is_moe_layer(cfg, i):
+            y, _ = ffn_mod.moe_ffn(lp.ffn, cfg.moe, ff_in)
+        else:
+            y = ffn_mod.dense_ffn(lp.ffn, ff_in)
+        x = x + y
+    x = nn.rms_norm(x, params.final_norm)
+    head = params.embed.T if params.lm_head is None else params.lm_head
+    logits = x @ head  # [B, S, V_pad] MLM logits
+    w = jnp.log1p(jax.nn.relu(logits.astype(jnp.float32)))
+    w = jnp.where(mask[:, :, None], w, 0.0)
+    return w.max(axis=1)[:, : cfg.vocab]  # [B, V]
+
+
+def _bidir_attn(lp: LayerParams, cfg: LMCfg, layer: int, x, positions, mask):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    p = lp.attn
+    q = (x @ p.wq).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p.wk).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p.wv).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = nn.rms_norm(q, p.q_gamma)
+        k = nn.rms_norm(k, p.k_gamma)
+    q = attn.apply_rope(q, positions, cfg.rope_theta)
+    k = attn.apply_rope(k, positions, cfg.rope_theta)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * hd**-0.5
+    scores = jnp.where(mask[:, None, None, :], scores, attn.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+    return o.reshape(b, s, cfg.n_heads * hd) @ p.wo
+
+
+class SpladeBatch(NamedTuple):
+    q_tokens: jnp.ndarray  # [B, Sq]
+    q_mask: jnp.ndarray
+    d_tokens: jnp.ndarray  # [B, Sd] positive doc per query
+    d_mask: jnp.ndarray
+
+
+def splade_loss(
+    params: LMParams,
+    cfg: LMCfg,
+    batch: SpladeBatch,
+    flops_q: float = 3e-4,
+    flops_d: float = 1e-4,
+):
+    """In-batch contrastive CE + FLOPS regularizer (SPLADE v2 objective)."""
+    qv = encoder_forward(params, cfg, batch.q_tokens, batch.q_mask)  # [B, V]
+    dv = encoder_forward(params, cfg, batch.d_tokens, batch.d_mask)
+    scores = qv @ dv.T  # [B, B]
+    labels = jnp.arange(scores.shape[0])
+    logz = jax.nn.logsumexp(scores, axis=-1)
+    gold = jnp.take_along_axis(scores, labels[:, None], axis=-1)[:, 0]
+    ce = jnp.mean(logz - gold)
+    # FLOPS reg: sum over vocab of squared mean activation
+    fl_q = jnp.sum(jnp.square(jnp.mean(qv, axis=0)))
+    fl_d = jnp.sum(jnp.square(jnp.mean(dv, axis=0)))
+    loss = ce + flops_q * fl_q + flops_d * fl_d
+    return loss, {"ce": ce, "flops_q": fl_q, "flops_d": fl_d}
+
+
+def splade_100m_config(vocab: int = 32768) -> LMCfg:
+    """~100M-parameter encoder for the end-to-end training example."""
+    return LMCfg(
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=2048,
+        vocab=vocab,
+        head_dim=64,
+        attn_pattern="full",
+        tie_embeddings=True,
+    )
+
+
+init_encoder = init_lm

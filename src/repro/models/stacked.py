@@ -1,0 +1,275 @@
+"""Scan-over-layers transformer execution (production path).
+
+The Python-loop forward in transformer.py unrolls n_layers bodies into the HLO —
+fine for tests, but at 36-62 layers it blows up compile time and defeats buffer reuse.
+Here layers are stacked into GROUPS of `period` = local_ratio+1 layers (so every scan
+step sees the same attention-kind pattern and the same MoE/dense interleave: period is
+always a multiple of moe.every_n), and execution is one lax.scan over groups with
+jax.checkpoint at group granularity (remat).
+
+Param layout: a tuple over in-group positions of LayerParams whose leaves carry a
+leading [n_groups] axis. Layer kind / MoE-ness is position-determined because the
+pattern repeats with the group period.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import module as nn
+from repro.configs.base import LMCfg
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models.transformer import LayerParams, _layer_fwd, is_moe_layer
+
+
+class StackedLMParams(NamedTuple):
+    embed: jnp.ndarray
+    groups: tuple  # tuple over period positions; leaves have leading [n_groups]
+    tail: tuple  # trailing n_layers % period layers (unstacked), e.g. gemma3's 62 = 10*6+2
+    final_norm: jnp.ndarray
+    lm_head: Optional[jnp.ndarray]
+
+
+def group_period(cfg: LMCfg) -> int:
+    period = (cfg.local_ratio + 1) if cfg.attn_pattern != "full" else 1
+    if cfg.moe is not None:
+        # period must keep the MoE interleave position-consistent across groups
+        import math
+
+        period = math.lcm(period, cfg.moe.every_n)
+    return period
+
+
+def init_lm_stacked(key, cfg: LMCfg, dtype=jnp.float32) -> StackedLMParams:
+    from repro.models.transformer import init_lm
+
+    flat = init_lm(key, cfg, dtype)
+    return stack_params(flat, cfg)
+
+
+def stack_params(flat_params, cfg: LMCfg) -> StackedLMParams:
+    """Convert transformer.LMParams (tuple of layers) to the stacked layout."""
+    period = group_period(cfg)
+    n_groups = cfg.n_layers // period
+    positions = []
+    for pos in range(period):
+        layers = [flat_params.layers[g * period + pos] for g in range(n_groups)]
+        positions.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layers))
+    tail = tuple(flat_params.layers[n_groups * period :])
+    return StackedLMParams(
+        embed=flat_params.embed,
+        groups=tuple(positions),
+        tail=tail,
+        final_norm=flat_params.final_norm,
+        lm_head=flat_params.lm_head,
+    )
+
+
+def _group_fwd(cfg: LMCfg, period: int, x, positions, group_params):
+    aux = jnp.float32(0.0)
+    for pos in range(period):
+        x = nn.maybe_shard(x, ("pod", "data"), None, None)
+        x, a = _layer_fwd(group_params[pos], cfg, pos, x, positions)
+        aux = aux + a
+    return x, aux
+
+
+def lm_forward_stacked(
+    params: StackedLMParams,
+    cfg: LMCfg,
+    tokens: jnp.ndarray,
+    remat: bool = True,
+    cast_dtype=None,
+    cast_specs=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cast_dtype (e.g. bf16): cast group params INSIDE the scan body, so only the
+    current group's low-precision copy is live — a whole-tree pre-cast keeps a full
+    bf16 replica resident for the entire step (3.1GB/device on llama4-400B).
+
+    cast_specs (matching params.groups PartitionSpecs, leading scan axis included):
+    constrains each cast output back onto the FSDP sharding so GSPMD converts the
+    SHARD and all-gathers bf16 — without it the f32 master shards are gathered first
+    (+25% collective bytes measured on llama4 train)."""
+    from repro.common.tree_utils import tree_cast
+
+    b, s = tokens.shape
+    period = group_period(cfg)
+    emb = params.embed[tokens]
+    if cast_dtype is not None:
+        emb = emb.astype(cast_dtype)
+    x = emb * jnp.asarray(cfg.d_model**0.5, emb.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, group_params):
+        if cast_dtype is not None:
+            group_params = tree_cast(group_params, cast_dtype)
+            if cast_specs is not None:
+                group_params = jax.tree.map(
+                    lambda p, sp: p if sp is None else nn.maybe_shard(p, *tuple(sp)[1:]),
+                    group_params,
+                    cast_specs,
+                    is_leaf=lambda v: v is None,
+                )
+        y, aux = _group_fwd(cfg, period, x, positions, group_params)
+        return y, aux
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, auxs = jax.lax.scan(body_fn, x, params.groups)
+    aux_total = auxs.sum()
+    n_groups = cfg.n_layers // period
+    for i, lp in enumerate(params.tail):
+        if cast_dtype is not None:
+            lp = tree_cast(lp, cast_dtype)
+        abs_layer = n_groups * period + i
+        f = jax.checkpoint(partial(_layer_fwd, cfg=cfg, layer=abs_layer)) if remat else partial(
+            _layer_fwd, cfg=cfg, layer=abs_layer
+        )
+        x, a = f(lp, x=x, positions=positions)
+        aux_total = aux_total + a
+    x = nn.rms_norm(x, params.final_norm)
+    head = params.embed.T if params.lm_head is None else params.lm_head
+    if cast_dtype is not None:
+        head = head.astype(cast_dtype)
+    return x @ head, aux_total / max(cfg.n_layers, 1)
+
+
+def lm_loss_stacked(
+    params: StackedLMParams, cfg: LMCfg, tokens, labels,
+    aux_weight: float = 0.01, remat: bool = True, cast_dtype=None, cast_specs=None,
+):
+    from repro.models.transformer import _masked_ce
+
+    logits, aux = lm_forward_stacked(
+        params, cfg, tokens, remat=remat, cast_dtype=cast_dtype, cast_specs=cast_specs
+    )
+    ce = _masked_ce(logits, labels, cfg)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------------ decode
+class StackedDecodeState(NamedTuple):
+    caches: tuple  # per period position: LayerKVCache with leading [n_groups]
+    tail_caches: tuple  # per tail layer: plain LayerKVCache
+    pos: jnp.ndarray
+
+
+def init_decode_state_stacked(cfg: LMCfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> StackedDecodeState:
+    period = group_period(cfg)
+    n_groups = cfg.n_layers // period
+    caches = []
+    for pos in range(period):
+        one = attn.init_layer_cache(cfg, pos, batch, max_len, dtype)
+        caches.append(
+            attn.LayerKVCache(
+                jnp.zeros((n_groups, *one.k.shape), dtype), jnp.zeros((n_groups, *one.v.shape), dtype)
+            )
+        )
+    tail = tuple(
+        attn.init_layer_cache(cfg, n_groups * period + i, batch, max_len, dtype)
+        for i in range(cfg.n_layers - n_groups * period)
+    )
+    return StackedDecodeState(tuple(caches), tail, jnp.zeros((), jnp.int32))
+
+
+def lm_decode_step_stacked(
+    params: StackedLMParams, cfg: LMCfg, token: jnp.ndarray, state: StackedDecodeState
+) -> tuple[jnp.ndarray, StackedDecodeState]:
+    period = group_period(cfg)
+    x = params.embed[token] * jnp.asarray(cfg.d_model**0.5, params.embed.dtype)
+
+    def body(x, inp):
+        group_params, caches = inp
+        new_caches = []
+        for pos in range(period):
+            lp = group_params[pos]
+            h, c = attn.attn_decode_step(
+                lp.attn, cfg, pos, nn.rms_norm(x, lp.norm1), state.pos, caches[pos]
+            )
+            x = x + h
+            ff_in = nn.rms_norm(x, lp.norm2)
+            if is_moe_layer(cfg, pos):
+                y, _ = ffn_mod.moe_ffn(lp.ffn, cfg.moe, ff_in)
+            else:
+                y = ffn_mod.dense_ffn(lp.ffn, ff_in)
+            x = x + y
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (params.groups, state.caches))
+    n_groups = cfg.n_layers // period
+    new_tail = []
+    for i, lp in enumerate(params.tail):
+        abs_layer = n_groups * period + i
+        h, c = attn.attn_decode_step(
+            lp.attn, cfg, abs_layer, nn.rms_norm(x, lp.norm1), state.pos, state.tail_caches[i]
+        )
+        x = x + h
+        ff_in = nn.rms_norm(x, lp.norm2)
+        if is_moe_layer(cfg, abs_layer):
+            y, _ = ffn_mod.moe_ffn(lp.ffn, cfg.moe, ff_in)
+        else:
+            y = ffn_mod.dense_ffn(lp.ffn, ff_in)
+        x = x + y
+        new_tail.append(c)
+    x = nn.rms_norm(x, params.final_norm)
+    head = params.embed.T if params.lm_head is None else params.lm_head
+    return x @ head, StackedDecodeState(new_caches, tuple(new_tail), state.pos + 1)
+
+
+def lm_prefill_stacked(
+    params: StackedLMParams, cfg: LMCfg, tokens: jnp.ndarray, max_len: int, cache_dtype=jnp.bfloat16
+) -> tuple[jnp.ndarray, StackedDecodeState]:
+    b, s = tokens.shape
+    period = group_period(cfg)
+    x = params.embed[tokens] * jnp.asarray(cfg.d_model**0.5, params.embed.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    hd = cfg.resolved_head_dim()
+
+    def fill_cache(lp, pos_in_group, xin) -> attn.LayerKVCache:
+        normed = nn.rms_norm(xin, lp.norm1)
+        k = (normed @ lp.attn.wk).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (normed @ lp.attn.wv).reshape(b, s, cfg.n_kv_heads, hd)
+        if cfg.qk_norm:
+            k = nn.rms_norm(k, lp.attn.k_gamma)
+        if attn.layer_kind(cfg, pos_in_group) != "nope_global":
+            k = attn.apply_rope(k, positions, cfg.rope_theta)
+        ln = attn.cache_len(cfg, pos_in_group, max_len)
+        k = k.reshape(b, s, cfg.n_kv_heads * hd)  # merged cache layout (see LayerKVCache)
+        v = v.reshape(b, s, cfg.n_kv_heads * hd)
+        if s >= ln:
+            k_keep, v_keep = k[:, -ln:], v[:, -ln:]
+            if s % ln:
+                k_keep = jnp.roll(k_keep, s % ln, axis=1)
+                v_keep = jnp.roll(v_keep, s % ln, axis=1)
+        else:
+            pad = ln - s
+            k_keep = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+            v_keep = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        return attn.LayerKVCache(k_keep.astype(cache_dtype), v_keep.astype(cache_dtype))
+
+    def body(x, group_params):
+        caches = []
+        for pos in range(period):
+            # pin batch sharding: without this GSPMD re-shards activations on the
+            # d_model dim inside the scan body (batch replicated -> 140GB/dev temp)
+            x = nn.maybe_shard(x, ("pod", "data"), None, None)
+            lp = group_params[pos]
+            caches.append(fill_cache(lp, pos, x))
+            x, _ = _layer_fwd(lp, cfg, pos, x, positions)
+        return x, tuple(caches)
+
+    x, caches = jax.lax.scan(body, x, params.groups)  # cache leaves: [n_groups, ...]
+    n_groups = cfg.n_layers // period
+    tail_caches = []
+    for i, lp in enumerate(params.tail):
+        abs_layer = n_groups * period + i
+        tail_caches.append(fill_cache(lp, abs_layer, x))
+        x, _ = _layer_fwd(lp, cfg, abs_layer, x, positions)
+    x = nn.rms_norm(x, params.final_norm)
+    head = params.embed.T if params.lm_head is None else params.lm_head
+    return x @ head, StackedDecodeState(caches, tuple(tail_caches), jnp.asarray(s, jnp.int32))

@@ -1,0 +1,218 @@
+"""Decoder-only transformer: parameterized over all 5 assigned LM archs.
+
+Functional params (nested dict pytree) with init/apply; layers stacked via lax.scan
+over stacked per-layer params when homogeneous, or a Python loop for hybrid attention
+patterns (layer kinds differ -> different cache shapes; loop keeps shapes static).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import module as nn
+from repro.configs.base import LMCfg
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+
+
+class LayerParams(NamedTuple):
+    attn: attn.AttnParams
+    ffn: Any  # DenseFFNParams | MoEParams
+    norm1: jnp.ndarray
+    norm2: jnp.ndarray
+
+
+class LMParams(NamedTuple):
+    embed: jnp.ndarray  # [V, D]
+    layers: tuple  # tuple[LayerParams, ...]
+    final_norm: jnp.ndarray
+    lm_head: Optional[jnp.ndarray]  # None when tied
+
+
+def is_moe_layer(cfg: LMCfg, layer: int) -> bool:
+    return cfg.moe is not None and (layer % cfg.moe.every_n) == cfg.moe.every_n - 1
+
+
+def padded_vocab(cfg: LMCfg) -> int:
+    """Embedding rows padded so the vocab dim shards over `model` (e.g. granite's
+    49155 -> 49408). Padded logit columns are masked out of the softmax."""
+    return -(-cfg.vocab // 256) * 256
+
+
+def init_lm(key, cfg: LMCfg, dtype=jnp.float32) -> LMParams:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        k_attn, k_ffn = jax.random.split(keys[i])
+        ffn_p = (
+            ffn_mod.init_moe(k_ffn, cfg, dtype)
+            if is_moe_layer(cfg, i)
+            else ffn_mod.init_dense_ffn(k_ffn, cfg.d_model, cfg.d_ff, dtype)
+        )
+        layers.append(
+            LayerParams(
+                attn=attn.init_attn(k_attn, cfg, dtype),
+                ffn=ffn_p,
+                norm1=nn.ones((cfg.d_model,), dtype),
+                norm2=nn.ones((cfg.d_model,), dtype),
+            )
+        )
+    vpad = padded_vocab(cfg)
+    return LMParams(
+        embed=nn.embed_init(keys[-2], vpad, cfg.d_model, dtype),
+        layers=tuple(layers),
+        final_norm=nn.ones((cfg.d_model,), dtype),
+        lm_head=None if cfg.tie_embeddings else nn.dense_init(keys[-1], cfg.d_model, vpad, dtype),
+    )
+
+
+def _layer_fwd(p: LayerParams, cfg: LMCfg, layer: int, x, positions):
+    h = x + attn.attn_forward(p.attn, cfg, layer, nn.rms_norm(x, p.norm1), positions)
+    ff_in = nn.rms_norm(h, p.norm2)
+    if is_moe_layer(cfg, layer):
+        y, aux = ffn_mod.moe_ffn(p.ffn, cfg.moe, ff_in)
+    else:
+        y, aux = ffn_mod.dense_ffn(p.ffn, ff_in), jnp.float32(0.0)
+    return h + y, aux
+
+
+def lm_forward(
+    params: LMParams, cfg: LMCfg, tokens: jnp.ndarray, remat: bool = False
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] -> (logits [B, S, V], aux_loss). Train/prefill forward.
+
+    remat=True checkpoints each layer (recompute-in-backward) — required to fit the
+    assigned 27B+ archs' 4k-seq training activations in 16GB/chip.
+    """
+    b, s = tokens.shape
+    x = params.embed[tokens] * jnp.asarray(cfg.d_model**0.5, params.embed.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux_total = jnp.float32(0.0)
+    for i, lp in enumerate(params.layers):
+        x = nn.maybe_shard(x, ("pod", "data"), None, None)
+        f = jax.checkpoint(partial(_layer_fwd, cfg=cfg, layer=i)) if remat else partial(
+            _layer_fwd, cfg=cfg, layer=i
+        )
+        x, aux = f(lp, x=x, positions=positions)
+        aux_total = aux_total + aux
+    x = nn.rms_norm(x, params.final_norm)
+    head = params.embed.T if params.lm_head is None else params.lm_head
+    logits = x @ head
+    return logits, aux_total / max(cfg.n_layers, 1)
+
+
+def lm_loss(
+    params: LMParams,
+    cfg: LMCfg,
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray,
+    aux_weight: float = 0.01,
+    remat: bool = False,
+):
+    """Next-token CE (labels already shifted by the data pipeline). -100 = ignore.
+
+    Sharding-friendly CE: logits stay bf16 and vocab-sharded end-to-end — logsumexp
+    is a fused reduce (f32 accum) and the gold logit is a one-hot masked reduce, NOT
+    a take_along_axis (a vocab-dim gather would force GSPMD to all-gather the f32
+    logits: ~20GB/device at 4k x 150k vocab).
+    """
+    logits, aux = lm_forward(params, cfg, tokens, remat=remat)
+    ce = _masked_ce(logits, labels, cfg)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def _masked_ce(logits: jnp.ndarray, labels: jnp.ndarray, cfg: LMCfg) -> jnp.ndarray:
+    logits = nn.maybe_shard(logits, ("pod", "data"), None, "model")
+    vpad = logits.shape[-1]
+    if vpad != cfg.vocab:  # mask padded vocab columns out of the softmax
+        col = jnp.arange(vpad)
+        logits = jnp.where(col < cfg.vocab, logits, jnp.asarray(-1e9, logits.dtype))
+    mask = labels >= 0
+    labels_safe = jnp.where(mask, labels, 0)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = (logits - m).astype(jnp.float32)
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0].astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels_safe, vpad, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1).astype(jnp.float32)
+    return jnp.where(mask, logz - gold, 0.0).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ------------------------------------------------------------------ decode / serve
+class DecodeState(NamedTuple):
+    caches: tuple  # tuple[attn.LayerKVCache, ...]
+    pos: jnp.ndarray  # scalar int32: next position to write
+
+
+def init_decode_state(cfg: LMCfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> DecodeState:
+    caches = tuple(
+        attn.init_layer_cache(cfg, i, batch, max_len, dtype) for i in range(cfg.n_layers)
+    )
+    return DecodeState(caches, jnp.zeros((), jnp.int32))
+
+
+def lm_decode_step(
+    params: LMParams, cfg: LMCfg, token: jnp.ndarray, state: DecodeState
+) -> tuple[jnp.ndarray, DecodeState]:
+    """token [B, 1] -> (logits [B, 1, V], new state). One serve_step."""
+    x = params.embed[token] * jnp.asarray(cfg.d_model**0.5, params.embed.dtype)
+    new_caches = []
+    for i, lp in enumerate(params.layers):
+        h, cache = attn.attn_decode_step(
+            lp.attn, cfg, i, nn.rms_norm(x, lp.norm1), state.pos, state.caches[i]
+        )
+        x = x + h
+        ff_in = nn.rms_norm(x, lp.norm2)
+        if is_moe_layer(cfg, i):
+            y, _ = ffn_mod.moe_ffn(lp.ffn, cfg.moe, ff_in)
+        else:
+            y = ffn_mod.dense_ffn(lp.ffn, ff_in)
+        x = x + y
+        new_caches.append(cache)
+    x = nn.rms_norm(x, params.final_norm)
+    head = params.embed.T if params.lm_head is None else params.lm_head
+    return x @ head, DecodeState(tuple(new_caches), state.pos + 1)
+
+
+def lm_prefill(
+    params: LMParams, cfg: LMCfg, tokens: jnp.ndarray, max_len: int, cache_dtype=jnp.bfloat16
+) -> tuple[jnp.ndarray, DecodeState]:
+    """Prefill: forward pass + populate KV caches for subsequent decode."""
+    b, s = tokens.shape
+    x = params.embed[tokens] * jnp.asarray(cfg.d_model**0.5, params.embed.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    state = init_decode_state(cfg, b, max_len, cache_dtype)
+    caches = []
+    for i, lp in enumerate(params.layers):
+        # recompute K/V for the cache (attn_forward recomputes internally too; the
+        # duplicate projection is fused away by XLA CSE)
+        hd = cfg.resolved_head_dim()
+        normed = nn.rms_norm(x, lp.norm1)
+        k = (normed @ lp.attn.wk).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (normed @ lp.attn.wv).reshape(b, s, cfg.n_kv_heads, hd)
+        if cfg.qk_norm:
+            k = nn.rms_norm(k, lp.attn.k_gamma)
+        if attn.layer_kind(cfg, i) != "nope_global":
+            k = attn.apply_rope(k, positions, cfg.rope_theta)
+        ln = state.caches[i].k.shape[1]
+        if s >= ln:
+            k_keep = k[:, -ln:].astype(cache_dtype)
+            v_keep = v[:, -ln:].astype(cache_dtype)
+            # ring alignment: absolute position p lands at slot p % ln. k_keep[j]
+            # holds position s-ln+j -> slot (j + s%ln) % ln, i.e. a roll by s % ln.
+            if s % ln:
+                k_keep = jnp.roll(k_keep, s % ln, axis=1)
+                v_keep = jnp.roll(v_keep, s % ln, axis=1)
+        else:
+            # cache longer than the prompt: positions 0..s-1 land at slots 0..s-1
+            pad = ln - s
+            k_keep = jnp.pad(k.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_keep = jnp.pad(v.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        caches.append(attn.LayerKVCache(k_keep, v_keep))
+        x, _ = _layer_fwd(lp, cfg, i, x, positions)
+    x = nn.rms_norm(x, params.final_norm)
+    head = params.embed.T if params.lm_head is None else params.lm_head
+    return x @ head, DecodeState(tuple(caches), jnp.asarray(s, jnp.int32))

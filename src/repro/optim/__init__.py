@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW
+from repro.optim.adafactor import Adafactor

@@ -1,0 +1,72 @@
+"""Adafactor (Shazeer & Stern) with factored second moments — the memory-lean option
+for the very large assigned archs (llama4's 400B params: factored states are
+rows+cols instead of full moments)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FactoredMoment(NamedTuple):
+    vr: jnp.ndarray  # row second moment (or full moment for <2D params)
+    vc: jnp.ndarray  # col second moment (empty for <2D)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    moments: Any
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    lr: float = 1e-3
+    decay: float = 0.8
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+
+    def init(self, params: Any) -> AdafactorState:
+        def mk(p):
+            if p.ndim >= 2:
+                return FactoredMoment(
+                    jnp.zeros(p.shape[:-1], jnp.float32), jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                )
+            return FactoredMoment(jnp.zeros(p.shape, jnp.float32), jnp.zeros((0,), jnp.float32))
+
+        return AdafactorState(jnp.zeros((), jnp.int32), jax.tree.map(mk, params, is_leaf=None))
+
+    def update(self, grads: Any, state: AdafactorState, params: Any):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** (-self.decay)
+
+        def upd(p, g, mom: FactoredMoment):
+            if g is None or g.dtype == jax.dtypes.float0:  # non-differentiable leaf
+                return p, mom
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps1
+            if p.ndim >= 2:
+                vr = beta * mom.vr + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * mom.vc + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), self.eps1))[..., None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + self.eps1)
+                new_mom = FactoredMoment(vr, vc)
+            else:
+                vr = beta * mom.vr + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(vr + self.eps1)
+                new_mom = FactoredMoment(vr, mom.vc)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + self.eps1)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))), self.eps2)
+            return (p.astype(jnp.float32) - self.lr * scale * u).astype(p.dtype), new_mom
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.moments)
+        outs = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_moments = treedef.unflatten([o[1] for o in outs])
+        return new_params, AdafactorState(step, new_moments), {}

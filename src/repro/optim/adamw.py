@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay, global-norm clipping, warmup-cosine schedule.
+
+(no optax in this container — implemented from scratch; state is a pytree so ZeRO-1
+sharding rules in repro/distributed/sharding.py apply uniformly.)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree_utils import global_norm
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def schedule(self, step: jnp.ndarray) -> jnp.ndarray:
+        s = step.astype(jnp.float32)
+        warm = s / max(self.warmup_steps, 1)
+        prog = jnp.clip(
+            (s - self.warmup_steps) / max(self.total_steps - self.warmup_steps, 1), 0.0, 1.0
+        )
+        cos = self.min_lr_ratio + (1 - self.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * jnp.where(s < self.warmup_steps, warm, cos)
+
+    def update(self, grads: Any, state: AdamWState, params: Any) -> tuple[Any, AdamWState, dict]:
+        f0 = jax.dtypes.float0  # non-differentiable (int) leaves pass through
+
+        gnorm = global_norm(jax.tree.map(lambda g: jnp.zeros(()) if g.dtype == f0 else g, grads))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(
+            lambda g: g if g.dtype == f0 else g.astype(jnp.float32) * scale, grads
+        )
+
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(
+            lambda m_, g: m_ if g.dtype == f0 else self.b1 * m_ + (1 - self.b1) * g, state.m, grads
+        )
+        v = jax.tree.map(
+            lambda v_, g: v_ if g.dtype == f0 else self.b2 * v_ + (1 - self.b2) * g * g, state.v, grads
+        )
+
+        def upd(p, g, m_, v_):
+            if g.dtype == f0:
+                return p
+            step_ = lr * (m_ / b1c) / (jnp.sqrt(v_ / b2c) + self.eps)
+            decay = lr * self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_ - decay).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, grads, m, v)
+        return new_params, AdamWState(step, m, v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,104 @@
+"""Batched retrieval serving engine.
+
+Request flow: submit(query) -> batching queue -> fixed-size padded QueryBatch
+(latency/throughput knob: max_batch vs max_wait_ms) -> jitted retriever -> futures.
+Tracks end-to-end latency percentiles (the paper's MRT metric at serving level).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core.query import QueryBatch, make_query_batch
+
+
+@dataclass
+class ServeStats:
+    latencies_ms: list = field(default_factory=list)
+    batches: int = 0
+    requests: int = 0
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(self.latencies_ms, p)) if self.latencies_ms else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "mean_ms": float(np.mean(self.latencies_ms)) if self.latencies_ms else 0.0,
+            "p50_ms": self.percentile(50),
+            "p99_ms": self.percentile(99),
+        }
+
+
+class RetrievalEngine:
+    """retriever: QueryBatch -> (ids [Q, k], scores [Q, k]) — jitted, fixed Q."""
+
+    def __init__(
+        self,
+        retriever: Callable[[QueryBatch], tuple],
+        vocab: int,
+        max_batch: int = 32,
+        nq_max: int = 64,
+        max_wait_ms: float = 2.0,
+    ):
+        self.retriever = retriever
+        self.vocab = vocab
+        self.max_batch = max_batch
+        self.nq_max = nq_max
+        self.max_wait_ms = max_wait_ms
+        self.stats = ServeStats()
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, tids: np.ndarray, ws: np.ndarray) -> Future:
+        fut: Future = Future()
+        self._q.put((time.monotonic(), tids, ws, fut))
+        return fut
+
+    def _collect(self) -> list:
+        items = []
+        try:
+            items.append(self._q.get(timeout=0.1))
+        except queue.Empty:
+            return items
+        deadline = time.monotonic() + self.max_wait_ms / 1e3
+        while len(items) < self.max_batch and time.monotonic() < deadline:
+            try:
+                items.append(self._q.get(timeout=max(deadline - time.monotonic(), 0)))
+            except queue.Empty:
+                break
+        return items
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            items = self._collect()
+            if not items:
+                continue
+            queries = [(t, w) for _, t, w, _ in items]
+            # pad the batch to the compiled size with empty queries
+            while len(queries) < self.max_batch:
+                queries.append((np.zeros(0, np.int32), np.zeros(0, np.float32)))
+            qb = make_query_batch(queries, self.vocab, nq_max=self.nq_max)
+            ids, scores = self.retriever(qb)
+            ids = np.asarray(ids)
+            scores = np.asarray(scores)
+            now = time.monotonic()
+            for i, (t0, _, _, fut) in enumerate(items):
+                self.stats.latencies_ms.append((now - t0) * 1e3)
+                self.stats.requests += 1
+                fut.set_result((ids[i], scores[i]))
+            self.stats.batches += 1
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5)

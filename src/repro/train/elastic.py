@@ -1,0 +1,63 @@
+"""Elastic scaling + straggler mitigation policies.
+
+Elastic scaling: checkpoints are mesh-agnostic (host numpy leaves), so a job can
+restart on any mesh — `reshard_state` re-places a restored TrainState with new
+shardings derived from the new mesh. Combined with the counter-based data pipeline the
+restart is bit-deterministic w.r.t. the data stream.
+
+Straggler mitigation (design + hooks; real timing needs hardware):
+  * synchronous-with-backup: `BackupStepPolicy` tracks a per-step deadline from an
+    EWMA of step times; when a step overruns, the launcher re-dispatches the stalled
+    host's microbatch to the spare slice and drops the late result (at-most-once
+    apply, deterministic because the reassigned microbatch is identical — counter
+    pipeline again).
+  * bounded staleness: for cross-pod DP, `allow_stale_pods` lets a pod fall at most
+    one step behind, applying its gradient with the next step's psum (documented
+    trade-off; off by default).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """Re-place every leaf of `state` with the matching sharding (new mesh)."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
+
+
+def shardings_for(tree: Any, mesh, pspec_fn) -> Any:
+    """Build a shardings pytree: pspec_fn(path, leaf) -> PartitionSpec."""
+    from jax.sharding import NamedSharding
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [NamedSharding(mesh, pspec_fn(path, leaf)) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclass
+class BackupStepPolicy:
+    """EWMA step-deadline tracker; the launcher consults `overrun()` per step."""
+
+    slack: float = 2.0  # deadline = slack * ewma
+    alpha: float = 0.1
+    ewma: float = 0.0
+    _t0: float = field(default=0.0, repr=False)
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def finish(self) -> float:
+        dt = time.monotonic() - self._t0
+        self.ewma = dt if self.ewma == 0 else (1 - self.alpha) * self.ewma + self.alpha * dt
+        return dt
+
+    def deadline(self) -> float:
+        return self.slack * self.ewma if self.ewma else float("inf")
+
+    def overrun(self) -> bool:
+        return self.ewma > 0 and (time.monotonic() - self._t0) > self.deadline()

@@ -1,0 +1,131 @@
+"""Training loop: mixed precision, gradient accumulation, checkpoint/restart,
+sharding-aware compilation.
+
+Fault-tolerance contract (exercised by tests/test_fault_tolerance.py):
+  * checkpoints are atomic and carry (params, opt_state, step);
+  * the data pipeline is counter-based, so restore(step) resumes the exact stream;
+  * restarting on a *different* mesh works by passing new shardings to restore
+    (elastic scaling; see repro/train/elastic.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.common.tree_utils import tree_cast
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+@dataclass(frozen=True)
+class TrainerConfig:
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    grad_accum: int = 1
+    compute_dtype: Any = jnp.bfloat16  # params stay fp32 (master weights)
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, dict], tuple[jnp.ndarray, dict]],
+    optimizer,
+    cfg: TrainerConfig,
+    donate: bool = True,
+):
+    """Build a jitted step: (state, batch) -> (state, metrics).
+
+    Gradient accumulation splits the batch's leading axis into `grad_accum`
+    microbatches and lax.scan-accumulates grads (remat-friendly, constant memory).
+    """
+
+    def compute_grads(params, batch):
+        lowp = tree_cast(params, cfg.compute_dtype)
+
+        def lf(p, b):
+            loss, metrics = loss_fn(p, b)
+            return loss, metrics
+
+        if cfg.grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(lowp, batch)
+            return loss, metrics, grads
+
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), g = jax.value_and_grad(lf, has_aux=True)(lowp, mb)
+            acc = jax.tree.map(jnp.add, acc, tree_cast(g, jnp.float32))
+            return (acc, loss_acc + loss), metrics
+
+        split = jax.tree.map(
+            lambda x: x.reshape(cfg.grad_accum, x.shape[0] // cfg.grad_accum, *x.shape[1:]), batch
+        )
+        zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), lowp)
+        (grads, loss_sum), metrics = jax.lax.scan(micro, (zeros, 0.0), split)
+        grads = jax.tree.map(lambda g: g / cfg.grad_accum, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / cfg.grad_accum, metrics, grads
+
+    def step_fn(state: TrainState, batch: dict):
+        loss, metrics, grads = compute_grads(state.params, batch)
+        grads = tree_cast(grads, jnp.float32)
+        new_params, new_opt, opt_metrics = optimizer.update(grads, state.opt_state, state.params)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+
+class Trainer:
+    def __init__(self, loss_fn, optimizer, cfg: TrainerConfig, init_params_fn: Callable[[], Any]):
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.step_fn = make_train_step(loss_fn, optimizer, cfg)
+        self.init_params_fn = init_params_fn
+        self._ckpt_thread = None
+
+    def init_or_restore(self, shardings: Optional[Any] = None) -> TrainState:
+        params = self.init_params_fn()
+        state = TrainState(params, self.optimizer.init(params), jnp.zeros((), jnp.int32))
+        if self.cfg.ckpt_dir and latest_step(self.cfg.ckpt_dir) is not None:
+            state, step = restore_checkpoint(self.cfg.ckpt_dir, state, shardings=shardings)
+            print(f"[trainer] restored checkpoint at step {step}")
+        return state
+
+    def maybe_checkpoint(self, state: TrainState, force: bool = False) -> None:
+        if not self.cfg.ckpt_dir:
+            return
+        step = int(state.step)
+        if force or (step > 0 and step % self.cfg.ckpt_every == 0):
+            if self._ckpt_thread is not None:
+                self._ckpt_thread.join()  # one in-flight async save at a time
+            self._ckpt_thread = save_checkpoint(
+                self.cfg.ckpt_dir, step, state, keep=self.cfg.ckpt_keep, async_write=self.cfg.ckpt_async
+            )
+
+    def finish(self) -> None:
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+
+    def run(self, state: TrainState, pipeline, n_steps: int, log_every: int = 10):
+        start = int(state.step)
+        it = pipeline.iterate(start_step=start)
+        for i in range(start, start + n_steps):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            state, metrics = self.step_fn(state, batch)
+            if log_every and (i + 1) % log_every == 0:
+                m = {k: float(v) for k, v in metrics.items() if jnp.ndim(v) == 0}
+                print(f"[trainer] step {i + 1}: " + " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+            self.maybe_checkpoint(state)
+        self.maybe_checkpoint(state, force=True)
+        self.finish()
+        return state

@@ -1,0 +1,81 @@
+"""Minimal property-based testing harness (hypothesis is not installable offline).
+
+Provides seeded `given(...)` with simple strategies: each decorated test runs N times
+with independently drawn inputs; failures report the seed for reproduction. No
+shrinking — cases are kept small instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+
+N_CASES = int(os.environ.get("PROPTEST_CASES", "25"))
+BASE_SEED = int(os.environ.get("PROPTEST_SEED", "0"))
+
+
+@dataclass
+class Strategy:
+    draw: Callable[[np.random.Generator], Any]
+    label: str = "strategy"
+
+
+def integers(lo: int, hi: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(lo, hi + 1)), f"int[{lo},{hi}]")
+
+
+def floats(lo: float, hi: float) -> Strategy:
+    return Strategy(lambda rng: float(rng.uniform(lo, hi)), f"float[{lo},{hi}]")
+
+
+def sampled_from(options) -> Strategy:
+    options = list(options)
+    return Strategy(lambda rng: options[rng.integers(0, len(options))], f"sampled{options}")
+
+
+def arrays(dtype, shape_strategy, lo=0.0, hi=1.0) -> Strategy:
+    def draw(rng):
+        shape = shape_strategy.draw(rng) if isinstance(shape_strategy, Strategy) else shape_strategy
+        if np.issubdtype(dtype, np.integer):
+            return rng.integers(int(lo), int(hi) + 1, size=shape).astype(dtype)
+        return rng.uniform(lo, hi, size=shape).astype(dtype)
+
+    return Strategy(draw, "array")
+
+
+def tuples(*strats) -> Strategy:
+    return Strategy(lambda rng: tuple(s.draw(rng) for s in strats), "tuple")
+
+
+def given(**strategies: Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest would unwrap to the original signature
+        # and treat the strategy parameters as fixtures.
+        def wrapper():
+            for case in range(N_CASES):
+                seed = BASE_SEED * 1_000_003 + case
+                rng = np.random.default_rng(seed)
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:  # noqa: BLE001
+                    raise AssertionError(
+                        f"property failed on case {case} (seed {seed}): "
+                        f"{ {k: _short(v) for k, v in drawn.items()} }"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def _short(v):
+    if isinstance(v, np.ndarray):
+        return f"ndarray{v.shape}:{v.dtype}"
+    return v

@@ -1,0 +1,67 @@
+"""Index-builder integrity: permutation validity + bound matrices vs brute force."""
+
+import numpy as np
+
+from repro.core.bounds import unpack_strided
+from repro.index.builder import IndexBuildConfig, build_index
+
+
+def test_builder_integrity(tiny_corpus):
+    _, corpus, _ = tiny_corpus
+    cfg = IndexBuildConfig(b=8, c=8, kmeans_iters=2)
+    idx = build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab, cfg)
+    n_docs = len(corpus.doc_ptr) - 1
+
+    remap = np.asarray(idx.doc_remap)
+    real = remap[remap < n_docs]
+    assert len(np.unique(real)) == n_docs, "every doc appears exactly once"
+    assert idx.n_blocks * idx.b == len(remap)
+    assert idx.n_superblocks * idx.c == idx.n_blocks
+
+    # brute-force block max for a sample of (term, block) pairs
+    rng = np.random.default_rng(0)
+    blk_unpacked = unpack_strided(
+        idx.blk_bounds.packed, idx.blk_bounds.bits, idx.blk_bounds.granule_words
+    )
+    scale = np.asarray(idx.blk_bounds.scale)
+    scale_col = scale[:, None] if scale.ndim else scale  # per-term row scales
+    blk = np.asarray(blk_unpacked)[:, : idx.n_blocks].astype(np.float32) * scale_col
+    pos_of = np.full(n_docs + 1, -1)
+    pos_of[remap] = np.arange(len(remap))
+    for _ in range(50):
+        t = rng.integers(0, corpus.vocab)
+        b = rng.integers(0, idx.n_blocks)
+        docs = remap[b * idx.b : (b + 1) * idx.b]
+        true_max = 0.0
+        for d in docs:
+            if d >= n_docs:
+                continue
+            sl = slice(corpus.doc_ptr[d], corpus.doc_ptr[d + 1])
+            w = corpus.ws[sl][corpus.tids[sl] == t]
+            if len(w):
+                true_max = max(true_max, float(w.max()))
+        lvl = float(scale[t]) if scale.ndim else float(scale)
+        assert blk[t, b] >= true_max - 1e-4, "quantized block max must upper-bound"
+        assert blk[t, b] <= true_max + lvl + 1e-4, "and be tight to one level"
+
+
+def test_fwd_index_roundtrip(tiny_corpus, tiny_index):
+    """Forward index must contain exactly each document's (term, weight) pairs."""
+    _, corpus, _ = tiny_corpus
+    idx = tiny_index
+    n_docs = len(corpus.doc_ptr) - 1
+    remap = np.asarray(idx.doc_remap)
+    tids = np.asarray(idx.docs_fwd.tids)
+    ws = np.asarray(idx.docs_fwd.ws)
+    rng = np.random.default_rng(1)
+    for pos in rng.integers(0, len(remap), 20):
+        d = remap[pos]
+        if d >= n_docs:
+            assert (tids[pos] == corpus.vocab).all()
+            continue
+        sl = slice(corpus.doc_ptr[d], corpus.doc_ptr[d + 1])
+        true = dict(zip(corpus.tids[sl].tolist(), corpus.ws[sl].tolist()))
+        got = {int(t): float(w) for t, w in zip(tids[pos], ws[pos]) if t < corpus.vocab}
+        assert set(got) == set(true)
+        for t, w in got.items():
+            assert abs(w * idx.docs_fwd.scale - true[t]) <= idx.docs_fwd.scale / 2 + 1e-6

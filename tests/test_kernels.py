@@ -1,0 +1,61 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.index.pack import SEG_WORDS, pack_rows_strided
+from repro.kernels.sbmax.kernel import sbmax_pallas
+from repro.kernels.sbmax.ref import sbmax_ref
+from repro.kernels.boundsum_gather.kernel import boundsum_gather_pallas
+from repro.kernels.boundsum_gather.ref import boundsum_gather_ref
+from repro.kernels.dequant_matmul.kernel import dequant_matmul_pallas
+from repro.kernels.dequant_matmul.ref import dequant_matmul_ref
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("v,n,q,nq", [(64, 1024, 2, 8), (300, 2048, 3, 17), (17, 3072, 1, 3)])
+def test_sbmax_matches_ref(bits, v, n, q, nq):
+    vpw = 32 // bits
+    n = -(-n // (vpw * 128)) * vpw * 128  # pad to segment multiple
+    rng = np.random.default_rng(bits * 1000 + v)
+    mat = rng.integers(0, 1 << bits, (v, n)).astype(np.uint8)
+    packed = jnp.asarray(pack_rows_strided(mat, bits, SEG_WORDS))
+    tids = jnp.asarray(rng.integers(0, v, (q, nq)).astype(np.int32))
+    ws = jnp.asarray(rng.random((q, nq)).astype(np.float32)).at[:, -1:].set(0.0)
+    out_k = sbmax_pallas(packed, tids, ws, bits, interpret=True)
+    out_r = sbmax_ref(packed, tids, ws, bits)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("bits,c", [(4, 8), (4, 16), (4, 64), (8, 4), (8, 16)])
+def test_boundsum_gather_matches_ref(bits, c):
+    if (c * bits) % 32:
+        pytest.skip("granule not word-aligned")
+    rng = np.random.default_rng(c)
+    v, ns, q, nq, s = 150, 30, 2, 9, 7
+    cw = c * bits // 32
+    mat = rng.integers(0, 1 << bits, (v, ns * c)).astype(np.uint8)
+    packed = jnp.asarray(pack_rows_strided(mat, bits, cw))
+    tids = jnp.asarray(rng.integers(0, v, (q, nq)).astype(np.int32))
+    ws = jnp.asarray(rng.random((q, nq)).astype(np.float32))
+    sel = jnp.asarray(rng.integers(0, ns, (q, s)).astype(np.int32))
+    out_k = boundsum_gather_pallas(packed, c, bits, tids, ws, sel, interpret=True)
+    out_r = boundsum_gather_ref(packed, c, bits, tids, ws, sel)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,segs", [(64, 256, 1), (128, 512, 2)])
+def test_dequant_matmul_matches_ref(bits, dtype, m, k, segs):
+    vpw = 32 // bits
+    n = vpw * 128 * segs
+    rng = np.random.default_rng(m + k)
+    w = rng.integers(0, 1 << bits, (k, n)).astype(np.uint8)
+    packed = jnp.asarray(pack_rows_strided(w, bits, 128))
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32)).astype(dtype)
+    out_k = dequant_matmul_pallas(x, packed, bits, tm=64, tk=min(256, k), interpret=True)
+    out_r = dequant_matmul_ref(x, packed, bits)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=rtol, atol=1e-2)

@@ -1,0 +1,61 @@
+"""Dense-embedding LSP (recsys retrieval_cand integration of the paper's technique)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.config import RetrievalConfig
+from repro.core.lsp_dense import (
+    DenseIndexConfig,
+    build_dense_index,
+    retrieve_dense,
+    retrieve_dense_exact,
+)
+
+
+@pytest.fixture(scope="module")
+def dense_index():
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((16, 32)).astype(np.float32)
+    cands = (centers[rng.integers(0, 16, 8000)] + 0.3 * rng.standard_normal((8000, 32))).astype(np.float32)
+    idx = build_dense_index(cands, DenseIndexConfig(b=32, c=8, kmeans_iters=3, ns_align=4))
+    q = jnp.asarray((centers[rng.integers(0, 16, 6)] + 0.2 * rng.standard_normal((6, 32))).astype(np.float32))
+    return idx, q
+
+
+def test_dense_exact_at_full_gamma(dense_index):
+    idx, q = dense_index
+    oid, _ = retrieve_dense_exact(idx, q, 10)
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=idx.n_superblocks, gamma0=4)
+    ids, _ = retrieve_dense(idx, q, cfg)
+    rec = np.mean([len(np.intersect1d(np.asarray(ids)[i], np.asarray(oid)[i])) / 10 for i in range(q.shape[0])])
+    assert rec == 1.0
+
+
+def test_dense_monotone_recall(dense_index):
+    idx, q = dense_index
+    oid, _ = retrieve_dense_exact(idx, q, 10)
+    recalls = []
+    for g in [2, 8, idx.n_superblocks]:
+        cfg = RetrievalConfig(variant="lsp0", k=10, gamma=g, gamma0=2)
+        ids, _ = retrieve_dense(idx, q, cfg)
+        recalls.append(
+            np.mean([len(np.intersect1d(np.asarray(ids)[i], np.asarray(oid)[i])) / 10 for i in range(q.shape[0])])
+        )
+    assert recalls == sorted(recalls), recalls
+
+
+def test_dense_bounds_valid(dense_index):
+    """Block bound must upper-bound every true dot product in the block."""
+    from repro.core.lsp_dense import _bounds
+
+    idx, q = dense_index
+    sb_bound = np.asarray(_bounds(idx.sb, q))  # [B, NS]
+    cands = np.asarray(idx.cands.astype(jnp.float32))
+    remap = np.asarray(idx.remap)
+    span = idx.b * idx.c
+    scores = cands @ np.asarray(q).T  # [n_pad, B]
+    scores[remap >= idx.n_cands] = -1e30
+    per_sb = scores.reshape(idx.n_superblocks, span, -1).max(axis=1).T  # [B, NS]
+    per_sb = np.where(per_sb < -1e29, 0.0, per_sb)
+    assert (sb_bound + 1e-2 >= per_sb).all(), (sb_bound - per_sb).min()

@@ -1,0 +1,91 @@
+"""System invariants of the LSP pipeline (paper §4.1 semantics)."""
+
+import numpy as np
+import pytest
+
+from repro.core import RetrievalConfig, retrieve
+from repro.core import ops as core_ops
+from repro.eval.metrics import failed_queries, recall_vs_oracle
+
+
+def _recall(index, qb, oracle_ids, **kw):
+    cfg = RetrievalConfig(**kw)
+    res = retrieve(index, qb, cfg, impl="ref")
+    return recall_vs_oracle(np.asarray(res.doc_ids), oracle_ids), res
+
+
+def test_gamma_full_is_rank_safe(tiny_index, tiny_qb, oracle):
+    """γ = NS with no query pruning must reproduce the exact top-k (safety floor)."""
+    oracle_ids, _ = oracle
+    rec, _ = _recall(
+        tiny_index, tiny_qb, oracle_ids,
+        variant="lsp0", k=10, gamma=tiny_index.n_superblocks, gamma0=8, beta=1.0, eta=1.0,
+    )
+    assert rec == 1.0
+
+
+def test_recall_monotone_in_gamma(tiny_index, tiny_qb, oracle):
+    oracle_ids, _ = oracle
+    recalls = []
+    for g in [2, 8, 32, tiny_index.n_superblocks]:
+        rec, _ = _recall(tiny_index, tiny_qb, oracle_ids, variant="lsp0", k=10, gamma=g, gamma0=2, beta=0.5)
+        recalls.append(rec)
+    assert all(b >= a - 1e-9 for a, b in zip(recalls, recalls[1:])), recalls
+    assert recalls[-1] > recalls[0]
+
+
+def test_lsp1_at_least_lsp0(tiny_index, tiny_qb, oracle):
+    """μ-overestimation only ADDS superblocks beyond the top-γ guarantee."""
+    oracle_ids, _ = oracle
+    r0, res0 = _recall(tiny_index, tiny_qb, oracle_ids, variant="lsp0", k=10, gamma=8, gamma0=4, beta=0.5)
+    r1, res1 = _recall(tiny_index, tiny_qb, oracle_ids, variant="lsp1", k=10, gamma=8, gamma0=4, mu=0.3, beta=0.5)
+    assert r1 >= r0 - 1e-9
+    assert (np.asarray(res1.n_superblocks_visited) >= np.asarray(res0.n_superblocks_visited)).all()
+
+
+def test_lsp_never_fails_sp_does(tiny_index, tiny_qb, oracle):
+    """Erroneous pruning (paper Fig. 2): small μ kills SP on some queries; the top-γ
+    guarantee keeps every LSP variant alive."""
+    oracle_ids, _ = oracle
+    _, sp = _recall(tiny_index, tiny_qb, oracle_ids, variant="sp", k=10, gamma=16, gamma0=4, mu=0.1, eta=1.0, beta=1.0)
+    _, l1 = _recall(tiny_index, tiny_qb, oracle_ids, variant="lsp1", k=10, gamma=16, gamma0=4, mu=0.1, eta=1.0, beta=1.0)
+    assert failed_queries(np.asarray(sp.doc_ids)) > 0.0, "SP should fail at mu=0.1"
+    assert failed_queries(np.asarray(l1.doc_ids)) == 0.0
+
+
+def test_sbmax_is_upper_bound(tiny_index, tiny_qb, oracle):
+    """Quantized SBMax must upper-bound the true best doc score in each superblock."""
+    import jax.numpy as jnp
+
+    from repro.core.query import scatter_dense
+    from repro.core.scoring import score_positions_fwd
+
+    qb = tiny_qb
+    sbmax = np.asarray(core_ops.sbmax(tiny_index.sb_bounds, qb.tids, qb.ws, impl="ref"))
+    qdense = scatter_dense(qb)
+    span = tiny_index.b * tiny_index.c
+    n_pad = tiny_index.doc_remap.shape[0]
+    pos = jnp.arange(n_pad)[None, :].repeat(qb.tids.shape[0], 0)
+    scores = np.asarray(score_positions_fwd(tiny_index, qdense, pos))
+    scores = np.where(scores < -1e29, 0.0, scores)
+    per_sb = scores.reshape(scores.shape[0], -1, span).max(axis=2)
+    assert (sbmax + 1e-3 >= per_sb).all(), (sbmax - per_sb).min()
+
+
+def test_block_budget_degrades_gracefully(tiny_index, tiny_qb, oracle):
+    oracle_ids, _ = oracle
+    full, _ = _recall(tiny_index, tiny_qb, oracle_ids, variant="lsp0", k=10, gamma=32, gamma0=4, beta=0.5)
+    tight, _ = _recall(
+        tiny_index, tiny_qb, oracle_ids,
+        variant="lsp0", k=10, gamma=32, gamma0=4, beta=0.5, block_budget=16,
+    )
+    assert tight <= full + 1e-9
+    assert tight > 0.2  # still returns sensible results
+
+
+def test_flat_inv_matches_fwd_scoring(tiny_index, tiny_qb):
+    cfg_f = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5, doc_layout="fwd")
+    cfg_i = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5, doc_layout="flat")
+    rf = retrieve(tiny_index, tiny_qb, cfg_f, impl="ref")
+    ri = retrieve(tiny_index, tiny_qb, cfg_i, impl="ref")
+    assert (np.sort(np.asarray(rf.doc_ids), 1) == np.sort(np.asarray(ri.doc_ids), 1)).mean() > 0.99

@@ -1,0 +1,53 @@
+"""Property tests: bit-packing roundtrip + bound-quantization safety."""
+
+import numpy as np
+import proptest as pt
+
+from repro.index.pack import pack_rows, pack_rows_strided, unpack_rows, unpack_rows_strided
+from repro.index.quantize import dequantize, quantize_bounds, quantize_weights
+
+
+@pt.given(
+    bits=pt.sampled_from([4, 8]),
+    granule=pt.sampled_from([1, 2, 4, 16, 128]),
+    rows=pt.integers(1, 9),
+    n=pt.integers(1, 700),
+    seed=pt.integers(0, 10_000),
+)
+def test_strided_pack_roundtrip(bits, granule, rows, n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 1 << bits, (rows, n)).astype(np.uint8)
+    packed = pack_rows_strided(q, bits, granule)
+    out = unpack_rows_strided(packed, bits, granule, n)
+    np.testing.assert_array_equal(out, q)
+
+
+@pt.given(
+    bits=pt.sampled_from([4, 8]),
+    rows=pt.integers(1, 6),
+    n=pt.integers(1, 300),
+    seed=pt.integers(0, 10_000),
+)
+def test_plain_pack_roundtrip(bits, rows, n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 1 << bits, (rows, n)).astype(np.uint8)
+    np.testing.assert_array_equal(unpack_rows(pack_rows(q, bits), bits, n), q)
+
+
+@pt.given(bits=pt.sampled_from([4, 8]), n=pt.integers(1, 2000), seed=pt.integers(0, 10_000))
+def test_bound_quantization_never_underestimates(bits, n, seed):
+    """Round-up quantization must keep dequant(q) >= w (pruning safety, §4.3)."""
+    rng = np.random.default_rng(seed)
+    w = rng.gamma(2.0, 1.0, n).astype(np.float32)
+    q, scale = quantize_bounds(w, bits)
+    deq = dequantize(q, scale)
+    assert (deq >= w - 1e-5).all(), (deq.min(), w.max())
+
+
+@pt.given(bits=pt.sampled_from([8]), n=pt.integers(1, 2000), seed=pt.integers(0, 10_000))
+def test_weight_quantization_error_bounded(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.gamma(2.0, 1.0, n).astype(np.float32)
+    q, scale = quantize_weights(w, bits)
+    err = np.abs(dequantize(q, scale) - w)
+    assert (err <= scale / 2 + 1e-6).all()

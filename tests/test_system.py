@@ -1,0 +1,85 @@
+"""End-to-end system behaviour: corpus -> index -> LSP retrieval -> metrics, plus the
+serving engine and the γ order-statistics analysis."""
+
+import numpy as np
+
+from repro.core import RetrievalConfig, jit_retrieve, retrieve
+from repro.eval.metrics import mrr_at_k, recall_vs_oracle
+
+
+def test_end_to_end_quality(tiny_index, tiny_qb, oracle):
+    """Recommended-style config reaches high recall with a small visited fraction."""
+    oracle_ids, _ = oracle
+    ns = tiny_index.n_superblocks
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=max(8, ns // 3), gamma0=4, beta=0.5)
+    res = retrieve(tiny_index, tiny_qb, cfg, impl="ref")
+    rec = recall_vs_oracle(np.asarray(res.doc_ids), oracle_ids)
+    assert rec > 0.75, rec
+    visited_frac = float(np.asarray(res.n_superblocks_visited).mean()) / ns
+    assert visited_frac < 0.5, "pruning must actually skip most superblocks"
+    mrr = mrr_at_k(np.asarray(res.doc_ids), oracle_ids[:, 0], k=10)
+    assert mrr > 0.7
+
+
+def test_jit_retrieve_compiles_and_matches(tiny_index, tiny_qb):
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5)
+    eager = retrieve(tiny_index, tiny_qb, cfg, impl="ref")
+    fn = jit_retrieve(tiny_index, cfg, impl="ref")
+    jitted = fn(tiny_qb)
+    np.testing.assert_array_equal(np.asarray(eager.doc_ids), np.asarray(jitted.doc_ids))
+
+
+def test_serving_engine(tiny_index, tiny_corpus):
+    from repro.core.query import QueryBatch
+    from repro.serve.engine import RetrievalEngine
+
+    cfg_c, corpus, queries = tiny_corpus
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5)
+    retr = jit_retrieve(tiny_index, cfg, impl="ref")
+
+    def retriever(qb: QueryBatch):
+        res = retr(qb)
+        return res.doc_ids, res.scores
+
+    eng = RetrievalEngine(retriever, corpus.vocab, max_batch=4, nq_max=64, max_wait_ms=2.0)
+    futs = [eng.submit(t, w) for t, w in queries[:8]]
+    outs = [f.result(timeout=120) for f in futs]
+    eng.shutdown()
+    assert len(outs) == 8
+    ids0, scores0 = outs[0]
+    assert ids0.shape == (10,)
+    stats = eng.stats.summary()
+    assert stats["requests"] == 8 and stats["batches"] >= 2
+    assert stats["p99_ms"] > 0
+
+
+def test_gamma_analysis_pipeline(tiny_index, tiny_qb, oracle):
+    from repro.core import ops
+    from repro.core.gamma_analysis import (
+        contains_topk,
+        p_contains_topk_by_bin,
+        p_gamma_contains,
+        sbmax_ratio_distribution,
+    )
+
+    oracle_ids, _ = oracle
+    sbmax = np.asarray(ops.sbmax(tiny_index.sb_bounds, tiny_qb.tids, tiny_qb.ws, "ref"))
+    edges, cdf, ratios = sbmax_ratio_distribution(sbmax, 32)
+    cont = contains_topk(tiny_index, oracle_ids)
+    prb = p_contains_topk_by_bin(ratios, cont, edges)
+    gammas = np.array([1, 4, 16, 64])
+    pg = p_gamma_contains(gammas, tiny_index.n_superblocks, edges, cdf, prb)
+    # near-monotone: empirical P(R|bin) is binned, so tiny local wiggles are allowed
+    assert (np.diff(pg) <= 0.02).all(), f"P_gamma(R) must decrease: {pg}"
+    assert pg[0] > pg[-1], f"must globally decrease: {pg}"
+    assert 0 <= pg.min() and pg.max() <= 1
+
+
+def test_betainc_against_known_values():
+    from repro.core.gamma_analysis import betainc, order_stat_cdf
+
+    np.testing.assert_allclose(betainc(2, 2, 0.5), 0.5, atol=1e-8)
+    np.testing.assert_allclose(betainc(1, 1, 0.3), 0.3, atol=1e-8)
+    np.testing.assert_allclose(betainc(5, 1, 0.9), 0.9**5, atol=1e-8)
+    # max order statistic: P(X_(1) <= x) = F^n
+    np.testing.assert_allclose(order_stat_cdf(1, 10, np.array([0.9])), [0.9**10], atol=1e-9)
