@@ -70,13 +70,18 @@ def oracle_for(idx, k: int):
     return np.asarray(ids)
 
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Mean wall time per call in microseconds (blocks on jax outputs)."""
+def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on jax outputs).
+
+    Median over individually-timed calls, not mean-of-total: shared CI boxes show
+    multi-ms scheduling spikes that a mean folds into every row."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
         jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6

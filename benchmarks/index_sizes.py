@@ -12,7 +12,9 @@ from repro.index.layout import (
     compact_inv_bytes,
     dense_bounds_bytes,
     flat_inv_bytes,
+    flatq_bytes,
     fwd_bytes,
+    fwdq_bytes,
     packed_bounds_bytes,
     sparse_bounds_bytes,
 )
@@ -47,6 +49,8 @@ def run() -> list[Row]:
             "doc/compact_inv": compact_inv_bytes(nnz, idx.n_blocks, _np.full(idx.n_blocks, vpb / idx.n_blocks)),
             "doc/flat_inv": flat_inv_bytes(int(idx.docs_flat.tids.shape[0]), idx.n_blocks),
             "doc/fwd": fwd_bytes(int(idx.docs_fwd.tids.shape[0]), idx.docs_fwd.t_max),
+            "doc/fwdq": fwdq_bytes(idx.docs_fwdq),
+            **({"doc/flatq": flatq_bytes(idx.docs_flatq)} if idx.docs_flatq is not None else {}),
             "bounds/dense8": dense_bounds_bytes(cor.vocab, idx.n_blocks + idx.n_superblocks, 8),
             "bounds/sparse": sparse_bounds_bytes(vpb),
             "bounds/simdbp8": packed_bounds_bytes(idx8.blk_bounds) + packed_bounds_bytes(idx8.sb_bounds),

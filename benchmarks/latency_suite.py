@@ -1,13 +1,25 @@
 """Paper Table 2: mean retrieval time + recall of LSP/0 vs SP / BMP / exact, at the
-two fixed configurations (no grid search)."""
+two fixed configurations (no grid search).
+
+Also emits ``BENCH_latency.json``: lsp0_cfg1 at impl = legacy (the pre-doc_score
+position-major jnp scoring), ref (fused-dispatch block-major jnp), and kernel
+(Pallas, interpret off-TPU) — the perf trajectory artifact tracked by CI. Interpret
+timings measure the Python-interpreted kernel, not TPU perf; they are recorded for
+parity/trend only.
+"""
 
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
 from benchmarks.common import K_DEFAULT, Row, index, oracle, query_batch, time_fn
 from repro.core import RetrievalConfig, jit_retrieve, retrieve_exact
 from repro.eval.metrics import recall_vs_oracle
+
+BENCH_JSON = os.environ.get("BENCH_LATENCY_JSON", "BENCH_latency.json")
 
 
 def run() -> list[Row]:
@@ -48,6 +60,51 @@ def run() -> list[Row]:
             0.0,
             f"lsp_vs_sp_speedup={sp.us_per_call / lsp.us_per_call:.2f}x;"
             f"lsp_vs_bmp_speedup={bmp.us_per_call / lsp.us_per_call:.2f}x",
+        )
+    )
+    rows.extend(_impl_trajectory(idx, qb, oracle_ids))
+    return rows
+
+
+def _impl_trajectory(idx, qb, oracle_ids) -> list[Row]:
+    """lsp0_cfg1 across scoring impls -> BENCH_latency.json + CSV rows."""
+    ns = idx.n_superblocks
+    cfg = RetrievalConfig("lsp0", k=K_DEFAULT, gamma=max(8, ns // 8), gamma0=8, beta=0.33)
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    impls = {
+        "legacy": dict(iters=3),  # pre-doc_score position-major jnp scoring
+        "ref": dict(iters=3),  # fused score_gather dispatch, block-major jnp
+        "kernel": dict(iters=1),  # Pallas doc_score (interpret mode off-TPU: slow)
+    }
+    if smoke:
+        impls.pop("kernel")  # interpret timing is minutes-scale; skip in CI smoke
+    entries = []
+    for impl, opts in impls.items():
+        fn = jit_retrieve(idx, cfg, impl=impl)
+        us = time_fn(fn, qb, warmup=1, iters=opts["iters"])
+        rec = recall_vs_oracle(np.asarray(fn(qb).doc_ids), oracle_ids)
+        entries.append({"impl": impl, "us_per_call": us, "recall": rec})
+    by = {e["impl"]: e for e in entries}
+    speedup = by["legacy"]["us_per_call"] / by["ref"]["us_per_call"]
+    recall_delta = abs(by["ref"]["recall"] - by["legacy"]["recall"])
+    payload = {
+        "config": "lsp0_cfg1",
+        "backend": "cpu-interpret" if "kernel" in by else "cpu",
+        "rows": entries,
+        "speedup_ref_vs_legacy": speedup,
+        "recall_delta_ref_vs_legacy": recall_delta,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows = [
+        Row(f"table2/lsp0_cfg1_impl_{e['impl']}", e["us_per_call"], f"recall={e['recall']:.3f}")
+        for e in entries
+    ]
+    rows.append(
+        Row(
+            "table2/fused_vs_prepr",
+            0.0,
+            f"speedup={speedup:.2f}x;recall_delta={recall_delta:.4f};json={BENCH_JSON}",
         )
     )
     return rows

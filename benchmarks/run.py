@@ -3,15 +3,22 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all tables
   PYTHONPATH=src python -m benchmarks.run table5 fig2  # subset
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: table2 only, fast settings
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 
 
 def main() -> None:
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    if smoke:
+        args = [a for a in args if a != "--smoke"]
+        os.environ.setdefault("BENCH_SMOKE", "1")
     from benchmarks import (
         blocksize_sweep,
         compression_ablation,
@@ -37,7 +44,10 @@ def main() -> None:
         "fig4": gamma_confidence.run,
         "dense": dense_retrieval.run,
     }
-    selected = sys.argv[1:] or list(suites)
+    selected = args or (["table2"] if smoke else list(suites))
+    unknown = [s for s in selected if s not in suites]
+    if unknown:
+        sys.exit(f"unknown suite(s) {unknown}; available: {', '.join(suites)} (or --smoke)")
     print("name,us_per_call,derived")
     for name in selected:
         t0 = time.time()

@@ -44,11 +44,7 @@ def main() -> None:
             return ids, vals
         batch_q = 4  # query batch must divide the data axis
     else:
-        fn = jit_retrieve(idx, cfg)
-
-        def retriever(qb: QueryBatch):
-            res = fn(qb)
-            return res.doc_ids, res.scores
+        retriever = jit_retrieve(idx, cfg)  # RetrievalResult plugs into the engine
         batch_q = 8
 
     eng = RetrievalEngine(retriever, corpus.vocab, max_batch=batch_q, nq_max=64, max_wait_ms=2.0)

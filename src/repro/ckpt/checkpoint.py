@@ -19,18 +19,46 @@ from __future__ import annotations
 import io
 import os
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd is optional — containers without it fall back to stdlib zlib
+    import zstandard
+except ImportError:  # pragma: no cover
+    zstandard = None
 
 from repro.common.tree_utils import flatten_with_paths
 
 
 def _leaf_paths(tree: Any) -> dict[str, Any]:
     return flatten_with_paths(tree)
+
+
+# Compressed-array file name per codec; restore probes both so checkpoints written
+# with either codec stay readable.
+_ZSTD_NAME = "arrays.npz.zst"
+_ZLIB_NAME = "arrays.npz.zz"
+
+
+def _compress(data: bytes) -> tuple[str, bytes]:
+    if zstandard is not None:
+        return _ZSTD_NAME, zstandard.ZstdCompressor(level=3).compress(data)
+    return _ZLIB_NAME, zlib.compress(data, 3)
+
+
+def _decompress(path: str) -> bytes:
+    zst = os.path.join(path, _ZSTD_NAME)
+    if os.path.exists(zst):
+        if zstandard is None:
+            raise RuntimeError(f"{zst} needs the zstandard module, which is unavailable")
+        with open(zst, "rb") as f:
+            return zstandard.ZstdDecompressor().decompress(f.read())
+    with open(os.path.join(path, _ZLIB_NAME), "rb") as f:
+        return zlib.decompress(f.read())
 
 
 def save_checkpoint(
@@ -53,8 +81,8 @@ def save_checkpoint(
         os.makedirs(tmp, exist_ok=True)
         buf = io.BytesIO()
         np.savez(buf, **host)
-        comp = zstandard.ZstdCompressor(level=3).compress(buf.getvalue())
-        with open(os.path.join(tmp, "arrays.npz.zst"), "wb") as f:
+        name, comp = _compress(buf.getvalue())
+        with open(os.path.join(tmp, name), "wb") as f:
             f.write(comp)
             f.flush()
             os.fsync(f.fileno())
@@ -112,8 +140,7 @@ def restore_checkpoint(directory: str, target: Any, step: Optional[int] = None, 
         if step is None:
             raise FileNotFoundError(f"no complete checkpoint under {directory}")
     path = os.path.join(directory, f"step_{step}")
-    with open(os.path.join(path, "arrays.npz.zst"), "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    raw = _decompress(path)
     arrays = dict(np.load(io.BytesIO(raw)))
 
     flat_target = _leaf_paths(target)

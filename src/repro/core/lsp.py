@@ -19,11 +19,18 @@ Variant pruning rules (paper §4.1), applied to the SBMax-sorted candidate list:
   LSP/2  LSP/0 ∪ { X : SBMax(X) > θ/μ or SBavg(X) > θ/η }   (SP rule + guarantee)
   SP     { X : SBMax(X) > θ/μ or SBavg(X) > θ/η }  — no guarantee; can fail (Fig. 2)
   BMP    no superblock level: BoundSum over all blocks, prune at θ/η.
+
+Both scoring rounds (round-0 superblock expansion and phase-3 block scoring) route
+through ``score_blocks`` -> ``ops.score_gather``: one dispatch, ref/kernel parity,
+fwd or flat quantized operands (DESIGN.md §3-4).
+
+impl: "auto" | "ref" | "kernel" as elsewhere, plus "legacy" — the seed's
+position-major jnp scoring, kept addressable so benchmarks can track the fused
+path's speedup against the pre-doc_score baseline.
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -32,7 +39,7 @@ import jax.numpy as jnp
 from repro.core import ops
 from repro.core.config import RetrievalConfig
 from repro.core.query import QueryBatch, prune_terms, scatter_dense
-from repro.core.scoring import NEG, score_blocks_flat, score_blocks_fwd, score_positions_fwd
+from repro.core.scoring import NEG, score_blocks, score_positions_fwd
 from repro.index.layout import LSPIndex
 
 
@@ -43,24 +50,47 @@ class RetrievalResult(NamedTuple):
     n_blocks_scored: jnp.ndarray  # int32 [Q]
 
 
-def _kth_threshold(scores: jnp.ndarray, k: int) -> jnp.ndarray:
-    """θ = k-th best score (0 if fewer than k valid docs -> prunes nothing unsafely)."""
+def _kth_threshold(scores: jnp.ndarray, k: int, legacy: bool = False) -> jnp.ndarray:
+    """θ = k-th best score (0 if fewer than k valid docs -> prunes nothing unsafely).
+
+    min over the top-k (== the k-th value) instead of slicing [:, -1]: consuming all
+    k lanes keeps XLA on its fast TopK lowering — the sliced form gets rewritten to a
+    full variadic sort, ~60x slower on CPU for round-0-sized inputs. ``legacy`` keeps
+    the sliced form so impl="legacy" reproduces the pre-doc_score execution profile.
+    """
     vals, _ = jax.lax.top_k(scores, min(k, scores.shape[-1]))
-    return jnp.maximum(vals[:, -1], 0.0)
+    if legacy:
+        return jnp.maximum(vals[:, -1], 0.0)
+    return jnp.maximum(vals.min(axis=-1), 0.0)
 
 
-def _score_superblock_docs(index: LSPIndex, qdense, sb_idx):
-    """Score every document of the given superblocks: [Q, S*c*b] scores + positions."""
-    span = index.c * index.b
-    pos = sb_idx[:, :, None] * span + jnp.arange(span)[None, None, :]
-    pos = pos.reshape(pos.shape[0], -1)
-    return score_positions_fwd(index, qdense, pos), pos
+def _expand_superblocks(sb_idx: jnp.ndarray, c: int) -> jnp.ndarray:
+    """Superblock ids [Q, S] -> their block ids [Q, S*c]."""
+    blk = sb_idx[:, :, None] * c + jnp.arange(c)[None, None, :]
+    return blk.reshape(blk.shape[0], -1)
+
+
+def _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, cfg, impl):
+    """Layout + impl routing for both scoring rounds, including the legacy baseline."""
+    if impl == "legacy":
+        b = index.b
+        pos = blk_ids[:, :, None] * b + jnp.arange(b)[None, None, :]
+        pos = pos.reshape(pos.shape[0], -1)
+        scores = score_positions_fwd(index, qdense, pos)
+        mask = jnp.repeat(blk_mask, b, axis=1)
+        return jnp.where(mask, scores, NEG), pos
+    return score_blocks(index, qdense, blk_ids, blk_mask, cfg.doc_layout, impl)
+
+
+_IMPLS = ("auto", "ref", "kernel", "legacy")
 
 
 def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: str = "auto") -> RetrievalResult:
+    assert impl in _IMPLS, f"impl must be one of {_IMPLS}, got {impl!r}"
     variant = cfg.variant
     if variant == "bmp":
         return _retrieve_bmp(index, qb_full, cfg, impl)
+    bounds_impl = "ref" if impl == "legacy" else impl
 
     ns, c = index.n_superblocks, index.c
     gamma = min(cfg.gamma, ns)
@@ -70,12 +100,15 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
     qdense = scatter_dense(qb_full)
 
     # ---- phase 1: superblock bounds (paper Eq. 1), full sorted candidate list
-    sbmax = ops.sbmax(index.sb_bounds, qb.tids, qb.ws, impl)  # [Q, NS]
+    sbmax = ops.sbmax(index.sb_bounds, qb.tids, qb.ws, bounds_impl)  # [Q, NS]
     top_vals, top_idx = jax.lax.top_k(sbmax, budget)
 
     # ---- round 0: seed θ from the guaranteed head of the list
-    scores0, pos0 = _score_superblock_docs(index, qdense, top_idx[:, :g0])
-    theta = _kth_threshold(scores0, cfg.k)  # [Q]
+    blk0 = _expand_superblocks(top_idx[:, :g0], c)  # [Q, g0*c]
+    scores0, pos0 = _score_blocks_dispatch(
+        index, qdense, blk0, jnp.ones_like(blk0, bool), cfg, impl
+    )
+    theta = _kth_threshold(scores0, cfg.k, legacy=impl == "legacy")  # [Q]
 
     # ---- variant eligibility over ranks [g0, budget)
     rank = jnp.arange(budget)[None, :]
@@ -87,7 +120,7 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
         eligible = in_gamma | (top_vals > th / cfg.mu)
     elif variant in ("lsp2", "sp"):
         assert index.sb_avg is not None, f"{variant} needs superblock averages in the index"
-        sbavg = ops.sbmax(index.sb_avg, qb.tids, qb.ws, impl)
+        sbavg = ops.sbmax(index.sb_avg, qb.tids, qb.ws, bounds_impl)
         avg_vals = jnp.take_along_axis(sbavg, top_idx, axis=1)
         sp_rule = (top_vals > th / cfg.mu) | (avg_vals > th / cfg.eta)
         eligible = (in_gamma | sp_rule) if variant == "lsp2" else sp_rule
@@ -103,7 +136,7 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
 
     # ---- phase 2: block bounds for surviving superblocks, prune at θ/η
     blk_bounds = ops.gathered_block_bounds(
-        index.blk_bounds, c, qb.tids, qb.ws, top_idx, impl
+        index.blk_bounds, c, qb.tids, qb.ws, top_idx, bounds_impl
     )  # [Q, budget, c]
     blk_bounds = jnp.where(eligible[:, :, None], blk_bounds, NEG)
     blk_keep = blk_bounds > th[:, :, None] / cfg.eta
@@ -117,8 +150,7 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
     blk_mask = bvals > NEG / 2
 
     # ---- phase 3: document scoring
-    score_fn = score_blocks_flat if cfg.doc_layout == "flat" else score_blocks_fwd
-    scores1, pos1 = score_fn(index, qdense, blk_ids, blk_mask)
+    scores1, pos1 = _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, cfg, impl)
 
     # ---- merge rounds, final top-k
     all_scores = jnp.concatenate([scores0, scores1], axis=1)
@@ -128,31 +160,38 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
     ids = index.doc_remap[jnp.clip(pos_k, 0, index.doc_remap.shape[0] - 1)]
     ids = jnp.where(vals > NEG / 2, ids, -1)
 
+    # ---- block accounting: phase-3 blocks inside a round-0 superblock (possible for
+    # the sp variant, whose eligibility does not exclude ranks < g0) are re-scores of
+    # round-0 work, not additional visited blocks — count distinct blocks only.
+    in_round0 = (blk_ids[:, :, None] // c == top_idx[:, None, :g0]).any(axis=2)
+    n_blocks_scored = g0 * c + (blk_mask & ~in_round0).sum(axis=1, dtype=jnp.int32)
+
     return RetrievalResult(
         doc_ids=ids,
         scores=jnp.where(vals > NEG / 2, vals, jnp.float32(NEG)),
         n_superblocks_visited=g0 + eligible.sum(axis=1, dtype=jnp.int32),
-        n_blocks_scored=blk_mask.sum(axis=1, dtype=jnp.int32) + g0 * c,
+        n_blocks_scored=n_blocks_scored,
     )
 
 
 def _retrieve_bmp(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: str) -> RetrievalResult:
     """BMP baseline: single-level block filtering (Mallia et al. '24) on our layout."""
     nb, b = index.n_blocks, index.b
+    bounds_impl = "ref" if impl == "legacy" else impl
     qb = prune_terms(qb_full, cfg.beta)
     qdense = scatter_dense(qb_full)
 
-    boundsum = ops.sbmax(index.blk_bounds, qb.tids, qb.ws, impl)  # [Q, NB]
+    boundsum = ops.sbmax(index.blk_bounds, qb.tids, qb.ws, bounds_impl)  # [Q, NB]
     b0 = min(max(cfg.gamma0 * index.c, cfg.k // b + 1), nb)
     v0, i0 = jax.lax.top_k(boundsum, b0)
-    scores0, pos0 = score_blocks_fwd(index, qdense, i0, jnp.ones_like(i0, bool))
-    theta = _kth_threshold(scores0, cfg.k)
+    scores0, pos0 = _score_blocks_dispatch(index, qdense, i0, jnp.ones_like(i0, bool), cfg, impl)
+    theta = _kth_threshold(scores0, cfg.k, legacy=impl == "legacy")
 
     budget = min(cfg.block_budget or 4 * cfg.gamma * index.c, nb)
     vals, idx = jax.lax.top_k(boundsum, budget)
     rank = jnp.arange(budget)[None, :]
     eligible = (vals > theta[:, None] / cfg.eta) & (rank >= b0)
-    scores1, pos1 = score_blocks_fwd(index, qdense, idx, eligible)
+    scores1, pos1 = _score_blocks_dispatch(index, qdense, idx, eligible, cfg, impl)
 
     all_scores = jnp.concatenate([scores0, scores1], axis=1)
     all_pos = jnp.concatenate([pos0, pos1], axis=1)

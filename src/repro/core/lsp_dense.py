@@ -32,8 +32,8 @@ NEG = -1e30
 class PackedMinMax(NamedTuple):
     max_packed: jnp.ndarray  # uint32 [D, W]
     min_packed: jnp.ndarray
-    scale: float
-    zero: float
+    scale: object  # float (global) or float32 [D] (per-dimension rows)
+    zero: object  # float or float32 [D]
     n: int
     granule_words: int
     bits: int
@@ -63,17 +63,26 @@ class DenseIndexConfig:
 
 
 def _quant_minmax(mx: np.ndarray, mn: np.ndarray, bits: int, granule: int) -> PackedMinMax:
+    """Per-dimension affine quantization of the [D, N] min/max bound rows.
+
+    A single global (scale, zero) wastes the few 4-bit levels on the widest dimension
+    and flattens everyone else's bounds to near-constants — the superblock ranking
+    degrades badly. Per-dimension scales keep ranking near-8-bit; they fold into the
+    query (q_d * scale_d) so the dequant GEMMs stay scale-free, and the zero-point
+    correction is a single q . zero dot product.
+    """
     levels = (1 << bits) - 1
-    lo, hi = float(mn.min()), float(mx.max())
-    scale = max((hi - lo) / levels, 1e-9)
-    zero = lo
-    qmax = np.clip(np.ceil((mx - zero) / scale), 0, levels).astype(np.uint8)  # round up
-    qmin = np.clip(np.floor((mn - zero) / scale), 0, levels).astype(np.uint8)  # round down
+    lo = mn.min(axis=1, keepdims=True)
+    hi = mx.max(axis=1, keepdims=True)
+    scale = np.maximum((hi - lo) / levels, 1e-9).astype(np.float32)
+    zero = lo.astype(np.float32)
+    qmax = np.clip(np.ceil((mx - zero) / scale - 1e-9), 0, levels).astype(np.uint8)  # round up
+    qmin = np.clip(np.floor((mn - zero) / scale + 1e-9), 0, levels).astype(np.uint8)  # round down
     return PackedMinMax(
         jnp.asarray(pack_rows_strided(qmax, bits, granule)),
         jnp.asarray(pack_rows_strided(qmin, bits, granule)),
-        scale,
-        zero,
+        jnp.asarray(scale[:, 0]),
+        jnp.asarray(zero[:, 0]),
         mx.shape[1],
         granule,
         bits,
@@ -89,7 +98,7 @@ def build_dense_index(cands: np.ndarray, cfg: DenseIndexConfig) -> DenseLSPIndex
     if n > b:
         assign, cent = clustering.kmeans(norm.astype(np.float32), k, cfg.kmeans_iters, cfg.seed)
         dist = np.einsum("nd,nd->n", norm - cent[assign], norm - cent[assign])
-        order = np.lexsort((dist, assign))
+        order = np.lexsort((dist, clustering.chain_order(cent)[assign]))
     else:
         order = np.arange(n)
     ns = -(-n // (b * c))
@@ -128,9 +137,14 @@ def build_dense_index(cands: np.ndarray, cfg: DenseIndexConfig) -> DenseLSPIndex
 
 
 def _bounds(pm: PackedMinMax, q: jnp.ndarray, interpret_ok: bool = True) -> jnp.ndarray:
-    """[B, n] upper bounds: q+ . maxW + q- . minW (affine dequant, zero-point corrected)."""
-    qp = jnp.maximum(q, 0.0)
-    qm = jnp.minimum(q, 0.0)
+    """[B, n] upper bounds: q+ . maxW + q- . minW (affine dequant, zero-point corrected).
+
+    Per-dimension scales fold into the query rows (contraction is over D), keeping the
+    dequant GEMMs scale-free; the zero-point term is the dot product q . zero.
+    """
+    qs = q * pm.scale  # broadcasts for scalar or per-dim [D] scale
+    qp = jnp.maximum(qs, 0.0)
+    qm = jnp.minimum(qs, 0.0)
     if jax.default_backend() == "tpu":
         from repro.kernels.dequant_matmul.kernel import dequant_matmul_pallas
 
@@ -141,8 +155,8 @@ def _bounds(pm: PackedMinMax, q: jnp.ndarray, interpret_ok: bool = True) -> jnp.
         raw = dequant_matmul_ref(qp, pm.max_packed, pm.bits) + dequant_matmul_ref(
             qm, pm.min_packed, pm.bits
         )
-    corr = q.sum(axis=1, keepdims=True) * pm.zero
-    return raw[:, : pm.n] * pm.scale + corr
+    corr = (q * pm.zero).sum(axis=1, keepdims=True)
+    return raw[:, : pm.n] + corr
 
 
 def retrieve_dense(index: DenseLSPIndex, q: jnp.ndarray, cfg: RetrievalConfig):
@@ -161,8 +175,9 @@ def retrieve_dense(index: DenseLSPIndex, q: jnp.ndarray, cfg: RetrievalConfig):
     pos0 = top_idx[:, :g0, None] * span + jnp.arange(span)[None, None, :]
     pos0 = pos0.reshape(bq, -1)
     s0 = _score_positions(index, q, pos0)
+    # min over the top-k == k-th value; keeps XLA's fast TopK lowering (see lsp.py)
     theta_vals, _ = jax.lax.top_k(s0, min(cfg.k, s0.shape[1]))
-    theta = theta_vals[:, -1]
+    theta = theta_vals.min(axis=-1)
 
     rank = jnp.arange(budget)[None, :]
     eligible = (rank < gamma) & (top_vals >= theta[:, None])
@@ -178,12 +193,13 @@ def retrieve_dense(index: DenseLSPIndex, q: jnp.ndarray, cfg: RetrievalConfig):
 
     vmax = unpack_strided(sel_max.transpose(1, 2, 0, 3), index.blk.bits, cw)  # [B, S, D, c]
     vmin = unpack_strided(sel_min.transpose(1, 2, 0, 3), index.blk.bits, cw)
-    qp = jnp.maximum(q, 0.0)
-    qm = jnp.minimum(q, 0.0)
+    qs = q * index.blk.scale  # per-dim scales fold into the query (see _bounds)
+    qp = jnp.maximum(qs, 0.0)
+    qm = jnp.minimum(qs, 0.0)
     blk_bound = (
         jnp.einsum("bd,bsdc->bsc", qp, vmax.astype(jnp.float32))
         + jnp.einsum("bd,bsdc->bsc", qm, vmin.astype(jnp.float32))
-    ) * index.blk.scale + (q.sum(1) * index.blk.zero)[:, None, None]
+    ) + ((q * index.blk.zero).sum(1))[:, None, None]
     blk_bound = jnp.where(eligible[:, :, None], blk_bound, NEG)
     keep = blk_bound > theta[:, None, None] / cfg.eta
     flat = jnp.where(keep, blk_bound, NEG).reshape(bq, -1)

@@ -41,3 +41,38 @@ def gathered_block_bounds(
     from repro.kernels.boundsum_gather.ops import boundsum_gather_op
 
     return boundsum_gather_op(pb, c, tids, ws, sel_sb, interpret=not _on_tpu())
+
+
+def score_gather(
+    index,
+    qdense: jnp.ndarray,
+    blk_ids: jnp.ndarray,
+    layout: str = "fwd",
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Per-document scores of the selected blocks: [Q, S] block ids -> [Q, S, b].
+
+    The single dispatch point for document scoring (round-0 superblock expansion and
+    phase-3 block scoring both route here). Scores carry the per-block dequant scales;
+    padded/ineligible blocks are NOT masked here — that is score_blocks' job.
+    """
+    operand = index.docs_flatq if layout == "flat" else index.docs_fwdq
+    assert operand is not None, (
+        f"index has no quantized '{layout}' scoring operand (build_flat_inv off?)"
+    )
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        from repro.kernels.doc_score import ref as ds_ref
+
+        blk_c = jnp.clip(blk_ids, 0, index.n_blocks - 1)
+        raw = (
+            ds_ref.doc_score_flat_ref(operand, qdense, blk_c)
+            if layout == "flat"
+            else ds_ref.doc_score_fwd_ref(operand, qdense, blk_c)
+        )
+        return raw * operand.scales[blk_c][:, :, None]
+    from repro.kernels.doc_score.ops import doc_score_flat_op, doc_score_fwd_op
+
+    interpret = not _on_tpu()
+    if layout == "flat":
+        return doc_score_flat_op(operand, qdense, blk_ids, interpret=interpret)
+    return doc_score_fwd_op(operand, qdense, blk_ids, interpret=interpret)

@@ -1,7 +1,13 @@
-"""Document scoring over candidate positions (forward and flat-inverted layouts).
+"""Document scoring over candidate blocks/positions (fwd and flat layouts).
 
 Scoring uses the FULL query (dense-scattered) — the paper follows Seismic: pruned
 query for candidate generation, entire query for scoring (§4.3 "Fwd").
+
+All block scoring routes through ``score_blocks`` -> ``repro.core.ops.score_gather``
+(one dispatch with ref/kernel parity over the quantized block-major operands);
+``score_positions_fwd`` remains for position-addressed consumers (the exact oracle,
+threshold sampling) and reads the same per-block-quantized weights so every path in
+the system scores with identical arithmetic.
 """
 
 from __future__ import annotations
@@ -9,7 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.index.layout import FlatInv, FwdDocs, LSPIndex
+from repro.core import ops
+from repro.index.layout import FwdDocsQ, LSPIndex
 
 NEG = -1e30
 
@@ -21,55 +28,36 @@ def score_positions_fwd(
 
     Invalid/padded positions (remap sentinel) score NEG so they never reach top-k.
     """
-    fwd: FwdDocs = index.docs_fwd
-    pos_c = jnp.clip(pos, 0, fwd.tids.shape[0] - 1)
-    tids = fwd.tids[pos_c]  # [Q, D, T] int32
-    ws = fwd.ws[pos_c].astype(jnp.float32)  # [Q, D, T]
+    fwdq: FwdDocsQ = index.docs_fwdq
+    b = index.b
+    n_pad = index.doc_remap.shape[0]
+    pos_c = jnp.clip(pos, 0, n_pad - 1)
+    blk, did = pos_c // b, pos_c % b
+    tids = fwdq.tids[blk, did]  # [Q, D, T] int32
+    ws = fwdq.ws[blk, did].astype(jnp.float32)  # [Q, D, T]
     qv = jax.vmap(lambda qd, t: qd[t])(qdense, tids)  # [Q, D, T]
-    scores = jnp.sum(qv * ws, axis=-1) * fwd.scale
+    scores = jnp.sum(qv * ws, axis=-1) * fwdq.scales[blk]
     valid = index.doc_remap[pos_c] < index.n_docs
     return jnp.where(valid, scores, NEG)
 
 
-def score_blocks_fwd(
-    index: LSPIndex, qdense: jnp.ndarray, blk_ids: jnp.ndarray, blk_mask: jnp.ndarray
+def score_blocks(
+    index: LSPIndex,
+    qdense: jnp.ndarray,
+    blk_ids: jnp.ndarray,
+    blk_mask: jnp.ndarray,
+    layout: str = "fwd",
+    impl: str = "auto",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Score all docs of selected blocks. blk_ids/blk_mask [Q, B] -> ([Q, B*b], pos)."""
-    b = index.b
-    pos = blk_ids[:, :, None] * b + jnp.arange(b)[None, None, :]  # [Q, B, b]
-    pos = pos.reshape(pos.shape[0], -1)
-    scores = score_positions_fwd(index, qdense, pos)
-    mask = jnp.repeat(blk_mask, b, axis=1)
-    return jnp.where(mask, scores, NEG), pos
+    """Score all docs of selected blocks. blk_ids/blk_mask [Q, S] -> ([Q, S*b], pos).
 
-
-def score_blocks_flat(
-    index: LSPIndex, qdense: jnp.ndarray, blk_ids: jnp.ndarray, blk_mask: jnp.ndarray
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Flat-Inv scoring: gather each block's postings segment, accumulate per local doc.
-
-    One random access per selected block (paper Table 9's trade-off: fewer, larger
-    contiguous reads vs the Fwd index's per-document reads).
+    Masked blocks and padded docs (remap sentinel) score NEG so they never reach
+    top-k. One call serves both layouts and both impls (ref / Pallas kernel).
     """
-    flat: FlatInv = index.docs_flat
     b = index.b
-    m = flat.max_block_nnz
-    blk_c = jnp.clip(blk_ids, 0, index.n_blocks - 1)
-    start = flat.block_ptr[blk_c]  # [Q, B]
-    count = flat.block_ptr[blk_c + 1] - start
-    offs = jnp.arange(m)[None, None, :]  # [1, 1, m]
-    idx = start[:, :, None] + offs  # [Q, B, m]
-    idx = jnp.clip(idx, 0, flat.tids.shape[0] - 1)
-    live = offs < count[:, :, None]
-    tid = flat.tids[idx]
-    did = flat.local_dids[idx]
-    w = flat.ws[idx].astype(jnp.float32)
-    qv = jax.vmap(lambda qd, t: qd[t])(qdense, tid)  # [Q, B, m]
-    contrib = jnp.where(live, qv * w, 0.0)
-    onehot = jax.nn.one_hot(did, b, dtype=jnp.float32)  # [Q, B, m, b]
-    scores = jnp.einsum("qbm,qbmd->qbd", contrib, onehot) * flat.scale  # [Q, B, b]
-
-    pos = blk_ids[:, :, None] * b + jnp.arange(b)[None, None, :]
-    valid = index.doc_remap[jnp.clip(pos, 0, index.doc_remap.shape[0] - 1)] < index.n_docs
+    scores = ops.score_gather(index, qdense, blk_ids, layout, impl)  # [Q, S, b]
+    pos = blk_ids[:, :, None] * b + jnp.arange(b)[None, None, :]  # [Q, S, b]
+    n_pad = index.doc_remap.shape[0]
+    valid = index.doc_remap[jnp.clip(pos, 0, n_pad - 1)] < index.n_docs
     scores = jnp.where(valid & blk_mask[:, :, None], scores, NEG)
     return scores.reshape(scores.shape[0], -1), pos.reshape(pos.shape[0], -1)

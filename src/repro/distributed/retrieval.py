@@ -25,7 +25,7 @@ from repro.core.config import RetrievalConfig
 from repro.core.lsp import retrieve
 from repro.core.query import QueryBatch
 from repro.core.scoring import NEG
-from repro.index.layout import FwdDocs, LSPIndex, PackedBounds
+from repro.index.layout import LSPIndex, PackedBounds
 from repro.index.pack import pack_rows_strided, unpack_rows_strided
 
 
@@ -60,14 +60,15 @@ def _local_index(index: LSPIndex, shard: int, n_shards: int) -> LSPIndex:
         sb_bounds=_pb_slice(index.sb_bounds, s0, ns_l),
         blk_bounds=_pb_slice(index.blk_bounds, b0, nb_l),
         sb_avg=None if index.sb_avg is None else _pb_slice(index.sb_avg, s0, ns_l),
-        docs_fwd=FwdDocs(
-            index.docs_fwd.tids[d0 : d0 + nd_l],
-            index.docs_fwd.ws[d0 : d0 + nd_l],
-            index.docs_fwd.scale,
-            index.docs_fwd.t_max,
-        ),
+        docs_fwd=None,  # scoring reads docs_fwdq only; don't duplicate the big layout
         docs_flat=None,  # distributed path uses the Fwd layout
         doc_remap=index.doc_remap[d0 : d0 + nd_l],
+        docs_fwdq=index.docs_fwdq._replace(
+            tids=index.docs_fwdq.tids[b0 : b0 + nb_l],
+            ws=index.docs_fwdq.ws[b0 : b0 + nb_l],
+            scales=index.docs_fwdq.scales[b0 : b0 + nb_l],
+        ),
+        docs_flatq=None,
     )
 
 
@@ -100,8 +101,9 @@ class StackedShards:
         st = lambda get: jnp.stack([get(s) for s in shards])
         self.sb_packed = st(lambda s: s.sb_bounds.packed)
         self.blk_packed = st(lambda s: s.blk_bounds.packed)
-        self.fwd_tids = st(lambda s: s.docs_fwd.tids)
-        self.fwd_ws = st(lambda s: s.docs_fwd.ws)
+        self.fwdq_tids = st(lambda s: s.docs_fwdq.tids)
+        self.fwdq_ws = st(lambda s: s.docs_fwdq.ws)
+        self.fwdq_scales = st(lambda s: s.docs_fwdq.scales)
         self.remap = st(lambda s: s.doc_remap)
 
 
@@ -113,7 +115,7 @@ def make_mesh_retriever(shards: list[LSPIndex], cfg: RetrievalConfig, mesh, impl
     meta = stacked.meta
     batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
-    def local_fn(sb_packed, blk_packed, fwd_tids, fwd_ws, remap, q_tids, q_ws):
+    def local_fn(sb_packed, blk_packed, fwdq_tids, fwdq_ws, fwdq_scales, remap, q_tids, q_ws):
         # leading shard axis has local extent 1 under shard_map
         local = LSPIndex(
             b=meta.b,
@@ -125,9 +127,13 @@ def make_mesh_retriever(shards: list[LSPIndex], cfg: RetrievalConfig, mesh, impl
             sb_bounds=meta.sb_bounds._replace(packed=sb_packed[0]),
             blk_bounds=meta.blk_bounds._replace(packed=blk_packed[0]),
             sb_avg=None,
-            docs_fwd=meta.docs_fwd._replace(tids=fwd_tids[0], ws=fwd_ws[0]),
+            docs_fwd=None,  # scoring reads the quantized block-major operand only
             docs_flat=None,
             doc_remap=remap[0],
+            docs_fwdq=meta.docs_fwdq._replace(
+                tids=fwdq_tids[0], ws=fwdq_ws[0], scales=fwdq_scales[0]
+            ),
+            docs_flatq=None,
         )
         res = retrieve(local, QueryBatch(q_tids, q_ws, meta.vocab), cfg, impl=impl)
         scores = jnp.where(res.doc_ids >= 0, res.scores, NEG)
@@ -144,8 +150,9 @@ def make_mesh_retriever(shards: list[LSPIndex], cfg: RetrievalConfig, mesh, impl
         in_specs=(
             P("model", None, None),
             P("model", None, None),
-            P("model", None, None),
-            P("model", None, None),
+            P("model", None, None, None),
+            P("model", None, None, None),
+            P("model", None),
             P("model", None),
             qspec,
             qspec,
@@ -158,8 +165,9 @@ def make_mesh_retriever(shards: list[LSPIndex], cfg: RetrievalConfig, mesh, impl
         return fn(
             stacked.sb_packed,
             stacked.blk_packed,
-            stacked.fwd_tids,
-            stacked.fwd_ws,
+            stacked.fwdq_tids,
+            stacked.fwdq_ws,
+            stacked.fwdq_scales,
             stacked.remap,
             qb.tids,
             qb.ws,

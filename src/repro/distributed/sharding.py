@@ -231,7 +231,7 @@ def gnn_specs(mesh):
 # ------------------------------------------------------------------ retrieval index
 def index_specs(index, mesh):
     """LSPIndex pytree specs: unit dims over `model`, vocab-major packed rows whole."""
-    from repro.index.layout import FlatInv, FwdDocs, LSPIndex, PackedBounds
+    from repro.index.layout import FlatDocsQ, FlatInv, FwdDocs, FwdDocsQ, LSPIndex, PackedBounds
 
     def pb(x: PackedBounds) -> PackedBounds:
         return PackedBounds(
@@ -262,4 +262,23 @@ def index_specs(index, mesh):
             scale=index.docs_flat.scale,
         ),
         doc_remap=P("model"),
+        docs_fwdq=None
+        if index.docs_fwdq is None
+        else FwdDocsQ(
+            tids=P("model", None, None),
+            ws=P("model", None, None),
+            scales=P("model"),
+            bits=index.docs_fwdq.bits,
+            t_pad=index.docs_fwdq.t_pad,
+        ),
+        docs_flatq=None
+        if index.docs_flatq is None
+        else FlatDocsQ(
+            tids=P("model", None),
+            ws=P("model", None),
+            doc_ends=P("model", None),
+            scales=P("model"),
+            bits=index.docs_flatq.bits,
+            m=index.docs_flatq.m,
+        ),
     )

@@ -1,2 +1,2 @@
-from repro.index.layout import FlatInv, FwdDocs, LSPIndex, PackedBounds
+from repro.index.layout import FlatDocsQ, FlatInv, FwdDocs, FwdDocsQ, LSPIndex, PackedBounds
 from repro.index.builder import build_index, IndexBuildConfig

@@ -12,9 +12,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.index import clustering
-from repro.index.layout import FlatInv, FwdDocs, LSPIndex, PackedBounds
-from repro.index.pack import SEG_WORDS, pack_rows_strided
-from repro.index.quantize import quantize_bounds, quantize_bounds_per_row, quantize_weights
+from repro.index.layout import FlatDocsQ, FlatInv, FwdDocs, FwdDocsQ, LSPIndex, PackedBounds
+from repro.index.pack import SEG_WORDS, align_up, pack_rows_strided
+from repro.index.quantize import (
+    quantize_bounds,
+    quantize_bounds_per_row,
+    quantize_weights,
+    quantize_weights_per_block,
+)
 
 
 @dataclass(frozen=True)
@@ -28,6 +33,9 @@ class IndexBuildConfig:
     quant_granularity: str = "row"
     build_flat_inv: bool = True
     build_avg: bool = True  # superblock averages (needed by SP and LSP/2 only)
+    # lane alignment of the quantized scoring operands (FwdDocsQ.t_pad / FlatDocsQ.m).
+    # 8 keeps host gathers compact (CPU ref path); set 128 for full TPU lane tiles.
+    lane_pad: int = 8
     d_proj: int = 64
     kmeans_iters: int = 8
     seed: int = 0
@@ -113,8 +121,25 @@ def build_index(
     fw_ws[post_pos, col] = qw
     docs_fwd = FwdDocs(jnp.asarray(fw_tids), jnp.asarray(fw_ws), doc_scale, t_max)
 
-    # ---- flat compact inverted index (postings sorted by (block, term))
+    # ---- quantized block-major forward index (doc_score operand, per-block scales)
+    qw_blk, blk_scales = quantize_weights_per_block(ws, post_blk, n_blocks, cfg.doc_bits)
+    w_dtype = np.uint8 if cfg.doc_bits <= 8 else np.uint16
+    t_pad = align_up(t_max, cfg.lane_pad)
+    fq_tids = np.full((n_pad, t_pad), vocab, np.int32)
+    fq_ws = np.zeros((n_pad, t_pad), w_dtype)
+    fq_tids[post_pos, col] = tids
+    fq_ws[post_pos, col] = qw_blk
+    docs_fwdq = FwdDocsQ(
+        jnp.asarray(fq_tids.reshape(n_blocks, b, t_pad)),
+        jnp.asarray(fq_ws.reshape(n_blocks, b, t_pad)),
+        jnp.asarray(blk_scales),
+        cfg.doc_bits,
+        t_pad,
+    )
+
+    # ---- flat compact inverted index (postings sorted by (block, local doc, term))
     docs_flat = None
+    docs_flatq = None
     if cfg.build_flat_inv:
         order = np.lexsort((tids, post_pos % b, post_blk))
         s_tid = tids[order].astype(np.int32)
@@ -136,6 +161,30 @@ def build_index(
             doc_scale,
         )
 
+        # quantized block-major flat segments (doc_score flat operand). Postings are
+        # already sorted by local doc id within each block, so per-doc scores are
+        # contiguous runs; doc_ends[k, j] = end of doc j's run in block k's segment.
+        m = align_up(max_nnz, cfg.lane_pad)
+        fl_tids = np.full((n_blocks, m), vocab, np.int32)
+        fl_ws = np.zeros((n_blocks, m), w_dtype)
+        s_w_blk = qw_blk[order]
+        row = post_blk[order]
+        off = (np.arange(len(order)) - block_ptr[row]).astype(np.int64)
+        fl_tids[row, off] = s_tid
+        fl_ws[row, off] = s_w_blk
+        # ends of each local-did run: cumulative count of postings with did <= j
+        did_counts = np.zeros((n_blocks, b), np.int64)
+        np.add.at(did_counts, (row, s_did), 1)
+        doc_ends = np.cumsum(did_counts, axis=1).astype(np.int32)
+        docs_flatq = FlatDocsQ(
+            jnp.asarray(fl_tids),
+            jnp.asarray(fl_ws),
+            jnp.asarray(doc_ends),
+            jnp.asarray(blk_scales),
+            cfg.doc_bits,
+            m,
+        )
+
     return LSPIndex(
         b=b,
         c=c,
@@ -149,4 +198,6 @@ def build_index(
         docs_fwd=docs_fwd,
         docs_flat=docs_flat,
         doc_remap=jnp.asarray(remap),
+        docs_fwdq=docs_fwdq,
+        docs_flatq=docs_flatq,
     )

@@ -59,6 +59,40 @@ class FlatInv(NamedTuple):
     scale: float
 
 
+class FwdDocsQ(NamedTuple):
+    """Quantized block-major forward index — the doc_score kernel operand.
+
+    One *block row* ``(tids[k], ws[k])`` is the kernel's random-access unit: a single
+    contiguous [b, t_pad] tile DMA per selected block (vs the per-document row reads of
+    ``FwdDocs``). Weights are uint8/uint16 with one dequant scale per block, so a
+    block's worth of weights dequantizes in-register against a single scalar.
+    tids padded with ``vocab`` (sentinel row of the dense query is zero).
+    """
+
+    tids: jnp.ndarray  # int32 [n_blocks, b, t_pad]
+    ws: jnp.ndarray  # uint8/uint16 [n_blocks, b, t_pad]
+    scales: jnp.ndarray  # float32 [n_blocks] per-block dequant scale
+    bits: int
+    t_pad: int  # lane-aligned padded terms per doc (see IndexBuildConfig.lane_pad)
+
+
+class FlatDocsQ(NamedTuple):
+    """Quantized block-major flat postings — the flat-layout doc_score operand.
+
+    Each block's postings segment is padded to the lane-aligned static budget ``m``
+    (one contiguous [m] read per selected block). Postings are sorted by local doc id
+    within the block, so per-document scores are contiguous-run sums delimited by
+    ``doc_ends`` — no scatter needed in either the jnp ref or the kernel.
+    """
+
+    tids: jnp.ndarray  # int32 [n_blocks, m]
+    ws: jnp.ndarray  # uint8/uint16 [n_blocks, m]
+    doc_ends: jnp.ndarray  # int32 [n_blocks, b] end offset of local doc j's run
+    scales: jnp.ndarray  # float32 [n_blocks] per-block dequant scale
+    bits: int
+    m: int
+
+
 class LSPIndex(NamedTuple):
     """The built two-level index (a pytree; shardable over the `model` mesh axis)."""
 
@@ -74,6 +108,8 @@ class LSPIndex(NamedTuple):
     docs_fwd: FwdDocs
     docs_flat: Optional[FlatInv]
     doc_remap: jnp.ndarray  # int32 [n_docs_padded]: position -> original doc id
+    docs_fwdq: Optional[FwdDocsQ] = None  # quantized block-major scoring operand
+    docs_flatq: Optional[FlatDocsQ] = None  # quantized flat scoring operand
 
 
 # ----------------------------------------------------------------- size accounting
@@ -99,6 +135,17 @@ def flat_inv_bytes(nnz_padded: int, n_blocks: int) -> int:
 
 def fwd_bytes(n_docs_padded: int, t_max: int) -> int:
     return n_docs_padded * t_max * (4 + 1)  # int32 tid + u8 weight
+
+
+def fwdq_bytes(fq: FwdDocsQ) -> int:
+    n_blocks, b, t = fq.tids.shape
+    return n_blocks * (b * t * (4 + fq.ws.dtype.itemsize) + 4)  # + per-block scale
+
+
+def flatq_bytes(fq: FlatDocsQ) -> int:
+    n_blocks, m = fq.tids.shape
+    b = fq.doc_ends.shape[1]
+    return n_blocks * (m * (4 + fq.ws.dtype.itemsize) + 4 * b + 4)
 
 
 def dense_bounds_bytes(vocab: int, n_units: int, bits: int = 8) -> int:

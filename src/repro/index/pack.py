@@ -34,6 +34,19 @@ def vals_per_word(bits: int) -> int:
 SEG_WORDS = 128
 
 
+def align_up(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` >= n (and >= multiple)."""
+    return max(multiple, -(-n // multiple) * multiple)
+
+
+def pad_last(a: np.ndarray, width: int, fill) -> np.ndarray:
+    """Pad the last axis of ``a`` with ``fill`` up to ``width`` (no-op if already)."""
+    if a.shape[-1] >= width:
+        return a
+    pad = [(0, 0)] * (a.ndim - 1) + [(0, width - a.shape[-1])]
+    return np.pad(a, pad, constant_values=fill)
+
+
 def pack_rows_strided(q: np.ndarray, bits: int, granule_words: int) -> np.ndarray:
     """Lane-strided segment packing: TPU-native SIMDBP layout.
 

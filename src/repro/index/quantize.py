@@ -24,6 +24,25 @@ def quantize_weights(w: np.ndarray, bits: int, scale: float | None = None):
     return q.astype(dtype), scale
 
 
+def quantize_weights_per_block(
+    ws: np.ndarray, post_blk: np.ndarray, n_blocks: int, bits: int
+):
+    """Per-block round-to-nearest quantization of document weights.
+
+    ws[i] belongs to block post_blk[i]; each block gets its own scale (block max /
+    levels), so quantization resolution tracks the local weight range instead of the
+    global maximum — the forward-index analogue of the per-term bound scales. Returns
+    (q, scales[n_blocks]); empty blocks get scale 1.0.
+    """
+    levels = (1 << bits) - 1
+    blk_max = np.zeros(n_blocks, np.float32)
+    np.maximum.at(blk_max, post_blk, ws)
+    scales = np.where(blk_max > 0, blk_max / levels, 1.0).astype(np.float32)
+    q = np.clip(np.rint(ws / scales[post_blk]), 0, levels)
+    dtype = np.uint8 if bits <= 8 else np.uint16
+    return q.astype(dtype), scales
+
+
 def quantize_bounds(w: np.ndarray, bits: int, scale: float | None = None):
     """Round-UP quantization for max-weight bounds. Returns (q, scale)."""
     levels = (1 << bits) - 1

@@ -6,6 +6,17 @@
                   (the selectors-first random-access decode of SIMDBP-256*)
   dequant_matmul  4-bit dequant GEMM (dense-embedding LSP scoring, MXU)
 
+  doc_score       fused gather + dequant + dot document scoring for selected blocks
+                  (phase-3 hot path; quantized forward index, VPU accumulate)
+
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
 ref.py (pure-jnp oracle). Validated on CPU with interpret=True.
 """
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both so kernels run on
+# every toolchain in the container fleet.
+tpu_compiler_params = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

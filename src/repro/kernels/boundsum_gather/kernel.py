@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _kernel(tids_ref, ws_ref, sel_ref, packed_ref, out_ref, *, bits: int, cw: int):
     q = pl.program_id(0)
@@ -75,7 +77,7 @@ def boundsum_gather_pallas(
             out_specs=pl.BlockSpec((1, 1, vpw, cw), lambda qi, si, i, *_: (qi, si, 0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((q, s, vpw, cw), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,116 @@
+"""Fused document scoring for selected blocks (Pallas TPU) — the phase-3 hot path.
+
+out[q, s, j] = sum_t qdense[q, tids[blk[q,s], j, t]] * ws[blk[q,s], j, t]
+
+The selected block ids are scalar-prefetched (PrefetchScalarGridSpec index maps, the
+same random-access idiom as boundsum_gather): each grid step DMAs exactly one block's
+quantized forward rows — a [b, t_pad] tile (fwd) or an [m] postings segment (flat) —
+dequantizes the uint8/uint16 weights in-register, gathers the dense query row at the
+block's term ids, and accumulates per-document scores. The [Q, S*b, T] gather tensor
+of the jnp path is never materialized: per-step VMEM is one block row + one query row.
+
+Grid: (Q, S), both parallel — there is no cross-step reduction; every step owns its
+[1, 1, b] output tile. Scales are per-block and applied by the ops.py wrapper
+(kernels stay scale-free, like the bound kernels).
+
+Padded term slots carry the sentinel term id (== vocab) whose dense-query column is
+zero, so they contribute nothing without an explicit mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+
+
+def _fwd_kernel(blk_ref, tids_ref, ws_ref, q_ref, out_ref):
+    tids = tids_ref[0]  # [b, T] int32
+    w = ws_ref[0].astype(jnp.float32)  # [b, T] dequant (scale applied outside)
+    qrow = q_ref[0]  # [Vp] f32
+    qv = qrow[tids]  # [b, T] gather of query values at the block's term ids
+    out_ref[0, 0] = jnp.sum(qv * w, axis=-1)
+
+
+def doc_score_fwd_pallas(
+    tids3: jnp.ndarray,  # int32 [NB, b, T]
+    ws3: jnp.ndarray,  # uint8/uint16 [NB, b, T]
+    qdense: jnp.ndarray,  # float32 [Q, Vp]
+    blk_ids: jnp.ndarray,  # int32 [Q, S] pre-clamped to [0, NB)
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns float32 [Q, S, b] raw (unscaled) per-document scores."""
+    _, b, t = tids3.shape
+    q, s = blk_ids.shape
+    vp = qdense.shape[1]
+
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(q, s),
+            in_specs=[
+                pl.BlockSpec((1, b, t), lambda qi, si, blk: (blk[qi, si], 0, 0)),
+                pl.BlockSpec((1, b, t), lambda qi, si, blk: (blk[qi, si], 0, 0)),
+                pl.BlockSpec((1, vp), lambda qi, si, blk: (qi, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, b), lambda qi, si, blk: (qi, si, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((q, s, b), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(blk_ids, tids3, ws3, qdense)
+
+
+def _flat_kernel(blk_ref, tids_ref, ws_ref, ends_ref, q_ref, out_ref, *, b: int, m: int):
+    tids = tids_ref[0]  # [m] int32
+    w = ws_ref[0].astype(jnp.float32)  # [m]
+    ends = ends_ref[0]  # [b] int32 run boundaries (sorted by local doc id)
+    qrow = q_ref[0]  # [Vp]
+    contrib = qrow[tids] * w  # [m]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (b, m), 1)
+    starts = jnp.concatenate([jnp.zeros((1,), ends.dtype), ends[:-1]])
+    run = (pos >= starts[:, None]) & (pos < ends[:, None])  # [b, m] doc-run masks
+    out_ref[0, 0] = jnp.sum(jnp.where(run, contrib[None, :], 0.0), axis=-1)
+
+
+def doc_score_flat_pallas(
+    tids: jnp.ndarray,  # int32 [NB, m]
+    ws: jnp.ndarray,  # uint8/uint16 [NB, m]
+    doc_ends: jnp.ndarray,  # int32 [NB, b]
+    qdense: jnp.ndarray,  # float32 [Q, Vp]
+    blk_ids: jnp.ndarray,  # int32 [Q, S] pre-clamped
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns float32 [Q, S, b] raw (unscaled) per-document scores."""
+    _, m = tids.shape
+    b = doc_ends.shape[1]
+    q, s = blk_ids.shape
+    vp = qdense.shape[1]
+
+    return pl.pallas_call(
+        functools.partial(_flat_kernel, b=b, m=m),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(q, s),
+            in_specs=[
+                pl.BlockSpec((1, m), lambda qi, si, blk: (blk[qi, si], 0)),
+                pl.BlockSpec((1, m), lambda qi, si, blk: (blk[qi, si], 0)),
+                pl.BlockSpec((1, b), lambda qi, si, blk: (blk[qi, si], 0)),
+                pl.BlockSpec((1, vp), lambda qi, si, blk: (qi, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, b), lambda qi, si, blk: (qi, si, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((q, s, b), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(blk_ids, tids, ws, doc_ends, qdense)

@@ -1,0 +1,39 @@
+"""Jit'd wrappers for the doc_score kernels over the quantized scoring operands.
+
+Applies the per-block dequant scales (kernels are scale-free) and clamps block ids;
+callers mask padded/ineligible blocks downstream (repro.core.scoring.score_blocks).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.layout import FlatDocsQ, FwdDocsQ
+from repro.kernels.doc_score.kernel import doc_score_flat_pallas, doc_score_fwd_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _call_fwd(tids3, ws3, scales, qdense, blk_ids, interpret):
+    blk_c = jnp.clip(blk_ids, 0, tids3.shape[0] - 1).astype(jnp.int32)
+    raw = doc_score_fwd_pallas(tids3, ws3, qdense.astype(jnp.float32), blk_c, interpret)
+    return raw * scales[blk_c][:, :, None]
+
+
+def doc_score_fwd_op(fwdq: FwdDocsQ, qdense, blk_ids, interpret: bool = False) -> jnp.ndarray:
+    """[Q, S] selected blocks -> scaled scores float32 [Q, S, b]."""
+    return _call_fwd(fwdq.tids, fwdq.ws, fwdq.scales, qdense, blk_ids, interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _call_flat(tids, ws, doc_ends, scales, qdense, blk_ids, interpret):
+    blk_c = jnp.clip(blk_ids, 0, tids.shape[0] - 1).astype(jnp.int32)
+    raw = doc_score_flat_pallas(tids, ws, doc_ends, qdense.astype(jnp.float32), blk_c, interpret)
+    return raw * scales[blk_c][:, :, None]
+
+
+def doc_score_flat_op(flatq: FlatDocsQ, qdense, blk_ids, interpret: bool = False) -> jnp.ndarray:
+    """[Q, S] selected blocks -> scaled scores float32 [Q, S, b]."""
+    return _call_flat(flatq.tids, flatq.ws, flatq.doc_ends, flatq.scales, qdense, blk_ids, interpret)

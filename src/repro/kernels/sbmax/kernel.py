@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 TW = 128  # word-tile width == pack.SEG_WORDS == lane count
 
 
@@ -74,7 +76,7 @@ def sbmax_pallas(
             ),
         ),
         out_shape=jax.ShapeDtypeStruct((q, n_seg, vpw, TW), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -52,12 +52,7 @@ def main() -> None:
         batch_q = 4
         print(f"[serve] sharded over mesh {dict(mesh.shape)}")
     else:
-        fn = jit_retrieve(idx, cfg)
-
-        def retriever(qb: QueryBatch):
-            res = fn(qb)
-            return res.doc_ids, res.scores
-
+        retriever = jit_retrieve(idx, cfg)  # RetrievalResult plugs into the engine
         batch_q = args.max_batch
 
     eng = RetrievalEngine(retriever, corpus.vocab, max_batch=batch_q, nq_max=64)

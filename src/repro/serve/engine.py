@@ -10,6 +10,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Callable
@@ -21,25 +22,48 @@ from repro.core.query import QueryBatch, make_query_batch
 
 @dataclass
 class ServeStats:
-    latencies_ms: list = field(default_factory=list)
+    """Serving metrics. Latencies live in a bounded ring buffer (percentiles are over
+    the most recent window) so a long-running engine does not grow without limit.
+    record() runs on the engine thread while callers read summaries — the lock keeps
+    deque iteration from racing appends (deques raise if mutated mid-iteration)."""
+
+    window: int = 16384
+    latencies_ms: deque = field(default=None)
     batches: int = 0
     requests: int = 0
 
+    def __post_init__(self):
+        if self.latencies_ms is None:
+            self.latencies_ms = deque(maxlen=self.window)
+        self._lock = threading.Lock()
+
+    def record(self, latency_ms: float) -> None:
+        with self._lock:
+            self.latencies_ms.append(latency_ms)
+            self.requests += 1
+
+    def _snapshot(self) -> np.ndarray:
+        with self._lock:
+            return np.asarray(self.latencies_ms, dtype=np.float64)
+
     def percentile(self, p: float) -> float:
-        return float(np.percentile(self.latencies_ms, p)) if self.latencies_ms else 0.0
+        lat = self._snapshot()
+        return float(np.percentile(lat, p)) if lat.size else 0.0
 
     def summary(self) -> dict:
+        lat = self._snapshot()
         return {
             "requests": self.requests,
             "batches": self.batches,
-            "mean_ms": float(np.mean(self.latencies_ms)) if self.latencies_ms else 0.0,
-            "p50_ms": self.percentile(50),
-            "p99_ms": self.percentile(99),
+            "mean_ms": float(lat.mean()) if lat.size else 0.0,
+            "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
         }
 
 
 class RetrievalEngine:
-    """retriever: QueryBatch -> (ids [Q, k], scores [Q, k]) — jitted, fixed Q."""
+    """retriever: QueryBatch -> RetrievalResult, or any (ids [Q, k], scores [Q, k])
+    prefix tuple — jitted, fixed Q. ``jit_retrieve`` output plugs in directly."""
 
     def __init__(
         self,
@@ -48,13 +72,14 @@ class RetrievalEngine:
         max_batch: int = 32,
         nq_max: int = 64,
         max_wait_ms: float = 2.0,
+        stats_window: int = 16384,
     ):
         self.retriever = retriever
         self.vocab = vocab
         self.max_batch = max_batch
         self.nq_max = nq_max
         self.max_wait_ms = max_wait_ms
-        self.stats = ServeStats()
+        self.stats = ServeStats(window=stats_window)
         self._q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -89,13 +114,14 @@ class RetrievalEngine:
             while len(queries) < self.max_batch:
                 queries.append((np.zeros(0, np.int32), np.zeros(0, np.float32)))
             qb = make_query_batch(queries, self.vocab, nq_max=self.nq_max)
-            ids, scores = self.retriever(qb)
+            out = self.retriever(qb)
+            # RetrievalResult (or any ids/scores-leading tuple) both unpack here
+            ids, scores = out[0], out[1]
             ids = np.asarray(ids)
             scores = np.asarray(scores)
             now = time.monotonic()
             for i, (t0, _, _, fut) in enumerate(items):
-                self.stats.latencies_ms.append((now - t0) * 1e3)
-                self.stats.requests += 1
+                self.stats.record((now - t0) * 1e3)
                 fut.set_result((ids[i], scores[i]))
             self.stats.batches += 1
 

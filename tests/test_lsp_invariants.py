@@ -83,6 +83,29 @@ def test_block_budget_degrades_gracefully(tiny_index, tiny_qb, oracle):
     assert tight > 0.2  # still returns sensible results
 
 
+def test_blocks_scored_accounting(tiny_index, tiny_qb):
+    """n_blocks_scored counts DISTINCT blocks: round-0 blocks (γ0·c) plus surviving
+    phase-3 blocks outside the round-0 superblocks. For the sp variant phase-3 may
+    re-select round-0 superblocks' blocks (its rule ignores ranks < γ0); those must
+    not be double-counted, so the count never exceeds γ0·c + the phase-3 budget and
+    also never exceeds the total number of blocks in the index."""
+    for variant, kw in [("lsp0", {}), ("sp", dict(mu=0.5, eta=0.8))]:
+        cfg = RetrievalConfig(variant=variant, k=10, gamma=16, gamma0=4, beta=0.5, **kw)
+        res = retrieve(tiny_index, tiny_qb, cfg, impl="ref")
+        n = np.asarray(res.n_blocks_scored)
+        g0c = cfg.gamma0 * tiny_index.c
+        assert (n >= g0c).all(), (variant, n.min())
+        assert (n <= tiny_index.n_blocks).all(), (variant, n.max())
+        budget = min(cfg.resolved_sb_budget(), tiny_index.n_superblocks)
+        assert (n <= g0c + budget * tiny_index.c).all(), (variant, n.max())
+    # sp at full overlap: every phase-3 block inside round-0 superblocks is a re-score;
+    # with γ == γ0 and an aggressive rule the distinct count stays at most NB
+    cfg = RetrievalConfig(variant="sp", k=10, gamma=tiny_index.n_superblocks,
+                          gamma0=tiny_index.n_superblocks, mu=1e-6, eta=1e-6, beta=1.0)
+    res = retrieve(tiny_index, tiny_qb, cfg, impl="ref")
+    assert (np.asarray(res.n_blocks_scored) <= tiny_index.n_blocks).all()
+
+
 def test_flat_inv_matches_fwd_scoring(tiny_index, tiny_qb):
     cfg_f = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5, doc_layout="fwd")
     cfg_i = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5, doc_layout="flat")
