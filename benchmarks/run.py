@@ -28,12 +28,14 @@ def main() -> None:
         gamma_confidence,
         index_sizes,
         latency_suite,
+        serving_suite,
         variant_grid,
         zeroshot_sweep,
     )
 
     suites = {
         "table2": latency_suite.run,
+        "serving": serving_suite.run,
         "table4": zeroshot_sweep.run,
         "table5": blocksize_sweep.run,
         "table6": variant_grid.run,

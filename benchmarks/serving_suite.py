@@ -1,0 +1,199 @@
+"""Serving-layer benchmark: end-to-end latency percentiles + throughput of the
+bucketed engine across traffic shapes (the paper's mean-response-time framing
+lifted from kernel level to serving level; cf. BMP's latency-vs-throughput
+analysis). Emits ``BENCH_serving.json`` next to ``BENCH_latency.json``.
+
+Scenarios:
+  single_stream_padded    one query in flight, single-shape engine padded to
+                          max_batch — the pre-bucketing baseline arm
+  single_stream_bucketed  same stream, bucket ladder: a lone query runs the
+                          batch-1 program (the tentpole's p50 claim)
+  zipf_repeat_cached      Zipf-distributed repeats over a query pool with the
+                          result cache on (our corpus is explicitly Zipf)
+  bursty_bucketed         max_batch-sized bursts: throughput at full batches
+  error_injection         retriever raises every Nth batch: the pipeline fails
+                          those futures and keeps serving
+
+  PYTHONPATH=src python -m benchmarks.serving_suite          # full settings
+  PYTHONPATH=src python -m benchmarks.serving_suite --smoke  # CI settings
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import CORPUS_CFG, K_DEFAULT, Row, index, queries
+from repro.core import RetrievalConfig, jit_retrieve
+from repro.serve import RetrievalEngine
+
+BENCH_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+MAX_BATCH = 16
+NQ_MAX = 64
+ZIPF_A = 1.3  # heavy head: the cache's operating regime
+
+
+class _FailEvery:
+    """Error-injection wrapper: raises on every ``every``-th batch."""
+
+    def __init__(self, inner, every: int):
+        self.inner = inner
+        self.every = every
+        self.count = 0
+
+    def __call__(self, qb):
+        self.count += 1
+        if self.count % self.every == 0:
+            raise RuntimeError("injected retriever failure")
+        return self.inner(qb)
+
+
+def _engine(retr, **kw) -> RetrievalEngine:
+    kwargs = dict(max_batch=MAX_BATCH, nq_max=NQ_MAX, max_wait_ms=1.0, cache_size=0)
+    kwargs.update(kw)
+    return RetrievalEngine(retr, CORPUS_CFG.vocab, **kwargs)
+
+
+def _summary(eng: RetrievalEngine, n: int, wall: float) -> dict:
+    s = eng.stats.summary()
+    return {
+        "requests": n,
+        "wall_s": wall,
+        "throughput_qps": n / wall if wall else 0.0,
+        "mean_ms": s["mean_ms"],
+        "p50_ms": s["p50_ms"],
+        "p99_ms": s["p99_ms"],
+        "cache_hit_rate": s["cache_hit_rate"],
+        "bucket_batches": s["bucket_batches"],
+        "failures": s["failures"],
+    }
+
+
+def _single_stream(eng, qs, order) -> float:
+    t0 = time.perf_counter()
+    for i in order:
+        t, w = qs[i % len(qs)]
+        eng.submit(t, w).result(timeout=300)
+    return time.perf_counter() - t0
+
+
+def _bursty(eng, qs, n, burst) -> float:
+    t0 = time.perf_counter()
+    done = 0
+    while done < n:
+        futs = [eng.submit(*qs[(done + j) % len(qs)]) for j in range(min(burst, n - done))]
+        for f in futs:
+            f.result(timeout=300)
+        done += len(futs)
+    return time.perf_counter() - t0
+
+
+def run() -> list[Row]:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    n = 24 if smoke else 96
+    idx = index()
+    qs = [(np.asarray(t), np.asarray(w)) for t, w in queries()]
+    cfg = RetrievalConfig("lsp0", k=K_DEFAULT, gamma=max(8, idx.n_superblocks // 8), gamma0=8, beta=0.33)
+    retr = jit_retrieve(idx, cfg, impl="ref")
+    scenarios: dict[str, dict] = {}
+
+    # padded single-shape baseline (the pre-bucketing engine): one rung, no cache
+    eng = _engine(retr, batch_buckets=[MAX_BATCH], nq_buckets=[NQ_MAX], warmup=True)
+    wall = _single_stream(eng, qs, range(n))
+    eng.shutdown()
+    scenarios["single_stream_padded"] = _summary(eng, n, wall)
+
+    # bucketed: the same lone-query stream rides the batch-1 program
+    eng = _engine(retr, warmup=True)
+    wall = _single_stream(eng, qs, range(n))
+    eng.shutdown()
+    scenarios["single_stream_bucketed"] = _summary(eng, n, wall)
+
+    # Zipf-repeat stream with the result cache on
+    eng = _engine(retr, cache_size=256, warmup=True)
+    rng = np.random.default_rng(3)
+    order = (rng.zipf(ZIPF_A, size=n) - 1) % len(qs)
+    wall = _single_stream(eng, qs, order)
+    eng.shutdown()
+    scenarios["zipf_repeat_cached"] = _summary(eng, n, wall)
+
+    # bursty traffic at full batches (throughput arm)
+    eng = _engine(retr, warmup=True)
+    wall = _bursty(eng, qs, n, burst=MAX_BATCH)
+    eng.shutdown()
+    scenarios["bursty_bucketed"] = _summary(eng, n, wall)
+
+    # error injection: every 4th batch raises; the pipeline must keep serving
+    # (all bucket shapes are already compiled in retr's jit cache, so warmup=False)
+    eng = _engine(_FailEvery(retr, every=4))
+    ok = fails = 0
+    served_after_failure = False
+    t0 = time.perf_counter()
+    for i in range(n):
+        try:
+            eng.submit(*qs[i % len(qs)]).result(timeout=300)
+            ok += 1
+            if fails:
+                served_after_failure = True
+        except RuntimeError:
+            fails += 1
+    wall = time.perf_counter() - t0
+    eng.shutdown()
+    scenarios["error_injection"] = dict(
+        _summary(eng, ok, wall), failed_requests=fails, served_after_failure=served_after_failure
+    )
+
+    padded = scenarios["single_stream_padded"]
+    bucketed = scenarios["single_stream_bucketed"]
+    payload = {
+        "backend": "cpu",
+        "max_batch": MAX_BATCH,
+        "nq_max": NQ_MAX,
+        "requests_per_scenario": n,
+        "zipf_a": ZIPF_A,
+        "scenarios": scenarios,
+        "single_p50_speedup_bucketed_vs_padded": padded["p50_ms"] / max(bucketed["p50_ms"], 1e-9),
+        "zipf_cache_hit_rate": scenarios["zipf_repeat_cached"]["cache_hit_rate"],
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    rows = [
+        Row(
+            f"serving/{name}",
+            s["p50_ms"] * 1e3,
+            f"qps={s['throughput_qps']:.1f};p99_ms={s['p99_ms']:.1f};"
+            f"hit_rate={s['cache_hit_rate']:.2f};failures={s['failures']}",
+        )
+        for name, s in scenarios.items()
+    ]
+    rows.append(
+        Row(
+            "serving/claims",
+            0.0,
+            f"bucketed_p50_speedup={payload['single_p50_speedup_bucketed_vs_padded']:.2f}x;"
+            f"zipf_hit_rate={payload['zipf_cache_hit_rate']:.2f};json={BENCH_JSON}",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI settings: fewer requests")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ.setdefault("BENCH_SMOKE", "1")
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for row in run():
+        print(row.csv(), flush=True)
+    print(f"# suite serving done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,4 +3,4 @@
 from repro.core.config import RetrievalConfig, recommended
 from repro.core.lsp import RetrievalResult, jit_retrieve, retrieve
 from repro.core.exact import retrieve_exact
-from repro.core.query import QueryBatch, make_query_batch
+from repro.core.query import QueryBatch, canonical_query, make_query_batch, query_key

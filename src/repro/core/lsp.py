@@ -166,10 +166,16 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
     in_round0 = (blk_ids[:, :, None] // c == top_idx[:, None, :g0]).any(axis=2)
     n_blocks_scored = g0 * c + (blk_mask & ~in_round0).sum(axis=1, dtype=jnp.int32)
 
+    # ---- superblock accounting mirrors the block accounting: sp's rule ignores
+    # ranks < g0, so its eligibility can re-select round-0 superblocks — those are
+    # re-visits, not new superblocks; count distinct only (the non-sp variants
+    # already fold rank >= g0 into eligible, making the mask a no-op there).
+    n_sb_new = (eligible & (rank >= g0)).sum(axis=1, dtype=jnp.int32)
+
     return RetrievalResult(
         doc_ids=ids,
         scores=jnp.where(vals > NEG / 2, vals, jnp.float32(NEG)),
-        n_superblocks_visited=g0 + eligible.sum(axis=1, dtype=jnp.int32),
+        n_superblocks_visited=g0 + n_sb_new,
         n_blocks_scored=n_blocks_scored,
     )
 
@@ -209,11 +215,25 @@ def _retrieve_bmp(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, im
 
 def jit_retrieve(index: LSPIndex, cfg: RetrievalConfig, impl: str = "auto"):
     """Compile a retriever closed over the index. QueryBatch.vocab is static (shapes
-    depend on it), so the jit boundary takes only the tids/ws arrays."""
+    depend on it), so the jit boundary takes only the tids/ws arrays.
+
+    jax.jit specializes per (Q, nq_max) input shape, so the serving ladder's shape
+    buckets each resolve to their own XLA program through the one returned callable.
+    ``run.warmup(shapes)`` pre-triggers those compilations: sentinel-only inputs are
+    enough because compilation depends on shapes, not values."""
     vocab = index.vocab
 
     @jax.jit
     def fn(tids, ws):
         return retrieve(index, QueryBatch(tids, ws, vocab), cfg, impl=impl)
 
-    return lambda qb: fn(qb.tids, qb.ws)
+    def run(qb: QueryBatch):
+        return fn(qb.tids, qb.ws)
+
+    def warmup(shapes) -> None:
+        for q, nq in shapes:
+            out = fn(jnp.full((q, nq), vocab, jnp.int32), jnp.zeros((q, nq), jnp.float32))
+            jax.block_until_ready(out)
+
+    run.warmup = warmup
+    return run

@@ -21,6 +21,28 @@ class QueryBatch(NamedTuple):
         return self.tids.shape[1]
 
 
+def canonical_query(tids: np.ndarray, ws: np.ndarray, nq_max: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic (tids, ws) ordering: weight-descending, term-id tie-break.
+
+    ``make_query_batch``'s stable weight sort leaves equal-weight ties in input
+    order, so two permutations of the same query could truncate differently at
+    nq_max. Serving canonicalizes first: identical term/weight multisets yield
+    identical batch rows, which is what lets the result cache key on the byte
+    image of the pruned vector (``query_key``)."""
+    t = np.asarray(tids, np.int32)
+    w = np.asarray(ws, np.float32)
+    order = np.lexsort((t, -w))
+    if nq_max:
+        order = order[:nq_max]
+    return t[order], w[order]
+
+
+def query_key(tids: np.ndarray, ws: np.ndarray, nq_max: int = 0) -> bytes:
+    """Hashable cache key: byte image of the canonical pruned (tids, ws) vectors."""
+    t, w = canonical_query(tids, ws, nq_max)
+    return t.tobytes() + w.tobytes()
+
+
 def make_query_batch(queries: list[tuple[np.ndarray, np.ndarray]], vocab: int, nq_max: int = 0) -> QueryBatch:
     """queries: list of (tids, weights). Sorted by weight desc so β-pruning is a prefix."""
     if not nq_max:

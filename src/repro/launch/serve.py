@@ -1,7 +1,9 @@
 """Retrieval serving launcher: build (or load) an LSP index over a corpus and serve
-batched queries with latency percentiles.
+batched queries through the bucketed engine (shape-bucket ladder + result cache +
+resilient pipeline, DESIGN.md §6) with latency percentiles.
 
   PYTHONPATH=src python -m repro.launch.serve --n-docs 16384 --requests 128
+  PYTHONPATH=src python -m repro.launch.serve --no-buckets --cache-size 0  # old engine
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
       PYTHONPATH=src python -m repro.launch.serve --sharded
 """
@@ -17,7 +19,7 @@ from repro.core import RetrievalConfig, jit_retrieve
 from repro.core.query import QueryBatch
 from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
 from repro.index.builder import IndexBuildConfig, build_index
-from repro.serve.engine import RetrievalEngine
+from repro.serve import RetrievalEngine
 
 
 def main() -> None:
@@ -31,6 +33,10 @@ def main() -> None:
     p.add_argument("--variant", default="lsp0", choices=["lsp0", "lsp1", "lsp2", "sp", "bmp"])
     p.add_argument("--requests", type=int, default=64)
     p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--no-buckets", action="store_true",
+                   help="single compiled shape: every batch padded to max-batch")
+    p.add_argument("--cache-size", type=int, default=1024, help="result-cache entries; 0 disables")
+    p.add_argument("--no-warmup", action="store_true", help="skip bucket pre-compilation")
     p.add_argument("--sharded", action="store_true")
     args = p.parse_args()
 
@@ -42,6 +48,7 @@ def main() -> None:
     cfg = RetrievalConfig(variant=args.variant, k=args.k, gamma=gamma, beta=0.33)
     print(f"[serve] index NB={idx.n_blocks} NS={idx.n_superblocks}, {args.variant} γ={gamma}")
 
+    batch_buckets = None
     if args.sharded and len(jax.devices()) >= 4:
         from repro.distributed.retrieval import make_mesh_retriever, shard_index
         from repro.launch.mesh import make_host_mesh
@@ -50,12 +57,20 @@ def main() -> None:
         run, _ = make_mesh_retriever(shard_index(idx, 2), cfg, mesh)
         retriever = lambda qb: run(qb)
         batch_q = 4
+        batch_buckets = [batch_q]  # sharded batch must divide the data axis: one rung
         print(f"[serve] sharded over mesh {dict(mesh.shape)}")
     else:
         retriever = jit_retrieve(idx, cfg)  # RetrievalResult plugs into the engine
         batch_q = args.max_batch
+        if args.no_buckets:
+            batch_buckets = [batch_q]
 
-    eng = RetrievalEngine(retriever, corpus.vocab, max_batch=batch_q, nq_max=64)
+    eng = RetrievalEngine(
+        retriever, corpus.vocab, max_batch=batch_q, nq_max=64,
+        batch_buckets=batch_buckets, cache_size=args.cache_size,
+        warmup=not args.no_warmup,
+    )
+    print(f"[serve] buckets {eng.ladder}, cache={args.cache_size}")
     queries = make_queries(ccfg, corpus, args.requests)
     futs = [eng.submit(t, w) for t, w in queries]
     for f in futs:
@@ -64,6 +79,8 @@ def main() -> None:
     s = eng.stats.summary()
     print(f"[serve] {s['requests']} requests / {s['batches']} batches | "
           f"mean {s['mean_ms']:.1f} ms p50 {s['p50_ms']:.1f} p99 {s['p99_ms']:.1f}")
+    print(f"[serve] buckets used {s['bucket_batches']} | "
+          f"cache hit rate {s['cache_hit_rate']:.2f} ({s['cache_hits']}/{s['cache_hits'] + s['cache_misses']})")
 
 
 if __name__ == "__main__":

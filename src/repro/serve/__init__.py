@@ -1,0 +1,8 @@
+"""Scale-out serving layer: bucketed batching, result caching, resilient pipeline
+(DESIGN.md §6)."""
+
+from repro.serve.buckets import Bucket, BucketLadder
+from repro.serve.cache import QueryResultCache
+from repro.serve.engine import RetrievalEngine, ServeStats
+
+__all__ = ["Bucket", "BucketLadder", "QueryResultCache", "RetrievalEngine", "ServeStats"]

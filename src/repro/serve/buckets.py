@@ -1,0 +1,73 @@
+"""Shape-bucket ladder for the serving engine (DESIGN.md §6).
+
+``jax.jit`` specializes per input shape, so every distinct ``(batch, nq)`` the
+engine feeds the retriever is its own XLA program. The ladder fixes a small set
+of such shapes (geometric by default: 1/4/16/…/max_batch × 16/64/…/nq_max),
+picks the smallest bucket covering each collected batch, and enumerates the
+full set for warmup pre-compilation. A lone query then runs the batch-1
+program instead of paying ``max_batch``-padded compute; padding within a bucket
+is result-invariant because sentinel terms (id == vocab, weight 0) and empty
+query rows contribute nothing anywhere in the traversal.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+_LADDER_FACTOR = 4
+
+
+@dataclass(frozen=True, order=True)
+class Bucket:
+    batch: int
+    nq: int
+
+
+def _ladder(max_val: int, explicit, base: int) -> list[int]:
+    """Ascending sizes ending exactly at max_val. explicit sizes are clipped to
+    max_val; the default is geometric from ``base`` so the ladder stays short
+    (compile count = len(batch ladder) × len(nq ladder))."""
+    assert max_val >= 1
+    if explicit is not None:
+        vals = sorted({min(int(v), max_val) for v in explicit if int(v) >= 1})
+        assert vals, f"no usable bucket sizes in {explicit!r}"
+    else:
+        vals, v = [], min(base, max_val)
+        while v < max_val:
+            vals.append(v)
+            v *= _LADDER_FACTOR
+    if not vals or vals[-1] != max_val:
+        vals.append(max_val)
+    return vals
+
+
+class BucketLadder:
+    """batch × nq shape grid. ``batch_sizes=[max_batch]`` (one rung) reproduces
+    the pre-bucketing engine: every batch padded to the single compiled shape."""
+
+    def __init__(
+        self,
+        max_batch: int,
+        nq_max: int,
+        batch_sizes: list[int] | None = None,
+        nq_sizes: list[int] | None = None,
+    ):
+        self.batch_sizes = _ladder(max_batch, batch_sizes, base=1)
+        self.nq_sizes = _ladder(nq_max, nq_sizes, base=16)
+        self.max_batch = self.batch_sizes[-1]
+        self.nq_max = self.nq_sizes[-1]
+
+    def select(self, n_queries: int, nq: int) -> Bucket:
+        """Smallest bucket covering (n_queries, nq); inputs beyond the ladder maxima
+        clip (the engine never collects > max_batch, and truncates terms at nq_max)."""
+        n_queries = min(max(n_queries, 1), self.max_batch)
+        nq = min(max(nq, 1), self.nq_max)
+        batch = next(v for v in self.batch_sizes if v >= n_queries)
+        return Bucket(batch, next(v for v in self.nq_sizes if v >= nq))
+
+    def shapes(self) -> list[Bucket]:
+        """Every compiled shape, for warmup."""
+        return [Bucket(b, q) for b in self.batch_sizes for q in self.nq_sizes]
+
+    def __repr__(self) -> str:
+        return f"BucketLadder(batch={self.batch_sizes}, nq={self.nq_sizes})"

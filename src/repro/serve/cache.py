@@ -1,0 +1,51 @@
+"""Query-result LRU cache for the serving engine (DESIGN.md §6).
+
+Zipf-distributed query streams (our synthetic corpus is explicitly Zipf) put
+heavy mass on a small head of distinct queries, so memoizing the final
+(ids, scores) of each canonical pruned query is a first-order throughput lever:
+a hit skips batching, padding and the whole traversal/scoring pipeline. Keys
+are the byte image of the canonical pruned (tids, ws) vectors
+(``repro.core.query.query_key``). Hit/miss counters live in ``ServeStats``
+(the engine owns the probe); the cache itself only tracks evictions.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+
+class QueryResultCache:
+    """Thread-safe LRU over hashable query keys. get() refreshes recency;
+    put() inserts at the most-recent end and evicts from the least-recent."""
+
+    def __init__(self, capacity: int = 1024):
+        assert capacity > 0, "use cache_size=0 on the engine to disable caching"
+        self.capacity = capacity
+        self.evictions = 0
+        self._od: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._od)
+
+    def get(self, key):
+        """The cached value, or None. A hit becomes the most recently used entry."""
+        with self._lock:
+            if key not in self._od:
+                return None
+            self._od.move_to_end(key)
+            return self._od[key]
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self._od[key] = value
+            self._od.move_to_end(key)
+            while len(self._od) > self.capacity:
+                self._od.popitem(last=False)
+                self.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._od.clear()

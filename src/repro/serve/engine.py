@@ -1,8 +1,19 @@
-"""Batched retrieval serving engine.
+"""Bucketed batched retrieval serving engine (DESIGN.md §6).
 
-Request flow: submit(query) -> batching queue -> fixed-size padded QueryBatch
-(latency/throughput knob: max_batch vs max_wait_ms) -> jitted retriever -> futures.
-Tracks end-to-end latency percentiles (the paper's MRT metric at serving level).
+Request flow: submit(tids, ws) -> canonicalize + result-cache probe -> bounded
+batching queue (blocking put = backpressure) -> smallest shape bucket covering
+the collected batch (batch × nq ladder; each bucket is its own precompiled XLA
+program) -> retriever -> futures + cache fill. A lone query runs the batch-1
+program instead of paying max_batch-padded compute; bucket padding is
+result-invariant (sentinel terms and empty rows score nothing).
+
+Failure semantics: a retriever exception fails exactly the futures of the batch
+that hit it and the loop keeps serving; submit() after shutdown() raises
+RuntimeError; shutdown() drains the queue and fails still-queued requests.
+
+End-to-end latency percentiles (the paper's MRT metric at serving level),
+batch/bucket counts and cache hit/miss counters live in ServeStats, all
+mutated under one lock.
 """
 
 from __future__ import annotations
@@ -11,36 +22,65 @@ import queue
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
-from repro.core.query import QueryBatch, make_query_batch
+from repro.core.query import QueryBatch, canonical_query, make_query_batch, query_key
+from repro.serve.buckets import Bucket, BucketLadder
+from repro.serve.cache import QueryResultCache
+
+_EMPTY_QUERY = (np.zeros(0, np.int32), np.zeros(0, np.float32))
 
 
 @dataclass
 class ServeStats:
     """Serving metrics. Latencies live in a bounded ring buffer (percentiles are over
     the most recent window) so a long-running engine does not grow without limit.
-    record() runs on the engine thread while callers read summaries — the lock keeps
-    deque iteration from racing appends (deques raise if mutated mid-iteration)."""
+    Counters are mutated on the engine thread AND caller threads (cache hits resolve
+    in submit(); summary() reads from anywhere) — everything shares one lock."""
 
     window: int = 16384
     latencies_ms: deque = field(default=None)
     batches: int = 0
     requests: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    failures: int = 0
+    rejected: int = 0
+    bucket_batches: dict = field(default_factory=dict)  # (batch, nq) -> count
 
     def __post_init__(self):
         if self.latencies_ms is None:
             self.latencies_ms = deque(maxlen=self.window)
         self._lock = threading.Lock()
 
-    def record(self, latency_ms: float) -> None:
+    def record(self, latency_ms: float, cache_hit: bool = False) -> None:
         with self._lock:
             self.latencies_ms.append(latency_ms)
             self.requests += 1
+            if cache_hit:
+                self.cache_hits += 1
+
+    def record_cache_miss(self) -> None:
+        with self._lock:
+            self.cache_misses += 1
+
+    def record_batch(self, bucket: Bucket) -> None:
+        with self._lock:
+            self.batches += 1
+            key = (bucket.batch, bucket.nq)
+            self.bucket_batches[key] = self.bucket_batches.get(key, 0) + 1
+
+    def record_failures(self, n: int) -> None:
+        with self._lock:
+            self.failures += n
+
+    def record_rejected(self, n: int = 1) -> None:
+        with self._lock:
+            self.rejected += n
 
     def _snapshot(self) -> np.ndarray:
         with self._lock:
@@ -51,19 +91,48 @@ class ServeStats:
         return float(np.percentile(lat, p)) if lat.size else 0.0
 
     def summary(self) -> dict:
-        lat = self._snapshot()
-        return {
-            "requests": self.requests,
-            "batches": self.batches,
-            "mean_ms": float(lat.mean()) if lat.size else 0.0,
-            "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
-            "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
-        }
+        with self._lock:
+            lat = np.asarray(self.latencies_ms, dtype=np.float64)
+            probes = self.cache_hits + self.cache_misses
+            return {
+                "requests": self.requests,
+                "batches": self.batches,
+                "failures": self.failures,
+                "rejected": self.rejected,
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "cache_hit_rate": self.cache_hits / probes if probes else 0.0,
+                "bucket_batches": {f"{b}x{q}": n for (b, q), n in sorted(self.bucket_batches.items())},
+                "mean_ms": float(lat.mean()) if lat.size else 0.0,
+                "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
+                "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            }
+
+
+def _try_set_result(fut: Future, value) -> None:
+    try:
+        fut.set_result(value)
+    except InvalidStateError:
+        pass  # caller cancelled the future; the result is simply dropped
+
+
+def _try_set_exception(fut: Future, exc: BaseException) -> None:
+    try:
+        fut.set_exception(exc)
+    except InvalidStateError:
+        pass
 
 
 class RetrievalEngine:
     """retriever: QueryBatch -> RetrievalResult, or any (ids [Q, k], scores [Q, k])
-    prefix tuple — jitted, fixed Q. ``jit_retrieve`` output plugs in directly."""
+    prefix tuple — jitted; ``jit_retrieve`` output plugs in directly. Each ladder
+    bucket compiles its own program on first use, or all up front via warmup().
+
+    ``batch_buckets=[max_batch]`` + ``cache_size=0`` reproduces the pre-bucketing
+    single-shape engine (every batch padded to max_batch, no memoization) — the
+    serving benchmark's baseline arm. ``queue_depth`` bounds the batching queue;
+    a full queue blocks submit() (backpressure) instead of growing unboundedly.
+    """
 
     def __init__(
         self,
@@ -73,22 +142,80 @@ class RetrievalEngine:
         nq_max: int = 64,
         max_wait_ms: float = 2.0,
         stats_window: int = 16384,
+        batch_buckets: list[int] | None = None,
+        nq_buckets: list[int] | None = None,
+        cache_size: int = 1024,
+        queue_depth: int = 0,
+        warmup: bool = False,
     ):
         self.retriever = retriever
         self.vocab = vocab
-        self.max_batch = max_batch
-        self.nq_max = nq_max
+        self.ladder = BucketLadder(max_batch, nq_max, batch_buckets, nq_buckets)
+        self.max_batch = self.ladder.max_batch
+        self.nq_max = self.ladder.nq_max
         self.max_wait_ms = max_wait_ms
         self.stats = ServeStats(window=stats_window)
-        self._q: queue.Queue = queue.Queue()
+        self.cache = QueryResultCache(cache_size) if cache_size else None
+        self._q: queue.Queue = queue.Queue(maxsize=queue_depth or 4 * self.max_batch)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
+        if warmup:
+            self.warmup()
+
+    # ---- client side -----------------------------------------------------------
 
     def submit(self, tids: np.ndarray, ws: np.ndarray) -> Future:
+        """Future of (ids [k], scores [k]) for one sparse query. Raises RuntimeError
+        once the engine is shut down. A cache hit resolves synchronously."""
+        if self._stop.is_set():
+            self.stats.record_rejected()
+            raise RuntimeError("RetrievalEngine is shut down; submit() rejected")
+        t0 = time.monotonic()
+        t, w = canonical_query(tids, ws, self.nq_max)
         fut: Future = Future()
-        self._q.put((time.monotonic(), tids, ws, fut))
+        key = None
+        if self.cache is not None:
+            key = query_key(t, w)  # idempotent on the already-canonical arrays
+            hit = self.cache.get(key)
+            if hit is not None:
+                self.stats.record((time.monotonic() - t0) * 1e3, cache_hit=True)
+                # copies: the cached row must not alias what callers may mutate
+                _try_set_result(fut, (hit[0].copy(), hit[1].copy()))
+                return fut
+            self.stats.record_cache_miss()
+        item = (t0, t, w, key, fut)
+        while True:
+            if self._stop.is_set():
+                self.stats.record_rejected()
+                raise RuntimeError("RetrievalEngine is shut down; submit() rejected")
+            try:
+                self._q.put(item, timeout=0.05)
+                break
+            except queue.Full:
+                continue  # backpressure: hold the caller until the worker drains
+        if self._stop.is_set():
+            self._drain()  # lost the race with shutdown's drain; fail it ourselves
         return fut
+
+    def warmup(self) -> None:
+        """Pre-trigger compilation of every ladder bucket so no live request pays a
+        compile. Uses the retriever's own warmup hook (``jit_retrieve`` exposes one)
+        when present, else pushes an empty padded batch through each shape."""
+        if hasattr(self.retriever, "warmup"):
+            self.retriever.warmup([(b.batch, b.nq) for b in self.ladder.shapes()])
+            return
+        for b in self.ladder.shapes():
+            qb = make_query_batch([_EMPTY_QUERY] * b.batch, self.vocab, nq_max=b.nq)
+            self.retriever(qb)
+
+    def shutdown(self) -> None:
+        """Idempotent. Stops the worker, then fails anything still queued."""
+        self._stop.set()
+        self._thread.join(timeout=10)
+        self._drain()  # submits that raced the worker's own exit drain
+
+    # ---- engine thread ---------------------------------------------------------
 
     def _collect(self) -> list:
         items = []
@@ -107,24 +234,43 @@ class RetrievalEngine:
     def _loop(self) -> None:
         while not self._stop.is_set():
             items = self._collect()
-            if not items:
-                continue
-            queries = [(t, w) for _, t, w, _ in items]
-            # pad the batch to the compiled size with empty queries
-            while len(queries) < self.max_batch:
-                queries.append((np.zeros(0, np.int32), np.zeros(0, np.float32)))
-            qb = make_query_batch(queries, self.vocab, nq_max=self.nq_max)
+            if items:
+                self._serve_batch(items)
+        self._drain()
+
+    def _serve_batch(self, items: list) -> None:
+        bucket = self.ladder.select(len(items), max(len(t) for _, t, _, _, _ in items))
+        queries = [(t, w) for _, t, w, _, _ in items]
+        while len(queries) < bucket.batch:
+            queries.append(_EMPTY_QUERY)
+        qb = make_query_batch(queries, self.vocab, nq_max=bucket.nq)
+        try:
             out = self.retriever(qb)
             # RetrievalResult (or any ids/scores-leading tuple) both unpack here
-            ids, scores = out[0], out[1]
-            ids = np.asarray(ids)
-            scores = np.asarray(scores)
-            now = time.monotonic()
-            for i, (t0, _, _, fut) in enumerate(items):
-                self.stats.record((now - t0) * 1e3)
-                fut.set_result((ids[i], scores[i]))
-            self.stats.batches += 1
+            ids = np.asarray(out[0])
+            scores = np.asarray(out[1])
+        except Exception as exc:  # noqa: BLE001 — isolate: fail this batch, keep serving
+            for _, _, _, _, fut in items:
+                _try_set_exception(fut, exc)
+            self.stats.record_failures(len(items))
+            return
+        now = time.monotonic()
+        for i, (t0, _, _, key, fut) in enumerate(items):
+            # copies all around: don't pin the batch array, and don't let the cached
+            # row alias the caller's result (a caller mutating ids/scores in place
+            # must not corrupt what later hits are served from)
+            if self.cache is not None and key is not None:
+                self.cache.put(key, (ids[i].copy(), scores[i].copy()))
+            self.stats.record((now - t0) * 1e3)
+            _try_set_result(fut, (ids[i].copy(), scores[i].copy()))
+        self.stats.record_batch(bucket)
 
-    def shutdown(self) -> None:
-        self._stop.set()
-        self._thread.join(timeout=5)
+    def _drain(self) -> None:
+        exc = RuntimeError("RetrievalEngine shut down before serving this request")
+        while True:
+            try:
+                _, _, _, _, fut = self._q.get_nowait()
+            except queue.Empty:
+                return
+            _try_set_exception(fut, exc)
+            self.stats.record_rejected()

@@ -106,6 +106,28 @@ def test_blocks_scored_accounting(tiny_index, tiny_qb):
     assert (np.asarray(res.n_blocks_scored) <= tiny_index.n_blocks).all()
 
 
+def test_superblocks_visited_counts_distinct(tiny_index, tiny_qb):
+    """n_superblocks_visited counts DISTINCT superblocks, so it can never exceed NS.
+    The sp rule ignores ranks < γ0 and may re-select round-0 seed superblocks; those
+    are re-visits and must not be double-counted (mirrors n_blocks_scored). The
+    μ=η→∞ setting makes the rule select every candidate, which is exactly where the
+    double count used to overflow to γ0 + NS."""
+    ns = tiny_index.n_superblocks
+    for variant, kw in [
+        ("lsp0", {}),
+        ("lsp1", dict(mu=0.5)),
+        ("lsp2", dict(mu=1e6, eta=1e6)),
+        ("sp", dict(mu=1e6, eta=1e6)),
+    ]:
+        cfg = RetrievalConfig(variant=variant, k=10, gamma=ns, gamma0=8, beta=1.0, **kw)
+        res = retrieve(tiny_index, tiny_qb, cfg, impl="ref")
+        n = np.asarray(res.n_superblocks_visited)
+        assert (n <= ns).all(), (variant, int(n.max()), ns)
+        assert (n >= min(cfg.gamma0, ns)).all(), (variant, int(n.min()))
+    # the all-eligible sp case saturates exactly at NS
+    assert (n == ns).all(), n
+
+
 def test_flat_inv_matches_fwd_scoring(tiny_index, tiny_qb):
     cfg_f = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5, doc_layout="fwd")
     cfg_i = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5, doc_layout="flat")
