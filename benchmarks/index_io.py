@@ -1,0 +1,205 @@
+"""Index lifecycle I/O benchmark (DESIGN.md §7): build vs save vs cold-load vs
+mmap-load vs live-swap-under-load. Emits ``BENCH_index_io.json``.
+
+The lifecycle claim: a persisted index must make engine starts O(file-open), not
+O(rebuild) — mmap open is gated at >= 10x faster than a full ``build_index`` — and
+a live engine under continuous traffic must hot-swap to a re-built index with zero
+failed futures and zero stale results (epoch-keyed cache; post-swap answers are
+checked value-for-value against a clean engine on the new index).
+
+  PYTHONPATH=src python -m benchmarks.index_io          # full settings
+  PYTHONPATH=src python -m benchmarks.index_io --smoke  # CI settings
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import CORPUS_CFG, Row, corpus, queries
+from repro.core import RetrievalConfig, jit_retrieve
+from repro.index.builder import IndexBuildConfig, build_index
+from repro.index.store import load_index, read_manifest, save_index, to_device
+from repro.serve import RetrievalEngine
+
+BENCH_JSON = os.environ.get("BENCH_INDEX_IO_JSON", "BENCH_index_io.json")
+BUILD_CFG = IndexBuildConfig(b=8, c=16, kmeans_iters=4)
+# the swapped-to index must NOT be byte-identical to the serving one, or the
+# staleness audit proves nothing — a different clustering seed reorders blocks
+# and shifts per-block quant scales, so stale answers become distinguishable
+SWAP_CFG = dataclasses.replace(BUILD_CFG, seed=1)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def _live_swap(idx_a, idx_b, store_dir: str, n_clients: int, seconds: float) -> dict:
+    """Continuous traffic on idx_a, hot-swap to idx_b from disk, keep serving.
+    Returns failure/staleness counts — the zero-downtime acceptance numbers."""
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5)
+    factory = lambda ix: jit_retrieve(ix, cfg, impl="ref")
+    eng = RetrievalEngine(factory(idx_a), CORPUS_CFG.vocab, max_batch=8, nq_max=64,
+                          max_wait_ms=1.0, cache_size=256, warmup=True,
+                          retriever_factory=factory)
+    pool = [(np.asarray(t), np.asarray(w)) for t, w in queries()]
+    stop = threading.Event()
+    futures, post_swap = [], []
+    lock = threading.Lock()
+    swapped = threading.Event()
+
+    def client(seed: int):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            qi = int(rng.integers(len(pool)))
+            try:
+                f = eng.submit(*pool[qi])
+            except RuntimeError:
+                return
+            with lock:
+                futures.append(f)
+                if swapped.is_set() and len(post_swap) < 4096:
+                    post_swap.append((qi, f))
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in range(n_clients)]
+    for t in threads:
+        t.start()
+    time.sleep(seconds / 2)
+    _, swap_s = _timed(lambda: eng.swap_index(store_dir))
+    swapped.set()
+    time.sleep(seconds / 2)
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+    failed = sum(1 for f in futures if f.exception(timeout=120) is not None)
+    stats = eng.stats.summary()
+    eng.shutdown()
+
+    # staleness audit: every post-swap answer must match a clean engine on idx_b
+    # bit-for-bit — a stale cache row or a worker still on idx_a would diverge
+    ref = RetrievalEngine(factory(idx_b), CORPUS_CFG.vocab, max_batch=8, nq_max=64,
+                          cache_size=0)
+    old = RetrievalEngine(factory(idx_a), CORPUS_CFG.vocab, max_batch=8, nq_max=64,
+                          cache_size=0)
+    stale = 0
+    want: dict[int, tuple] = {}
+    distinguishable = 0
+    for qi in {qi for qi, _ in post_swap}:
+        want[qi] = ref.submit(*pool[qi]).result(timeout=120)
+        stale_ids, stale_scores = old.submit(*pool[qi]).result(timeout=120)
+        if not (np.array_equal(stale_ids, want[qi][0])
+                and np.array_equal(stale_scores, want[qi][1])):
+            distinguishable += 1
+    old.shutdown()
+    if post_swap and distinguishable == 0:
+        raise RuntimeError("old/new index answer identically on every audited query; "
+                           "the staleness audit would be vacuous")
+    for qi, f in post_swap:
+        ids, scores = f.result(timeout=1)
+        if not (np.array_equal(ids, want[qi][0]) and np.array_equal(scores, want[qi][1])):
+            stale += 1
+    ref.shutdown()
+    return {
+        "distinguishable_queries": distinguishable,
+        "audited_distinct_queries": len(want),
+        "swap_ms": stats["last_swap_ms"],
+        "swap_wall_s": swap_s,
+        "requests_total": len(futures),
+        "post_swap_audited": len(post_swap),
+        "failed_futures": failed,
+        "stale_results": stale,
+        "engine_failures": stats["failures"],
+        "cache_hit_rate": stats["cache_hit_rate"],
+        "p99_ms": stats["p99_ms"],
+    }
+
+
+def run() -> list[Row]:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    cor = corpus()
+    tmp = tempfile.mkdtemp(prefix="bench_index_io_")
+    store_dir = os.path.join(tmp, "index")
+    try:
+        idx_a, build_s = _timed(
+            lambda: build_index(cor.doc_ptr, cor.tids, cor.ws, cor.vocab, BUILD_CFG)
+        )
+        _, save_s = _timed(lambda: save_index(store_dir, idx_a, BUILD_CFG))
+        size_mb = sum(
+            os.path.getsize(os.path.join(store_dir, f)) for f in os.listdir(store_dir)
+        ) / 1e6
+        cold, cold_s = _timed(lambda: load_index(store_dir, mmap=False))
+        mm, mmap_s = _timed(lambda: load_index(store_dir, mmap=True))
+        _, realize_s = _timed(lambda: to_device(mm))
+        del cold
+
+        # the live-swap arm flips to a genuinely different index (other clustering
+        # seed) so the staleness audit can tell old answers from new ones
+        idx_b = build_index(cor.doc_ptr, cor.tids, cor.ws, cor.vocab, SWAP_CFG)
+        swap_dir = os.path.join(tmp, "index_v2")
+        save_index(swap_dir, idx_b, SWAP_CFG)
+        swap = _live_swap(idx_a, idx_b, swap_dir,
+                          n_clients=2 if smoke else 4,
+                          seconds=2.0 if smoke else 6.0)
+
+        payload = {
+            "backend": "cpu",
+            "n_docs": CORPUS_CFG.n_docs,
+            "vocab": CORPUS_CFG.vocab,
+            "index_size_mb": size_mb,
+            "fingerprint": read_manifest(store_dir)["fingerprint"],
+            "build_s": build_s,
+            "save_s": save_s,
+            "cold_load_s": cold_s,
+            "mmap_open_s": mmap_s,
+            "device_realize_s": realize_s,
+            "mmap_speedup_vs_build": build_s / max(mmap_s, 1e-9),
+            "cold_speedup_vs_build": build_s / max(cold_s, 1e-9),
+            "swap": swap,
+        }
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+
+        return [
+            Row("index_io/build", build_s * 1e6, f"n_docs={CORPUS_CFG.n_docs}"),
+            Row("index_io/save", save_s * 1e6, f"size_mb={size_mb:.1f}"),
+            Row("index_io/cold_load", cold_s * 1e6,
+                f"speedup_vs_build={payload['cold_speedup_vs_build']:.0f}x"),
+            Row("index_io/mmap_open", mmap_s * 1e6,
+                f"speedup_vs_build={payload['mmap_speedup_vs_build']:.0f}x"),
+            Row("index_io/live_swap", swap["swap_ms"] * 1e3,
+                f"requests={swap['requests_total']};failed={swap['failed_futures']};"
+                f"stale={swap['stale_results']};p99_ms={swap['p99_ms']:.1f}"),
+            Row("index_io/claims", 0.0,
+                f"mmap_ge_10x={payload['mmap_speedup_vs_build'] >= 10};"
+                f"zero_failed={swap['failed_futures'] == 0};"
+                f"zero_stale={swap['stale_results'] == 0};json={BENCH_JSON}"),
+        ]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI settings: shorter load phase")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ.setdefault("BENCH_SMOKE", "1")
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for row in run():
+        print(row.csv(), flush=True)
+    print(f"# suite index_io done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

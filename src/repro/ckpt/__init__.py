@@ -1,1 +1,9 @@
-from repro.ckpt.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.ckpt.checkpoint import (
+    atomic_commit_dir,
+    dir_lock,
+    fsync_write,
+    is_complete,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -16,11 +16,13 @@ Properties needed at 1000-node scale, implemented here:
 
 from __future__ import annotations
 
+import contextlib
 import io
 import os
+import shutil
 import threading
 import zlib
-from typing import Any, Optional
+from typing import Any, Iterator, Optional
 
 import jax
 import msgpack
@@ -31,11 +33,71 @@ try:  # zstd is optional — containers without it fall back to stdlib zlib
 except ImportError:  # pragma: no cover
     zstandard = None
 
-from repro.common.tree_utils import flatten_with_paths
+from repro.common.tree_utils import _path_str, flatten_with_paths
 
 
 def _leaf_paths(tree: Any) -> dict[str, Any]:
     return flatten_with_paths(tree)
+
+
+# ------------------------------------------------------------ atomic dir commit
+# Shared by checkpoints and the index store (repro.index.store): a directory of
+# files becomes visible all-or-nothing via tmp-dir -> fsync -> rename -> marker.
+
+COMMIT_MARKER = ".complete"
+
+_dir_locks: dict[str, threading.Lock] = {}
+_dir_locks_guard = threading.Lock()
+
+
+def dir_lock(directory: str) -> threading.Lock:
+    """One lock per (absolute) directory: serializes concurrent writers — two
+    overlapping async saves into the same tree would otherwise race each other's
+    tmp dirs, renames and gc sweeps."""
+    key = os.path.abspath(directory)
+    with _dir_locks_guard:
+        return _dir_locks.setdefault(key, threading.Lock())
+
+
+@contextlib.contextmanager
+def atomic_commit_dir(final: str) -> Iterator[str]:
+    """Yield a tmp directory to populate; on clean exit it atomically replaces
+    ``final`` and gains the commit marker. On error the tmp dir is removed and
+    ``final`` is untouched — a preempted writer never corrupts the published copy.
+    A previous committed copy is moved aside (not deleted) until the new marker is
+    durable, so a crash in the replace window never leaves zero loadable copies."""
+    tmp = final + ".tmp"
+    old = final + ".old"
+    for stale in (tmp, old):
+        if os.path.exists(stale):
+            shutil.rmtree(stale)
+    os.makedirs(tmp)
+    try:
+        yield tmp
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if os.path.exists(final):
+        os.rename(final, old)
+    os.rename(tmp, final)
+    with open(os.path.join(final, COMMIT_MARKER), "w") as f:
+        f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    shutil.rmtree(old, ignore_errors=True)
+
+
+def is_complete(path: str) -> bool:
+    """True iff ``path`` is a committed (fully written) directory."""
+    return os.path.exists(os.path.join(path, COMMIT_MARKER))
+
+
+def fsync_write(path: str, data: bytes) -> None:
+    """Write + flush + fsync: the commit rename must not outrun the data blocks."""
+    with open(path, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 # Compressed-array file name per codec; restore probes both so checkpoints written
@@ -76,28 +138,16 @@ def save_checkpoint(
     }
 
     def write():
-        final = os.path.join(directory, f"step_{step}")
-        tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
-        buf = io.BytesIO()
-        np.savez(buf, **host)
-        name, comp = _compress(buf.getvalue())
-        with open(os.path.join(tmp, name), "wb") as f:
-            f.write(comp)
-            f.flush()
-            os.fsync(f.fileno())
-        with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
-            f.write(msgpack.packb(meta))
-            f.flush()
-            os.fsync(f.fileno())
-        if os.path.exists(final):
-            import shutil
-
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        with open(os.path.join(final, ".complete"), "w") as f:
-            f.write("ok")
-        _gc(directory, keep)
+        # per-directory lock: overlapping async saves (or a save racing another
+        # save's _gc) must not rename/rmtree the same dirs concurrently
+        with dir_lock(directory):
+            with atomic_commit_dir(os.path.join(directory, f"step_{step}")) as tmp:
+                buf = io.BytesIO()
+                np.savez(buf, **host)
+                name, comp = _compress(buf.getvalue())
+                fsync_write(os.path.join(tmp, name), comp)
+                fsync_write(os.path.join(tmp, "meta.msgpack"), msgpack.packb(meta))
+            _gc(directory, keep)
 
     if async_write:
         t = threading.Thread(target=write, daemon=True)
@@ -110,8 +160,6 @@ def save_checkpoint(
 def _gc(directory: str, keep: int) -> None:
     steps = sorted(_complete_steps(directory))
     for s in steps[:-keep]:
-        import shutil
-
         shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
 
 
@@ -120,8 +168,8 @@ def _complete_steps(directory: str) -> list[int]:
     if not os.path.isdir(directory):
         return out
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(directory, name, ".complete")):
+        if name.startswith("step_") and not name.endswith((".tmp", ".old")):
+            if is_complete(os.path.join(directory, name)):
                 out.append(int(name.split("_")[1]))
     return out
 
@@ -140,6 +188,10 @@ def restore_checkpoint(directory: str, target: Any, step: Optional[int] = None, 
         if step is None:
             raise FileNotFoundError(f"no complete checkpoint under {directory}")
     path = os.path.join(directory, f"step_{step}")
+    if not is_complete(path):
+        # an explicit step must honour the commit marker too: step_<N> may exist as
+        # an uncommitted or half-deleted directory and must never be loaded
+        raise FileNotFoundError(f"checkpoint {path} has no {COMMIT_MARKER} marker")
     raw = _decompress(path)
     arrays = dict(np.load(io.BytesIO(raw)))
 
@@ -149,10 +201,12 @@ def restore_checkpoint(directory: str, target: Any, step: Optional[int] = None, 
         raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
 
     flat_shard = _leaf_paths(shardings) if shardings is not None else None
-    leaves, treedef = jax.tree.flatten(target)
-    keys = list(flat_target.keys())
+    # pair each leaf with the key derived from its OWN path (tree_flatten_with_path
+    # gives (path, leaf) in treedef leaf order) — never zip two flatten orders
+    path_leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
     new_leaves = []
-    for k, leaf in zip(keys, leaves):
+    for key_path, leaf in path_leaves:
+        k = "/".join(_path_str(p) for p in key_path)
         arr = arrays[k]
         if list(arr.shape) != list(leaf.shape):
             raise ValueError(f"shape mismatch for {k}: ckpt {arr.shape} vs target {leaf.shape}")

@@ -44,7 +44,11 @@ def query_key(tids: np.ndarray, ws: np.ndarray, nq_max: int = 0) -> bytes:
 
 
 def make_query_batch(queries: list[tuple[np.ndarray, np.ndarray]], vocab: int, nq_max: int = 0) -> QueryBatch:
-    """queries: list of (tids, weights). Sorted by weight desc so β-pruning is a prefix."""
+    """queries: list of (tids, weights). Rows use the canonical ordering (weight
+    desc, term-id tie-break — same as ``canonical_query``), so β-pruning is a
+    prefix AND identical term/weight multisets always batch identically: a stable
+    weight-only sort would leave equal-weight ties in input order and could
+    truncate permutations of the same query differently at nq_max."""
     if not nq_max:
         nq_max = max((len(t) for t, _ in queries), default=1)
         nq_max = max(8, -(-nq_max // 8) * 8)
@@ -52,9 +56,9 @@ def make_query_batch(queries: list[tuple[np.ndarray, np.ndarray]], vocab: int, n
     tids = np.full((q, nq_max), vocab, np.int32)
     ws = np.zeros((q, nq_max), np.float32)
     for i, (t, w) in enumerate(queries):
-        order = np.argsort(-np.asarray(w, np.float32), kind="stable")[:nq_max]
-        tids[i, : len(order)] = np.asarray(t)[order]
-        ws[i, : len(order)] = np.asarray(w, np.float32)[order]
+        ct, cw = canonical_query(t, w, nq_max)
+        tids[i, : len(ct)] = ct
+        ws[i, : len(cw)] = cw
     return QueryBatch(jnp.asarray(tids), jnp.asarray(ws), vocab)
 
 

@@ -1,2 +1,18 @@
-from repro.index.layout import FlatDocsQ, FlatInv, FwdDocs, FwdDocsQ, LSPIndex, PackedBounds
+from repro.index.layout import (
+    LAYOUT_VERSION,
+    FlatDocsQ,
+    FlatInv,
+    FwdDocs,
+    FwdDocsQ,
+    LSPIndex,
+    PackedBounds,
+)
 from repro.index.builder import build_index, IndexBuildConfig
+from repro.index.store import (
+    IndexStoreError,
+    build_config_of,
+    load_index,
+    read_manifest,
+    save_index,
+    to_device,
+)

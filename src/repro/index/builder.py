@@ -89,9 +89,11 @@ def build_index(
 
     sb_avg_pb = None
     if cfg.build_avg:
-        sb_sum = np.zeros((vocab, n_superblocks), np.float32)
-        np.add.at(sb_sum, (tids, post_blk // c), ws)
-        sb_avg = sb_sum / float(b * c)
+        # SBavg is the avg-of-block-max (mean over the superblock's c block maxima),
+        # exactly what the SP / LSP2 rule's SBavg(X) > θ/η branch expects — NOT the
+        # mean posting weight per doc slot, which under-counts multi-doc blocks and
+        # silently distorts SP eligibility relative to the paper
+        sb_avg = blk_max.reshape(vocab, n_superblocks, c).mean(axis=2)
         q, s = qbounds(sb_avg)
         sb_avg_pb = PackedBounds(
             jnp.asarray(pack_rows_strided(q, cfg.bound_bits, SEG_WORDS)),

@@ -13,6 +13,12 @@ from typing import NamedTuple, Optional
 import jax.numpy as jnp
 import numpy as np
 
+# On-disk layout version (repro.index.store). Bump whenever the meaning or shape of
+# any LSPIndex leaf changes (packing granules, quantization semantics, field order):
+# the store refuses to load a manifest whose version differs, because a stale index
+# silently misinterpreted is a correctness bug, not a compatibility feature.
+LAYOUT_VERSION = 1
+
 
 class PackedBounds(NamedTuple):
     """Term-major packed block/superblock max (or avg) term weights.

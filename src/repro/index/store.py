@@ -1,0 +1,203 @@
+"""Persisted on-disk LSPIndex: versioned raw-.npy format, mmap load, fingerprinting.
+
+Index building (clustering + packing + quantization) is an offline batch job that
+takes orders of magnitude longer than reading its output back — so a built index is
+persisted once and every engine start (or hot-swap) loads it instead of rebuilding:
+
+  <dir>/manifest.msgpack   layout version, IndexBuildConfig, content fingerprint,
+                           and the typed tree structure (every scalar field inline,
+                           every array field's dtype/shape + file name)
+  <dir>/<leaf>.npy         one raw numpy file per array leaf (no compression:
+                           ``np.load(mmap_mode="r")`` opens multi-GB leaves in
+                           milliseconds and pages lazily)
+  <dir>/.complete          commit marker — written via the shared atomic-commit
+                           protocol of repro.ckpt (tmp dir -> fsync -> rename ->
+                           marker), so a preempted writer never publishes a torn index
+
+Loading is structure-checked: the manifest's layout version must equal the code's
+``LAYOUT_VERSION`` and every array's dtype/shape must match the manifest, else
+``IndexStoreError``. The fingerprint (blake2b over all leaf bytes in manifest order)
+identifies index *content* — ``load_index(verify=True)`` recomputes and compares it
+(reads every page; skip for mmap fast-open), and serving uses it to tell two corpus
+generations apart across hot-swaps.
+
+``load_index(device=False)`` returns numpy (possibly mmap-backed) leaves — cheap to
+open, fine for inspection and re-serialization. The retrieval pipeline indexes leaves
+with traced values under ``jax.jit`` (numpy arrays cannot be), so serving paths load
+with ``device=True`` (or call ``to_device``) to realize array leaves as jax arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import os
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.ckpt.checkpoint import atomic_commit_dir, dir_lock, fsync_write, is_complete
+from repro.index.builder import IndexBuildConfig
+from repro.index.layout import (
+    LAYOUT_VERSION,
+    FlatDocsQ,
+    FlatInv,
+    FwdDocs,
+    FwdDocsQ,
+    LSPIndex,
+    PackedBounds,
+)
+
+MANIFEST_NAME = "manifest.msgpack"
+MANIFEST_FORMAT = "lsp-index"
+
+# Every NamedTuple node that may appear in an LSPIndex, by manifest type tag. The
+# manifest spells out the full tree, so a load can only ever construct these types.
+_NODE_TYPES = {t.__name__: t for t in (LSPIndex, PackedBounds, FwdDocs, FlatInv, FwdDocsQ, FlatDocsQ)}
+
+
+class IndexStoreError(RuntimeError):
+    """Manifest/layout/fingerprint mismatch: the on-disk index cannot be trusted."""
+
+
+def _encode(obj: Any, path: str, arrays: dict[str, np.ndarray]) -> dict:
+    if obj is None:
+        return {"kind": "none"}
+    if isinstance(obj, (np.ndarray, jnp.ndarray)):
+        arr = np.asarray(obj)
+        arrays[path] = arr
+        return {"kind": "array", "file": path + ".npy", "dtype": str(arr.dtype), "shape": list(arr.shape)}
+    if isinstance(obj, np.generic):  # 0-d numpy scalar (e.g. a float32 global scale)
+        return {"kind": "scalar", "value": obj.item()}
+    if isinstance(obj, (bool, int, float, str)):
+        return {"kind": "scalar", "value": obj}
+    node = _NODE_TYPES.get(type(obj).__name__)
+    if node is not None and isinstance(obj, node):
+        fields = {f: _encode(getattr(obj, f), f"{path}.{f}" if path else f, arrays) for f in obj._fields}
+        return {"kind": type(obj).__name__, "fields": fields}
+    raise TypeError(f"unsupported leaf at {path!r}: {type(obj)!r}")
+
+
+def _decode(spec: dict, directory: str, mmap: bool) -> Any:
+    kind = spec["kind"]
+    if kind == "none":
+        return None
+    if kind == "scalar":
+        return spec["value"]
+    if kind == "array":
+        arr = np.load(os.path.join(directory, spec["file"]), mmap_mode="r" if mmap else None)
+        if str(arr.dtype) != spec["dtype"] or list(arr.shape) != spec["shape"]:
+            raise IndexStoreError(
+                f"{spec['file']}: on-disk {arr.dtype}{list(arr.shape)} != "
+                f"manifest {spec['dtype']}{spec['shape']}"
+            )
+        return arr
+    node = _NODE_TYPES.get(kind)
+    if node is None:
+        raise IndexStoreError(f"unknown node type {kind!r} in manifest")
+    return node(**{f: _decode(s, directory, mmap) for f, s in spec["fields"].items()})
+
+
+def _fingerprint(arrays: dict[str, np.ndarray]) -> str:
+    """blake2b over every leaf's identity + bytes, in sorted leaf-path order."""
+    h = hashlib.blake2b(digest_size=16)
+    for key in sorted(arrays):
+        arr = np.ascontiguousarray(arrays[key])
+        h.update(f"{key}:{arr.dtype}:{arr.shape};".encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def save_index(directory: str, index: LSPIndex, cfg: Optional[IndexBuildConfig] = None) -> str:
+    """Persist ``index`` under ``directory`` (atomically replacing any previous
+    committed copy). Returns the content fingerprint."""
+    arrays: dict[str, np.ndarray] = {}
+    tree = _encode(index, "", arrays)
+    fingerprint = _fingerprint(arrays)
+    manifest = {
+        "format": MANIFEST_FORMAT,
+        "layout_version": LAYOUT_VERSION,
+        "fingerprint": fingerprint,
+        "build_config": dataclasses.asdict(cfg) if cfg is not None else None,
+        "tree": tree,
+    }
+    parent = os.path.dirname(os.path.abspath(directory))
+    os.makedirs(parent, exist_ok=True)
+    with dir_lock(parent):
+        with atomic_commit_dir(os.path.abspath(directory)) as tmp:
+            for key, arr in arrays.items():
+                # leaf data must be durable before the commit marker is: serialize
+                # through a buffer so the bytes land via the fsync'ing writer
+                buf = io.BytesIO()
+                np.save(buf, arr)
+                fsync_write(os.path.join(tmp, key + ".npy"), buf.getvalue())
+            fsync_write(os.path.join(tmp, MANIFEST_NAME), msgpack.packb(manifest))
+    return fingerprint
+
+
+def read_manifest(directory: str) -> dict:
+    """The raw manifest of a committed index dir (version / fingerprint / config)."""
+    if not is_complete(directory):
+        raise FileNotFoundError(f"{directory} is not a committed index (missing marker)")
+    with open(os.path.join(directory, MANIFEST_NAME), "rb") as f:
+        manifest = msgpack.unpackb(f.read(), strict_map_key=False)
+    if manifest.get("format") != MANIFEST_FORMAT:
+        raise IndexStoreError(f"{directory}: not an index manifest ({manifest.get('format')!r})")
+    return manifest
+
+
+def load_index(
+    directory: str,
+    mmap: bool = True,
+    device: bool = False,
+    verify: bool = False,
+    expect_fingerprint: Optional[str] = None,
+) -> LSPIndex:
+    """Load a persisted index. ``mmap`` keeps array leaves disk-backed (millisecond
+    open); ``device=True`` realizes them as jax arrays for the jitted retrieval path;
+    ``verify=True`` (or ``expect_fingerprint``) re-hashes the content — that reads
+    every page, so it is off by default on the mmap fast path."""
+    manifest = read_manifest(directory)
+    if manifest["layout_version"] != LAYOUT_VERSION:
+        raise IndexStoreError(
+            f"{directory}: layout version {manifest['layout_version']} != "
+            f"code version {LAYOUT_VERSION}; rebuild the index"
+        )
+    if expect_fingerprint is not None and manifest["fingerprint"] != expect_fingerprint:
+        raise IndexStoreError(
+            f"{directory}: fingerprint {manifest['fingerprint']} != expected {expect_fingerprint}"
+        )
+    index = _decode(manifest["tree"], directory, mmap)
+    if verify:
+        arrays: dict[str, np.ndarray] = {}
+        _encode(index, "", arrays)
+        actual = _fingerprint(arrays)
+        if actual != manifest["fingerprint"]:
+            raise IndexStoreError(
+                f"{directory}: content hash {actual} != manifest fingerprint "
+                f"{manifest['fingerprint']} (corrupted or tampered leaves)"
+            )
+    return to_device(index) if device else index
+
+
+def build_config_of(directory: str) -> Optional[IndexBuildConfig]:
+    """The IndexBuildConfig recorded at save time, if any."""
+    cfg = read_manifest(directory).get("build_config")
+    return IndexBuildConfig(**cfg) if cfg is not None else None
+
+
+def to_device(index: LSPIndex) -> LSPIndex:
+    """Realize array leaves as jax arrays (scalars and None stay as-is): required
+    before ``retrieve``/``jit_retrieve``, which index leaves with traced values."""
+
+    def conv(obj: Any) -> Any:
+        if obj is None or isinstance(obj, (bool, int, float, str, np.generic)):
+            return obj
+        if isinstance(obj, (np.ndarray, jnp.ndarray)):
+            return jnp.asarray(obj)
+        return type(obj)(**{f: conv(getattr(obj, f)) for f in obj._fields})
+
+    return conv(index)

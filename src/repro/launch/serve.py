@@ -2,7 +2,15 @@
 batched queries through the bucketed engine (shape-bucket ladder + result cache +
 resilient pipeline, DESIGN.md §6) with latency percentiles.
 
+With ``--index-dir`` the launcher uses the persisted-index lifecycle (DESIGN.md §7):
+a committed index under that directory is mmap-loaded (milliseconds) instead of
+rebuilt; a fresh build is saved there for the next start. ``--swap-mid-run``
+demonstrates zero-downtime hot-swap: halfway through the request stream the engine
+flips to a re-built index while traffic keeps flowing.
+
   PYTHONPATH=src python -m repro.launch.serve --n-docs 16384 --requests 128
+  PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/lsp_index  # save, then mmap
+  PYTHONPATH=src python -m repro.launch.serve --swap-mid-run
   PYTHONPATH=src python -m repro.launch.serve --no-buckets --cache-size 0  # old engine
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
       PYTHONPATH=src python -m repro.launch.serve --sharded
@@ -11,6 +19,7 @@ resilient pipeline, DESIGN.md §6) with latency percentiles.
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -19,6 +28,7 @@ from repro.core import RetrievalConfig, jit_retrieve
 from repro.core.query import QueryBatch
 from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
 from repro.index.builder import IndexBuildConfig, build_index
+from repro.index.store import IndexStoreError, load_index, read_manifest, save_index
 from repro.serve import RetrievalEngine
 
 
@@ -38,12 +48,38 @@ def main() -> None:
     p.add_argument("--cache-size", type=int, default=1024, help="result-cache entries; 0 disables")
     p.add_argument("--no-warmup", action="store_true", help="skip bucket pre-compilation")
     p.add_argument("--sharded", action="store_true")
+    p.add_argument("--index-dir", default=None,
+                   help="persisted-index dir: mmap-load if committed, else build + save")
+    p.add_argument("--swap-mid-run", action="store_true",
+                   help="hot-swap to a re-built index halfway through the stream")
     args = p.parse_args()
 
     ccfg = CorpusConfig(n_docs=args.n_docs, vocab=args.vocab, n_topics=32, seed=0)
     corpus = make_corpus(ccfg)
-    idx = build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab,
-                      IndexBuildConfig(b=args.b, c=args.c))
+    bcfg = IndexBuildConfig(b=args.b, c=args.c)
+
+    def build():
+        return build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab, bcfg)
+
+    idx = None
+    if args.index_dir:
+        try:
+            t0 = time.perf_counter()
+            idx = load_index(args.index_dir, mmap=True, device=True)
+            fp = read_manifest(args.index_dir)["fingerprint"]
+            print(f"[serve] mmap-loaded index {args.index_dir} ({fp[:12]}…) "
+                  f"in {time.perf_counter() - t0:.3f}s")
+        except FileNotFoundError:
+            pass
+        except IndexStoreError as exc:  # version/manifest drift -> rebuild + resave
+            print(f"[serve] stored index unusable ({exc}); rebuilding")
+    if idx is None:
+        t0 = time.perf_counter()
+        idx = build()
+        print(f"[serve] built index in {time.perf_counter() - t0:.1f}s")
+        if args.index_dir:
+            fp = save_index(args.index_dir, idx, bcfg)
+            print(f"[serve] saved index -> {args.index_dir} ({fp[:12]}…)")
     gamma = args.gamma or max(16, idx.n_superblocks // 8)
     cfg = RetrievalConfig(variant=args.variant, k=args.k, gamma=gamma, beta=0.33)
     print(f"[serve] index NB={idx.n_blocks} NS={idx.n_superblocks}, {args.variant} γ={gamma}")
@@ -69,10 +105,17 @@ def main() -> None:
         retriever, corpus.vocab, max_batch=batch_q, nq_max=64,
         batch_buckets=batch_buckets, cache_size=args.cache_size,
         warmup=not args.no_warmup,
+        retriever_factory=lambda ix: jit_retrieve(ix, cfg),
     )
     print(f"[serve] buckets {eng.ladder}, cache={args.cache_size}")
     queries = make_queries(ccfg, corpus, args.requests)
-    futs = [eng.submit(t, w) for t, w in queries]
+    half = len(queries) // 2 if args.swap_mid_run else len(queries)
+    futs = [eng.submit(t, w) for t, w in queries[:half]]
+    if args.swap_mid_run:
+        epoch = eng.swap_index(build())  # built + warmed off the worker; atomic flip
+        print(f"[serve] hot-swapped to epoch {epoch} "
+              f"({eng.stats.summary()['last_swap_ms']:.0f} ms) with traffic in flight")
+        futs += [eng.submit(t, w) for t, w in queries[half:]]
     for f in futs:
         f.result(timeout=600)
     eng.shutdown()
@@ -80,7 +123,8 @@ def main() -> None:
     print(f"[serve] {s['requests']} requests / {s['batches']} batches | "
           f"mean {s['mean_ms']:.1f} ms p50 {s['p50_ms']:.1f} p99 {s['p99_ms']:.1f}")
     print(f"[serve] buckets used {s['bucket_batches']} | "
-          f"cache hit rate {s['cache_hit_rate']:.2f} ({s['cache_hits']}/{s['cache_hits'] + s['cache_misses']})")
+          f"cache hit rate {s['cache_hit_rate']:.2f} ({s['cache_hits']}/{s['cache_hits'] + s['cache_misses']}) | "
+          f"swaps {s['swaps']} | failures {s['failures']}")
 
 
 if __name__ == "__main__":

@@ -5,8 +5,11 @@ heavy mass on a small head of distinct queries, so memoizing the final
 (ids, scores) of each canonical pruned query is a first-order throughput lever:
 a hit skips batching, padding and the whole traversal/scoring pipeline. Keys
 are the byte image of the canonical pruned (tids, ws) vectors
-(``repro.core.query.query_key``). Hit/miss counters live in ``ServeStats``
-(the engine owns the probe); the cache itself only tracks evictions.
+(``repro.core.query.query_key``), *prefixed with the engine's index epoch*: a
+hot-swap bumps the epoch, so results computed against a retired corpus can
+never be served again (see ``RetrievalEngine.swap_index``). Hit/miss counters
+live in ``ServeStats`` (the engine owns the probe); the cache itself only
+tracks evictions.
 """
 
 from __future__ import annotations
@@ -45,6 +48,17 @@ class QueryResultCache:
             while len(self._od) > self.capacity:
                 self._od.popitem(last=False)
                 self.evictions += 1
+
+    def purge(self, pred) -> int:
+        """Drop every entry whose key satisfies ``pred``; returns the count dropped.
+        The engine uses this after an index hot-swap: keys carry the index epoch, so
+        entries of retired epochs can never hit again — purging them just returns
+        their capacity to the live epoch instead of waiting for LRU decay."""
+        with self._lock:
+            dead = [k for k in self._od if pred(k)]
+            for k in dead:
+                del self._od[k]
+            return len(dead)
 
     def clear(self) -> None:
         with self._lock:

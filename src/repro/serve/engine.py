@@ -11,6 +11,13 @@ Failure semantics: a retriever exception fails exactly the futures of the batch
 that hit it and the loop keeps serving; submit() after shutdown() raises
 RuntimeError; shutdown() drains the queue and fails still-queued requests.
 
+Index lifecycle: swap_index()/swap_retriever() hot-swap the retriever with zero
+downtime — the replacement is built and warmed on the calling thread while the
+worker keeps serving on the old one, then (retriever, epoch) flip atomically
+between batches. Cache keys carry the index epoch: in-flight batches fill the
+cache under the epoch they were served at, so results computed against a
+retired corpus can never resurface after a swap.
+
 End-to-end latency percentiles (the paper's MRT metric at serving level),
 batch/bucket counts and cache hit/miss counters live in ServeStats, all
 mutated under one lock.
@@ -18,6 +25,7 @@ mutated under one lock.
 
 from __future__ import annotations
 
+import os
 import queue
 import threading
 import time
@@ -50,6 +58,8 @@ class ServeStats:
     cache_misses: int = 0
     failures: int = 0
     rejected: int = 0
+    swaps: int = 0
+    last_swap_ms: float = 0.0
     bucket_batches: dict = field(default_factory=dict)  # (batch, nq) -> count
 
     def __post_init__(self):
@@ -82,6 +92,11 @@ class ServeStats:
         with self._lock:
             self.rejected += n
 
+    def record_swap(self, latency_ms: float) -> None:
+        with self._lock:
+            self.swaps += 1
+            self.last_swap_ms = latency_ms
+
     def _snapshot(self) -> np.ndarray:
         with self._lock:
             return np.asarray(self.latencies_ms, dtype=np.float64)
@@ -102,6 +117,8 @@ class ServeStats:
                 "cache_hits": self.cache_hits,
                 "cache_misses": self.cache_misses,
                 "cache_hit_rate": self.cache_hits / probes if probes else 0.0,
+                "swaps": self.swaps,
+                "last_swap_ms": self.last_swap_ms,
                 "bucket_batches": {f"{b}x{q}": n for (b, q), n in sorted(self.bucket_batches.items())},
                 "mean_ms": float(lat.mean()) if lat.size else 0.0,
                 "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
@@ -132,6 +149,10 @@ class RetrievalEngine:
     single-shape engine (every batch padded to max_batch, no memoization) — the
     serving benchmark's baseline arm. ``queue_depth`` bounds the batching queue;
     a full queue blocks submit() (backpressure) instead of growing unboundedly.
+
+    ``retriever_factory`` (LSPIndex -> retriever) enables ``swap_index``: the
+    engine can then rebuild its retriever from a freshly loaded index without a
+    restart. A bare-retriever engine still supports ``swap_retriever``.
     """
 
     def __init__(
@@ -147,9 +168,14 @@ class RetrievalEngine:
         cache_size: int = 1024,
         queue_depth: int = 0,
         warmup: bool = False,
+        retriever_factory: Callable | None = None,
     ):
         self.retriever = retriever
+        self.retriever_factory = retriever_factory
         self.vocab = vocab
+        self._epoch = 0  # bumps on every swap; participates in the cache key
+        self._retriever_lock = threading.Lock()  # guards the (retriever, epoch) flip
+        self._swap_lock = threading.Lock()  # serializes whole swaps (build + warm + flip)
         self.ladder = BucketLadder(max_batch, nq_max, batch_buckets, nq_buckets)
         self.max_batch = self.ladder.max_batch
         self.nq_max = self.ladder.nq_max
@@ -176,14 +202,20 @@ class RetrievalEngine:
         fut: Future = Future()
         key = None
         if self.cache is not None:
-            key = query_key(t, w)  # idempotent on the already-canonical arrays
-            hit = self.cache.get(key)
+            qk = query_key(t, w)  # idempotent on the already-canonical arrays
+            # probe under the flip lock: a swap cannot retire the epoch between the
+            # epoch read and the cache lookup, so a stale hit is impossible even in
+            # the submit-vs-swap race window
+            with self._retriever_lock:
+                key = (self._epoch, qk)
+                hit = self.cache.get(key)
             if hit is not None:
                 self.stats.record((time.monotonic() - t0) * 1e3, cache_hit=True)
                 # copies: the cached row must not alias what callers may mutate
                 _try_set_result(fut, (hit[0].copy(), hit[1].copy()))
                 return fut
             self.stats.record_cache_miss()
+            key = qk  # the worker re-keys with the epoch its batch is served at
         item = (t0, t, w, key, fut)
         while True:
             if self._stop.is_set():
@@ -202,12 +234,55 @@ class RetrievalEngine:
         """Pre-trigger compilation of every ladder bucket so no live request pays a
         compile. Uses the retriever's own warmup hook (``jit_retrieve`` exposes one)
         when present, else pushes an empty padded batch through each shape."""
-        if hasattr(self.retriever, "warmup"):
-            self.retriever.warmup([(b.batch, b.nq) for b in self.ladder.shapes()])
+        self._warm(self.retriever)
+
+    def _warm(self, retriever) -> None:
+        if hasattr(retriever, "warmup"):
+            retriever.warmup([(b.batch, b.nq) for b in self.ladder.shapes()])
             return
         for b in self.ladder.shapes():
             qb = make_query_batch([_EMPTY_QUERY] * b.batch, self.vocab, nq_max=b.nq)
-            self.retriever(qb)
+            retriever(qb)
+
+    # ---- index lifecycle -------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        """Current index epoch (0 at start, +1 per completed swap)."""
+        return self._epoch
+
+    def swap_retriever(self, retriever: Callable[[QueryBatch], tuple], warm: bool = True) -> int:
+        """Zero-downtime hot-swap to ``retriever``. Warmup (every ladder bucket)
+        runs on the calling thread while the worker keeps serving on the old
+        retriever; the flip itself is atomic between batches. In-flight batches
+        complete on the retriever they started with; the epoch bump retires every
+        cache entry of the old index. Returns the new epoch."""
+        if self._stop.is_set():
+            raise RuntimeError("RetrievalEngine is shut down; swap rejected")
+        t0 = time.monotonic()
+        with self._swap_lock:
+            if warm:
+                self._warm(retriever)
+            with self._retriever_lock:
+                self.retriever = retriever
+                self._epoch += 1
+                epoch = self._epoch
+            if self.cache is not None:
+                self.cache.purge(lambda k: k[0] != epoch)
+        self.stats.record_swap((time.monotonic() - t0) * 1e3)
+        return epoch
+
+    def swap_index(self, path_or_index, warm: bool = True) -> int:
+        """Hot-swap to a new index: an LSPIndex, or a path to a persisted one
+        (``repro.index.store`` — loaded mmap-backed, then realized on device).
+        Needs ``retriever_factory``; build + warm happen off the worker thread."""
+        if self.retriever_factory is None:
+            raise RuntimeError("swap_index needs retriever_factory= at engine construction")
+        if isinstance(path_or_index, (str, os.PathLike)):
+            from repro.index.store import load_index
+
+            path_or_index = load_index(os.fspath(path_or_index), mmap=True, device=True)
+        return self.swap_retriever(self.retriever_factory(path_or_index), warm=warm)
 
     def shutdown(self) -> None:
         """Idempotent. Stops the worker, then fails anything still queued."""
@@ -239,13 +314,19 @@ class RetrievalEngine:
         self._drain()
 
     def _serve_batch(self, items: list) -> None:
+        # snapshot (retriever, epoch) atomically: the whole batch scores on one index
+        # and its cache fills are keyed to that same index's epoch — a swap landing
+        # mid-batch neither mixes indexes nor lets old-index results into the new
+        # epoch's cache namespace
+        with self._retriever_lock:
+            retriever, epoch = self.retriever, self._epoch
         bucket = self.ladder.select(len(items), max(len(t) for _, t, _, _, _ in items))
         queries = [(t, w) for _, t, w, _, _ in items]
         while len(queries) < bucket.batch:
             queries.append(_EMPTY_QUERY)
         qb = make_query_batch(queries, self.vocab, nq_max=bucket.nq)
         try:
-            out = self.retriever(qb)
+            out = retriever(qb)
             # RetrievalResult (or any ids/scores-leading tuple) both unpack here
             ids = np.asarray(out[0])
             scores = np.asarray(out[1])
@@ -260,7 +341,12 @@ class RetrievalEngine:
             # row alias the caller's result (a caller mutating ids/scores in place
             # must not corrupt what later hits are served from)
             if self.cache is not None and key is not None:
-                self.cache.put(key, (ids[i].copy(), scores[i].copy()))
+                # fill only while our epoch is still current (checked under the flip
+                # lock): a batch that completes after a swap must not park dead
+                # old-epoch rows in the LRU, where they would evict live entries
+                with self._retriever_lock:
+                    if epoch == self._epoch:
+                        self.cache.put((epoch, key), (ids[i].copy(), scores[i].copy()))
             self.stats.record((now - t0) * 1e3)
             _try_set_result(fut, (ids[i].copy(), scores[i].copy()))
         self.stats.record_batch(bucket)

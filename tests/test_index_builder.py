@@ -4,6 +4,7 @@ import numpy as np
 
 from repro.core.bounds import unpack_strided
 from repro.index.builder import IndexBuildConfig, build_index
+from repro.index.quantize import quantize_bounds_per_row
 
 
 def test_builder_integrity(tiny_corpus):
@@ -43,6 +44,72 @@ def test_builder_integrity(tiny_corpus):
         lvl = float(scale[t]) if scale.ndim else float(scale)
         assert blk[t, b] >= true_max - 1e-4, "quantized block max must upper-bound"
         assert blk[t, b] <= true_max + lvl + 1e-4, "and be tight to one level"
+
+
+def _true_block_max(corpus, idx):
+    """Dense [V, NB] block-max matrix recomputed independently from the corpus and
+    the built permutation."""
+    n_docs = len(corpus.doc_ptr) - 1
+    remap = np.asarray(idx.doc_remap)
+    pos_of = np.full(n_docs + 1, -1, np.int64)
+    pos_of[remap] = np.arange(len(remap))
+    doc_of_posting = np.repeat(np.arange(n_docs), np.diff(corpus.doc_ptr))
+    post_blk = pos_of[doc_of_posting] // idx.b
+    blk_max = np.zeros((corpus.vocab, idx.n_blocks), np.float32)
+    np.maximum.at(blk_max, (corpus.tids, post_blk), corpus.ws)
+    return blk_max, post_blk
+
+
+def test_sb_avg_is_avg_of_block_max(tiny_corpus, tiny_index):
+    """SP / LSP2's SBavg must be the mean of the superblock's c block maxima (what
+    layout.py documents and the pruning rule requires) — pinned bit-exactly against
+    an independent recomputation, and distinct from the old mean-posting-weight bug."""
+    _, corpus, _ = tiny_corpus
+    idx = tiny_index
+    assert idx.sb_avg is not None
+    blk_max, post_blk = _true_block_max(corpus, idx)
+    expected = blk_max.reshape(corpus.vocab, idx.n_superblocks, idx.c).mean(axis=2)
+
+    # the stored matrix is exactly quantize(avg-of-block-max): same quant pipeline
+    q_expected, s_expected = quantize_bounds_per_row(expected, idx.sb_avg.bits)
+    stored = np.asarray(
+        unpack_strided(idx.sb_avg.packed, idx.sb_avg.bits, idx.sb_avg.granule_words)
+    )[:, : idx.n_superblocks]
+    np.testing.assert_array_equal(stored, q_expected)
+    np.testing.assert_allclose(np.asarray(idx.sb_avg.scale), s_expected, rtol=1e-6)
+
+    # and it is NOT the seed's unfaithful mean-posting-weight-per-doc-slot matrix
+    sb_sum = np.zeros((corpus.vocab, idx.n_superblocks), np.float32)
+    np.add.at(sb_sum, (corpus.tids, post_blk // idx.c), corpus.ws)
+    old_wrong = sb_sum / float(idx.b * idx.c)
+    assert np.abs(expected - old_wrong).max() > 0.05, "corpus too degenerate to tell apart"
+
+
+def test_sp_eligibility_matches_hand_computed_rule(tiny_corpus, tiny_index):
+    """The SBavg(X) > θ/η branch, evaluated through the packed/quantized pipeline
+    (ops.sbmax on sb_avg), must match the rule computed by hand from the dequantized
+    avg-of-block-max matrix on a miniature single-term query."""
+    import jax.numpy as jnp
+
+    from repro.core import ops
+
+    _, corpus, _ = tiny_corpus
+    idx = tiny_index
+    stored = np.asarray(
+        unpack_strided(idx.sb_avg.packed, idx.sb_avg.bits, idx.sb_avg.granule_words)
+    )[:, : idx.n_superblocks].astype(np.float32)
+    scale = np.asarray(idx.sb_avg.scale)
+    deq = stored * (scale[:, None] if scale.ndim else scale)
+
+    term = int(np.argmax(deq.max(axis=1)))  # a term with signal
+    w = 2.0
+    sbavg = np.asarray(
+        ops.sbmax(idx.sb_avg, jnp.array([[term]], jnp.int32), jnp.array([[w]], jnp.float32), "ref")
+    )[0]
+    by_hand = w * deq[term]
+    np.testing.assert_allclose(sbavg, by_hand, rtol=1e-5, atol=1e-5)
+    theta, eta = float(np.median(by_hand[by_hand > 0])), 2.0
+    np.testing.assert_array_equal(sbavg > theta / eta, by_hand > theta / eta)
 
 
 def test_fwd_index_roundtrip(tiny_corpus, tiny_index):

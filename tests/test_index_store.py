@@ -1,0 +1,127 @@
+"""Index lifecycle: on-disk round-trip (every leaf, None optionals, mmap-backed
+loads feeding retrieve bit-identically), manifest version/fingerprint rejection,
+and atomic-commit semantics of the store."""
+
+import os
+import shutil
+import tempfile
+
+import msgpack
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import COMMIT_MARKER
+from repro.common.tree_utils import flatten_with_paths
+from repro.core import RetrievalConfig, jit_retrieve
+from repro.index.builder import IndexBuildConfig, build_index
+from repro.index.layout import LAYOUT_VERSION
+from repro.index.store import (
+    MANIFEST_NAME,
+    IndexStoreError,
+    build_config_of,
+    load_index,
+    read_manifest,
+    save_index,
+    to_device,
+)
+
+
+@pytest.fixture()
+def store_dir():
+    tmp = tempfile.mkdtemp()
+    yield os.path.join(tmp, "index")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _leaves_equal(a, b):
+    fa, fb = flatten_with_paths(a), flatten_with_paths(b)
+    assert set(fa) == set(fb)
+    for k in fa:
+        va, vb = fa[k], fb[k]
+        if isinstance(va, (bool, int, float, str)):
+            assert va == vb and type(vb) is type(va), k
+        else:
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb), err_msg=k)
+            assert np.asarray(va).dtype == np.asarray(vb).dtype, k
+
+
+def test_roundtrip_every_leaf(tiny_index, store_dir):
+    cfg = IndexBuildConfig(b=8, c=8, kmeans_iters=3)
+    fp = save_index(store_dir, tiny_index, cfg)
+    loaded = load_index(store_dir, mmap=False, verify=True)
+    _leaves_equal(tiny_index, loaded)
+    # flatten drops None subtrees; the optionals must survive explicitly too
+    assert (loaded.sb_avg is None) == (tiny_index.sb_avg is None)
+    assert (loaded.docs_flat is None) == (tiny_index.docs_flat is None)
+    manifest = read_manifest(store_dir)
+    assert manifest["fingerprint"] == fp
+    assert build_config_of(store_dir) == cfg
+    # static fields must come back as Python ints (jit reshape args), not arrays
+    assert type(loaded.b) is int and type(loaded.n_blocks) is int
+
+
+def test_roundtrip_none_optionals(tiny_corpus, store_dir):
+    _, corpus, _ = tiny_corpus
+    idx = build_index(
+        corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab,
+        IndexBuildConfig(b=8, c=8, kmeans_iters=2, build_avg=False, build_flat_inv=False),
+    )
+    assert idx.sb_avg is None and idx.docs_flat is None and idx.docs_flatq is None
+    save_index(store_dir, idx)
+    loaded = load_index(store_dir, mmap=True)
+    assert loaded.sb_avg is None and loaded.docs_flat is None and loaded.docs_flatq is None
+    _leaves_equal(idx, loaded)
+    assert build_config_of(store_dir) is None
+
+
+def test_mmap_load_feeds_retrieve_bit_identically(tiny_index, tiny_qb, store_dir):
+    save_index(store_dir, tiny_index)
+    mm = load_index(store_dir, mmap=True)
+    # mmap leaves are numpy views over the files, not copies
+    assert isinstance(np.asarray(mm.docs_fwd.tids), np.ndarray)
+    cfg = RetrievalConfig(variant="lsp2", k=10, gamma=16, gamma0=4, beta=0.5)
+    want = jit_retrieve(tiny_index, cfg, impl="ref")(tiny_qb)
+    got = jit_retrieve(to_device(mm), cfg, impl="ref")(tiny_qb)
+    np.testing.assert_array_equal(np.asarray(want.doc_ids), np.asarray(got.doc_ids))
+    np.testing.assert_array_equal(np.asarray(want.scores), np.asarray(got.scores))
+
+
+def test_layout_version_mismatch_rejected(tiny_index, store_dir):
+    save_index(store_dir, tiny_index)
+    path = os.path.join(store_dir, MANIFEST_NAME)
+    with open(path, "rb") as f:
+        manifest = msgpack.unpackb(f.read(), strict_map_key=False)
+    manifest["layout_version"] = LAYOUT_VERSION + 1
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(manifest))
+    with pytest.raises(IndexStoreError, match="layout version"):
+        load_index(store_dir)
+
+
+def test_fingerprint_and_shape_mismatch_rejected(tiny_index, store_dir):
+    save_index(store_dir, tiny_index)
+    with pytest.raises(IndexStoreError, match="fingerprint"):
+        load_index(store_dir, expect_fingerprint="0" * 32)
+    # tamper with one leaf: verify=True must catch it, structural load must not care
+    leaf = os.path.join(store_dir, "doc_remap.npy")
+    arr = np.load(leaf)
+    arr[0] ^= 1
+    np.save(leaf, arr)
+    with pytest.raises(IndexStoreError, match="content hash"):
+        load_index(store_dir, mmap=False, verify=True)
+    # dtype/shape drift is rejected even without verify
+    np.save(leaf, arr.astype(np.int64))
+    with pytest.raises(IndexStoreError, match="manifest"):
+        load_index(store_dir)
+
+
+def test_uncommitted_dir_rejected_and_save_is_atomic(tiny_index, store_dir):
+    save_index(store_dir, tiny_index)
+    os.remove(os.path.join(store_dir, COMMIT_MARKER))
+    with pytest.raises(FileNotFoundError):
+        load_index(store_dir)
+    # a fresh save atomically replaces the torn copy and no tmp dir is left behind
+    fp = save_index(store_dir, tiny_index)
+    assert load_index(store_dir, mmap=False, verify=True) is not None
+    assert read_manifest(store_dir)["fingerprint"] == fp
+    assert not os.path.exists(store_dir + ".tmp")

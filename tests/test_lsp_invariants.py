@@ -44,12 +44,14 @@ def test_lsp1_at_least_lsp0(tiny_index, tiny_qb, oracle):
 
 
 def test_lsp_never_fails_sp_does(tiny_index, tiny_qb, oracle):
-    """Erroneous pruning (paper Fig. 2): small μ kills SP on some queries; the top-γ
-    guarantee keeps every LSP variant alive."""
+    """Erroneous pruning (paper Fig. 2): aggressive (μ, η) kills SP on some queries;
+    the top-γ guarantee keeps every LSP variant alive. η=0.5 (not 1.0): the faithful
+    SBavg (avg-of-block-max) is larger than the seed's mean-posting-weight matrix, so
+    on this tiny corpus the SP failure regime sits at a stricter avg threshold."""
     oracle_ids, _ = oracle
-    _, sp = _recall(tiny_index, tiny_qb, oracle_ids, variant="sp", k=10, gamma=16, gamma0=4, mu=0.1, eta=1.0, beta=1.0)
-    _, l1 = _recall(tiny_index, tiny_qb, oracle_ids, variant="lsp1", k=10, gamma=16, gamma0=4, mu=0.1, eta=1.0, beta=1.0)
-    assert failed_queries(np.asarray(sp.doc_ids)) > 0.0, "SP should fail at mu=0.1"
+    _, sp = _recall(tiny_index, tiny_qb, oracle_ids, variant="sp", k=10, gamma=16, gamma0=4, mu=0.1, eta=0.5, beta=1.0)
+    _, l1 = _recall(tiny_index, tiny_qb, oracle_ids, variant="lsp1", k=10, gamma=16, gamma0=4, mu=0.1, eta=0.5, beta=1.0)
+    assert failed_queries(np.asarray(sp.doc_ids)) > 0.0, "SP should fail at mu=0.1, eta=0.5"
     assert failed_queries(np.asarray(l1.doc_ids)) == 0.0
 
 

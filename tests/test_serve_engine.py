@@ -48,6 +48,30 @@ def test_bucket_ladder_explicit_sizes_clip_and_sort():
     assert len(lad.shapes()) == 2
 
 
+def test_make_query_batch_is_permutation_invariant():
+    """Equal-weight ties must batch identically regardless of input order (the
+    canonical term-id tie-break), including at the nq_max truncation boundary —
+    otherwise identical queries batch differently outside the serve path."""
+    from repro.core.query import make_query_batch
+
+    t = np.array([7, 3, 11, 5], np.int32)
+    w = np.array([1.0, 2.0, 1.0, 1.0], np.float32)
+    perm = [2, 3, 0, 1]
+    for nq in (0, 2):
+        qa = make_query_batch([(t, w)], vocab=64, nq_max=nq)
+        qb = make_query_batch([(t[perm], w[perm])], vocab=64, nq_max=nq)
+        np.testing.assert_array_equal(np.asarray(qa.tids), np.asarray(qb.tids))
+        np.testing.assert_array_equal(np.asarray(qa.ws), np.asarray(qb.ws))
+    # weight desc, then term id asc among the 1.0 ties; truncation keeps [3, 5]
+    trunc = make_query_batch([(t, w)], vocab=64, nq_max=2)
+    assert np.asarray(trunc.tids)[0].tolist() == [3, 5]
+    # and the batch row now matches the serve path's canonical_query exactly
+    ct, cw = canonical_query(t, w)
+    full = make_query_batch([(t, w)], vocab=64)
+    np.testing.assert_array_equal(np.asarray(full.tids)[0][: len(ct)], ct)
+    np.testing.assert_array_equal(np.asarray(full.ws)[0][: len(cw)], cw)
+
+
 def test_query_key_is_permutation_invariant():
     t = np.array([5, 2, 9], np.int32)
     w = np.array([1.0, 2.0, 3.0], np.float32)
@@ -240,6 +264,156 @@ def test_cached_rows_do_not_alias_caller_results():
         assert eng.stats.summary()["cache_hits"] == 2
     finally:
         eng.shutdown()
+
+
+# ---- index lifecycle: hot-swap -----------------------------------------------------
+
+
+def _tagged_retriever(tag: float):
+    """Echo retriever whose scores carry ``tag``: distinguishes which 'index
+    generation' served a request."""
+
+    def retr(qb):
+        tids = np.asarray(qb.tids)
+        ws = np.asarray(qb.ws)
+        return tids[:, :4], ws[:, :4] + tag
+
+    return retr
+
+
+def test_hot_swap_flips_results_and_never_serves_stale_cache():
+    eng = RetrievalEngine(_tagged_retriever(0.0), vocab=512, max_batch=2, nq_max=16,
+                          cache_size=8)
+    try:
+        rng = np.random.default_rng(3)
+        q = _query(rng)
+        ids1, scores1 = eng.submit(*q).result(timeout=30)
+        # cached: resubmission is a hit served from epoch 0
+        eng.submit(*q).result(timeout=30)
+        assert eng.stats.summary()["cache_hits"] == 1
+        assert eng.epoch == 0
+
+        epoch = eng.swap_retriever(_tagged_retriever(100.0), warm=False)
+        assert epoch == eng.epoch == 1
+        # same query after the swap: the epoch-keyed probe must MISS (no stale
+        # result from the retired index) and score on the new retriever
+        ids2, scores2 = eng.submit(*q).result(timeout=30)
+        np.testing.assert_array_equal(ids2, ids1)
+        np.testing.assert_allclose(scores2, scores1 + 100.0, rtol=1e-6)
+        s = eng.stats.summary()
+        assert s["cache_hits"] == 1 and s["swaps"] == 1 and s["last_swap_ms"] >= 0.0
+        # and the new epoch's fill works: a second resubmission hits the NEW result
+        ids3, scores3 = eng.submit(*q).result(timeout=30)
+        np.testing.assert_allclose(scores3, scores2, rtol=0)
+        assert eng.stats.summary()["cache_hits"] == 2
+    finally:
+        eng.shutdown()
+
+
+def test_hot_swap_inflight_batch_completes_on_old_retriever():
+    entered, release = threading.Event(), threading.Event()
+
+    def slow_v1(qb):
+        entered.set()
+        release.wait(timeout=30)
+        return _tagged_retriever(0.0)(qb)
+
+    eng = RetrievalEngine(slow_v1, vocab=512, max_batch=2, nq_max=16,
+                          max_wait_ms=0.0, cache_size=8)
+    try:
+        rng = np.random.default_rng(4)
+        q = _query(rng)
+        fut = eng.submit(*q)
+        assert entered.wait(timeout=30)  # the worker is inside the old retriever
+        swapped = eng.swap_retriever(_tagged_retriever(100.0), warm=False)
+        assert swapped == 1  # swap completed while the old batch is still in flight
+        release.set()
+        ids, scores = fut.result(timeout=30)  # served by the OLD retriever: tag 0
+        assert float(scores[0]) < 50.0
+        # the in-flight batch's cache fill was dropped (its epoch retired mid-
+        # flight): the same query now misses and is scored by the new retriever
+        _, scores2 = eng.submit(*q).result(timeout=30)
+        assert float(scores2[0]) > 50.0
+        assert eng.stats.summary()["cache_hits"] == 0
+    finally:
+        release.set()
+        eng.shutdown()
+
+
+def test_swap_index_from_disk_with_factory(tiny_index, tiny_corpus, tmp_path):
+    from repro.index.store import save_index
+
+    _, corpus, queries = tiny_corpus
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5)
+    factory = lambda ix: jit_retrieve(ix, cfg, impl="ref")
+    eng = RetrievalEngine(factory(tiny_index), corpus.vocab, max_batch=2, nq_max=64,
+                          cache_size=8, retriever_factory=factory)
+    try:
+        t, w = queries[0]
+        before = eng.submit(t, w).result(timeout=120)
+        path = tmp_path / "index"
+        save_index(str(path), tiny_index)
+        epoch = eng.swap_index(str(path), warm=False)
+        assert epoch == 1
+        after = eng.submit(t, w).result(timeout=120)  # cache missed, same index bits
+        np.testing.assert_array_equal(before[0], after[0])
+        np.testing.assert_array_equal(before[1], after[1])
+        assert eng.stats.summary()["cache_hits"] == 0
+        assert eng.stats.summary()["swaps"] == 1
+    finally:
+        eng.shutdown()
+
+
+def test_swap_without_factory_or_after_shutdown_raises():
+    eng = RetrievalEngine(_echo_retriever, vocab=64, max_batch=2, nq_max=16)
+    try:
+        with pytest.raises(RuntimeError, match="retriever_factory"):
+            eng.swap_index("/nonexistent")
+    finally:
+        eng.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        eng.swap_retriever(_echo_retriever)
+
+
+def test_hot_swap_under_continuous_traffic_zero_failures():
+    """A live engine under concurrent load swaps retrievers repeatedly: every
+    future resolves with a result (zero failures), results come from exactly one
+    generation each, and post-swap results eventually flow from the new one."""
+    eng = RetrievalEngine(_tagged_retriever(0.0), vocab=512, max_batch=4, nq_max=16,
+                          max_wait_ms=0.5, cache_size=32)
+    stop = threading.Event()
+    tags_seen, errors = set(), []
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        pool = [_query(rng) for _ in range(8)]
+        i = 0
+        while not stop.is_set():
+            try:
+                _, scores = eng.submit(*pool[i % 8]).result(timeout=60)
+            except Exception as exc:  # noqa: BLE001
+                errors.append(exc)
+                return
+            tags_seen.add(round(float(scores[0]) // 100) * 100)
+            i += 1
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for gen in (100.0, 200.0, 300.0):
+            time.sleep(0.05)
+            eng.swap_retriever(_tagged_retriever(gen), warm=True)
+        time.sleep(0.1)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+        eng.shutdown()
+    assert not errors, errors
+    s = eng.stats.summary()
+    assert s["failures"] == 0 and s["swaps"] == 3
+    assert 300 in tags_seen  # traffic reached the final generation
 
 
 # ---- stats + concurrency -----------------------------------------------------------

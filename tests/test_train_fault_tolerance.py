@@ -78,6 +78,65 @@ def test_checkpoint_atomicity_and_gc():
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+def test_restore_explicit_step_requires_commit_marker():
+    """restore_checkpoint(step=N) must honour the .complete marker exactly like the
+    latest-step path: a half-deleted or uncommitted step_N dir is not loadable."""
+    tmp = tempfile.mkdtemp()
+    try:
+        tree = {"a": jnp.arange(4)}
+        save_checkpoint(tmp, 1, tree, keep=2)
+        restored, step = restore_checkpoint(tmp, tree, step=1)
+        assert step == 1
+        os.remove(os.path.join(tmp, "step_1", ".complete"))
+        with pytest.raises(FileNotFoundError):
+            restore_checkpoint(tmp, tree, step=1)
+        with pytest.raises(FileNotFoundError):
+            restore_checkpoint(tmp, tree)  # no complete step left at all
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def test_restore_pairs_each_leaf_by_its_own_path_key():
+    """Leaves restore by path key (not by zipping two flatten orders): every value
+    must land at its own key even in a nested mixed dict/list structure."""
+    tmp = tempfile.mkdtemp()
+    try:
+        tree = {
+            "b": {"y": jnp.full((3,), 7.0), "x": jnp.full((2,), 5.0)},
+            "a": [jnp.full((4,), 1.0), jnp.full((4, 2), 2.0)],
+        }
+        save_checkpoint(tmp, 1, tree, keep=1)
+        restored, _ = restore_checkpoint(tmp, tree)
+        np.testing.assert_array_equal(np.asarray(restored["b"]["x"]), np.full((2,), 5.0))
+        np.testing.assert_array_equal(np.asarray(restored["b"]["y"]), np.full((3,), 7.0))
+        np.testing.assert_array_equal(np.asarray(restored["a"][0]), np.full((4,), 1.0))
+        np.testing.assert_array_equal(np.asarray(restored["a"][1]), np.full((4, 2), 2.0))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def test_concurrent_async_saves_do_not_race():
+    """Overlapping async saves into one directory serialize on the per-dir lock:
+    every step commits or is gc'ed cleanly, no tmp dirs survive, latest restores."""
+    tmp = tempfile.mkdtemp()
+    try:
+        tree = {"w": jnp.arange(128, dtype=jnp.float32)}
+        threads = [save_checkpoint(tmp, s, tree, keep=2, async_write=True) for s in range(1, 7)]
+        for t in threads:
+            t.join(timeout=60)
+            assert not t.is_alive()
+        assert latest_step(tmp) == 6
+        assert not any(d.endswith(".tmp") for d in os.listdir(tmp))
+        complete = [d for d in os.listdir(tmp)
+                    if d.startswith("step_") and os.path.exists(os.path.join(tmp, d, ".complete"))]
+        assert len(complete) <= 2 + 1  # keep=2; one extra may slip in between gc sweeps
+        restored, step = restore_checkpoint(tmp, tree, step=6)
+        assert step == 6
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(128, dtype=np.float32))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def test_grad_accum_matches_full_batch():
     """grad_accum=2 must match the full-batch gradient step (linearity of mean CE is
     not exact for per-microbatch contrastive losses — so use a per-example loss)."""
