@@ -29,6 +29,7 @@ def main() -> None:
         index_sizes,
         latency_suite,
         serving_suite,
+        sharded_serving,
         variant_grid,
         zeroshot_sweep,
     )
@@ -36,6 +37,7 @@ def main() -> None:
     suites = {
         "table2": latency_suite.run,
         "serving": serving_suite.run,
+        "sharded": sharded_serving.run,
         "table4": zeroshot_sweep.run,
         "table5": blocksize_sweep.run,
         "table6": variant_grid.run,

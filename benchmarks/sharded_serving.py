@@ -1,0 +1,189 @@
+"""Sharded-serving benchmark: the scaling trajectory of the multi-device path.
+
+Serves one query stream through ``RetrievalEngine`` + ``ShardedRetriever`` at
+1/2/4/8 shards under three serving arms (padded single-shape, bucketed ladder,
+Zipf-repeat with the result cache) and audits EVERY response against the
+single-device engine's answer for the same submission — the parity count is the
+gate (``parity_mismatches == 0`` in CI), latency/throughput are the trajectory.
+
+On a CPU host the shard transports share one machine, so wall-clock does not
+drop with shard count — per-shard *index bytes* do (reported per arm), which is
+what sharding buys on real fleets: corpus capacity per device, constant O(k·P)
+collective volume (DESIGN.md §8). Runs under whatever devices exist: shard
+counts above the device count use the host-loop transport (identical results by
+construction AND by audit, so the parity gate covers both transports).
+
+  PYTHONPATH=src python -m benchmarks.sharded_serving          # full settings
+  PYTHONPATH=src python -m benchmarks.sharded_serving --smoke  # CI settings
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      PYTHONPATH=src python -m benchmarks.sharded_serving      # shard_map arms
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import CORPUS_CFG, K_DEFAULT, Row, index, queries
+from repro.core import RetrievalConfig, jit_retrieve
+from repro.distributed.sharded import ShardedRetriever
+from repro.index.layout import fwdq_bytes, packed_bounds_bytes
+from repro.serve import RetrievalEngine
+
+BENCH_JSON = os.environ.get("BENCH_SHARDED_JSON", "BENCH_sharded.json")
+MAX_BATCH = 8
+NQ_MAX = 64
+ZIPF_A = 1.3
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _shard_bytes(shards) -> int:
+    """Per-shard index footprint (the capacity axis sharding scales)."""
+    s = shards[0]
+    return (
+        packed_bounds_bytes(s.sb_bounds)
+        + packed_bounds_bytes(s.blk_bounds)
+        + (packed_bounds_bytes(s.sb_avg) if s.sb_avg is not None else 0)
+        + fwdq_bytes(s.docs_fwdq)
+        + int(np.asarray(s.doc_remap).nbytes)
+    )
+
+
+def _run_stream(eng: RetrievalEngine, qs, order, reference) -> tuple[float, int]:
+    """Serve the stream; audit each response against the single-device answers.
+    Returns (wall_s, parity_mismatches)."""
+    mismatches = 0
+    t0 = time.perf_counter()
+    for i in order:
+        qi = i % len(qs)
+        ids, scores = eng.submit(*qs[qi]).result(timeout=600)
+        ref_ids, ref_scores = reference[qi]
+        if not (np.array_equal(ids, ref_ids) and np.array_equal(scores, ref_scores)):
+            mismatches += 1
+    return time.perf_counter() - t0, mismatches
+
+
+def run() -> list[Row]:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    n = 16 if smoke else 64
+    shard_counts = SHARD_COUNTS[: 3 if smoke else 4]
+    idx = index()
+    qs = [(np.asarray(t), np.asarray(w)) for t, w in queries()]
+    cfg = RetrievalConfig(
+        "lsp0", k=K_DEFAULT, gamma=max(8, idx.n_superblocks // 8), gamma0=8, beta=0.33
+    )
+    n_devices = len(jax.devices())
+
+    # single-device reference answers through the same engine path (the audit oracle)
+    ref_eng = RetrievalEngine(
+        jit_retrieve(idx, cfg, impl="ref"), CORPUS_CFG.vocab,
+        max_batch=MAX_BATCH, nq_max=NQ_MAX, max_wait_ms=1.0, cache_size=0, warmup=True,
+    )
+    reference = [ref_eng.submit(t, w).result(timeout=600) for t, w in qs]
+    ref_eng.shutdown()
+
+    rng = np.random.default_rng(7)
+    zipf_order = (rng.zipf(ZIPF_A, size=n) - 1) % len(qs)
+    arms = {
+        "padded": dict(batch_buckets=[MAX_BATCH], nq_buckets=[NQ_MAX], cache_size=0),
+        "bucketed": dict(cache_size=0),
+        "cached": dict(cache_size=256),
+    }
+    results: dict[str, dict] = {}
+    total_mismatches = 0
+    for p in shard_counts:
+        mesh = None
+        transport = "host-loop"
+        if 1 < p <= n_devices and n_devices % p == 0:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(model=p, data=1)
+            transport = "shard_map"
+        retr = (
+            jit_retrieve(idx, cfg, impl="ref")
+            if p == 1
+            else ShardedRetriever(idx, cfg, n_shards=p, mesh=mesh, impl="ref")
+        )
+        shard_bytes = _shard_bytes(retr.shards) if p > 1 else _shard_bytes([idx])
+        per_shard: dict[str, dict] = {}
+        for arm, kw in arms.items():
+            eng = RetrievalEngine(
+                retr, CORPUS_CFG.vocab, max_batch=MAX_BATCH, nq_max=NQ_MAX,
+                max_wait_ms=1.0, warmup=True, **kw,
+            )
+            order = zipf_order if arm == "cached" else range(n)
+            wall, mism = _run_stream(eng, qs, order, reference)
+            eng.shutdown()
+            s = eng.stats.summary()
+            total_mismatches += mism
+            per_shard[arm] = {
+                "wall_s": wall,
+                "throughput_qps": n / wall if wall else 0.0,
+                "p50_ms": s["p50_ms"],
+                "p99_ms": s["p99_ms"],
+                "cache_hit_rate": s["cache_hit_rate"],
+                "failures": s["failures"],
+                "parity_mismatches": mism,
+            }
+        results[str(p)] = {
+            "transport": transport,
+            "shard_index_bytes": shard_bytes,
+            "arms": per_shard,
+        }
+
+    payload = {
+        "backend": jax.default_backend(),
+        "n_devices": n_devices,
+        "requests_per_arm": n,
+        "shard_counts": list(shard_counts),
+        "zipf_a": ZIPF_A,
+        "shards": results,
+        "parity_mismatches": total_mismatches,
+        "audited_responses": n * len(shard_counts) * len(arms),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    rows = []
+    for p, r in results.items():
+        for arm, s in r["arms"].items():
+            rows.append(
+                Row(
+                    f"sharded/{p}x/{arm}",
+                    s["p50_ms"] * 1e3,
+                    f"qps={s['throughput_qps']:.1f};transport={r['transport']};"
+                    f"shard_MB={r['shard_index_bytes'] / 1e6:.1f};"
+                    f"mismatches={s['parity_mismatches']}",
+                )
+            )
+    rows.append(
+        Row(
+            "sharded/claims",
+            0.0,
+            f"parity_mismatches={total_mismatches};"
+            f"audited={payload['audited_responses']};json={BENCH_JSON}",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI settings: fewer requests/shards")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ.setdefault("BENCH_SMOKE", "1")
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for row in run():
+        print(row.csv(), flush=True)
+    print(f"# suite sharded_serving done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,16 +3,22 @@ cache + resilient batching pipeline, DESIGN.md §6) with latency percentiles, pl
 index lifecycle (DESIGN.md §7): the built index is persisted to disk, mmap-loaded
 back (orders of magnitude faster than rebuilding), and finally hot-swapped into the
 running engine with traffic in flight — the epoch-keyed cache guarantees no result
-from the pre-swap index is ever served afterwards. ``--sharded`` switches to the
-multi-device retriever when more than one JAX device is available.
+from the pre-swap index is ever served afterwards.
+
+``--shards N`` serves through the sharded retriever (DESIGN.md §8): the index is
+persisted as an atomically-committed N-shard set, every shard mmap-loads, results
+are bit-identical to the single-device engine, and the hot-swap flips ALL shards
+under one epoch. With enough devices the shards run under shard_map; otherwise the
+host-loop transport demonstrates identical semantics on one device.
 
 The stream replays each query twice, so the second half of the run is served from
 the result cache — the engine summary shows the hit rate and which shape buckets
 actually ran.
 
     PYTHONPATH=src python examples/serve_retrieval.py
+    PYTHONPATH=src python examples/serve_retrieval.py --shards 2
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
-        PYTHONPATH=src python examples/serve_retrieval.py --sharded
+        PYTHONPATH=src python examples/serve_retrieval.py --shards 4
 """
 
 import argparse
@@ -21,21 +27,21 @@ import tempfile
 import time
 
 import jax
-import numpy as np
 
 from repro.core import RetrievalConfig, jit_retrieve
-from repro.core.query import QueryBatch
 from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
 from repro.index.builder import IndexBuildConfig, build_index
-from repro.index.store import load_index, read_manifest, save_index
+from repro.index.store import load_index_auto, save_index, save_sharded_index
 from repro.serve import RetrievalEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--sharded", action="store_true", help="index sharded over devices")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve over N index shards (0 = single-device retriever)")
     ap.add_argument("--n-requests", type=int, default=64)
     args = ap.parse_args()
+    n_shards = args.shards
 
     ccfg = CorpusConfig(n_docs=16384, vocab=2048, n_topics=32, seed=0)
     corpus = make_corpus(ccfg)
@@ -46,39 +52,38 @@ def main() -> None:
 
     # ---- lifecycle: persist once, mmap-load forever after -------------------------
     index_dir = os.path.join(tempfile.mkdtemp(prefix="lsp_index_"), "index")
-    fingerprint = save_index(index_dir, built, bcfg)
+    if n_shards:
+        fingerprint = save_sharded_index(index_dir, built, n_shards, bcfg)
+    else:
+        fingerprint = save_index(index_dir, built, bcfg)
     t0 = time.perf_counter()
-    idx = load_index(index_dir, mmap=True, device=True)
+    idx = load_index_auto(index_dir, mmap=True, device=True)  # LSPIndex or ShardedIndex
     load_s = time.perf_counter() - t0
     print(f"index: build {build_s:.1f}s, mmap-load {load_s:.3f}s "
           f"({build_s / max(load_s, 1e-9):.0f}x) | fingerprint {fingerprint[:12]}… "
-          f"| layout v{read_manifest(index_dir)['layout_version']}")
+          f"| {n_shards or 'no'} shard(s)")
 
     cfg = RetrievalConfig(variant="lsp0", k=10, gamma=max(16, idx.n_superblocks // 8), beta=0.33)
 
-    batch_buckets = None
-    if args.sharded and len(jax.devices()) >= 4:
-        from repro.distributed.retrieval import make_mesh_retriever, shard_index
+    mesh = None
+    if n_shards and len(jax.devices()) >= n_shards:
         from repro.launch.mesh import make_host_mesh
 
-        mesh = make_host_mesh(model=2, data=2)
-        shards = shard_index(idx, 2)
-        run, _ = make_mesh_retriever(shards, cfg, mesh)
-        print(f"sharded retriever over mesh {dict(mesh.shape)}")
+        mesh = make_host_mesh(model=n_shards, data=1)
+        print(f"shard_map transport over mesh {dict(mesh.shape)}")
+    elif n_shards:
+        print(f"{len(jax.devices())} device(s): host-loop shard transport")
 
-        def retriever(qb: QueryBatch):
-            ids, vals = run(qb)
-            return ids, vals
-        batch_q = 4  # query batch must divide the data axis -> single-rung ladder
-        batch_buckets = [batch_q]
-    else:
-        retriever = jit_retrieve(idx, cfg)  # RetrievalResult plugs into the engine
-        batch_q = 8
+    def make_retriever(ix):
+        if n_shards:
+            from repro.distributed.sharded import ShardedRetriever
 
-    eng = RetrievalEngine(retriever, corpus.vocab, max_batch=batch_q, nq_max=64,
-                          max_wait_ms=2.0, batch_buckets=batch_buckets,
-                          cache_size=256, warmup=True,
-                          retriever_factory=lambda ix: jit_retrieve(ix, cfg))
+            return ShardedRetriever(ix, cfg, n_shards=n_shards, mesh=mesh)
+        return jit_retrieve(ix, cfg)  # RetrievalResult plugs into the engine
+
+    eng = RetrievalEngine(make_retriever(idx), corpus.vocab, max_batch=8, nq_max=64,
+                          max_wait_ms=2.0, cache_size=256, warmup=True,
+                          retriever_factory=make_retriever)
     base = make_queries(ccfg, corpus, max(args.n_requests // 2, 1))
     # two waves of the same queries: the replay wave is served from the result cache
     # (the probe happens at submit time, so the first wave must have resolved)
@@ -88,16 +93,15 @@ def main() -> None:
         results.extend(f.result(timeout=300) for f in futures)
 
     # ---- lifecycle: zero-downtime hot-swap with traffic in flight ------------------
-    # (sharded retrievers rebuild through their own factory; skip the demo there)
-    if not (args.sharded and len(jax.devices()) >= 4):
-        inflight = [eng.submit(t, w) for t, w in base]
-        epoch = eng.swap_index(index_dir)  # mmap-load + warm off-thread, atomic flip
-        post = [eng.submit(t, w) for t, w in base]  # epoch-keyed: all cache misses
-        swap_results = [f.result(timeout=300) for f in inflight + post]
-        stats = eng.stats.summary()
-        print(f"hot-swap: epoch {epoch} in {stats['last_swap_ms']:.0f} ms, "
-              f"{len(swap_results)} in-flight/post-swap requests, "
-              f"failures={stats['failures']}")
+    # (a sharded dir reloads every shard and flips them under the one epoch bump)
+    inflight = [eng.submit(t, w) for t, w in base]
+    epoch = eng.swap_index(index_dir)  # mmap-load + warm off-thread, atomic flip
+    post = [eng.submit(t, w) for t, w in base]  # epoch-keyed: all cache misses
+    swap_results = [f.result(timeout=300) for f in inflight + post]
+    stats = eng.stats.summary()
+    print(f"hot-swap: epoch {epoch} in {stats['last_swap_ms']:.0f} ms, "
+          f"{len(swap_results)} in-flight/post-swap requests, "
+          f"failures={stats['failures']}")
     eng.shutdown()
 
     stats = eng.stats.summary()

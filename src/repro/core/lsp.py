@@ -36,10 +36,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from typing import Optional
+
 from repro.core import ops
 from repro.core.config import RetrievalConfig
 from repro.core.query import QueryBatch, prune_terms, scatter_dense
 from repro.core.scoring import NEG, score_blocks, score_positions_fwd
+from repro.core.topk import canonical_topk
 from repro.index.layout import LSPIndex
 
 
@@ -48,6 +51,7 @@ class RetrievalResult(NamedTuple):
     scores: jnp.ndarray  # float32 [Q, k]
     n_superblocks_visited: jnp.ndarray  # int32 [Q]
     n_blocks_scored: jnp.ndarray  # int32 [Q]
+    theta: Optional[jnp.ndarray] = None  # float32 [Q] round-0 pruning threshold
 
 
 def _kth_threshold(scores: jnp.ndarray, k: int, legacy: bool = False) -> jnp.ndarray:
@@ -94,8 +98,10 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
 
     ns, c = index.n_superblocks, index.c
     gamma = min(cfg.gamma, ns)
-    g0 = min(cfg.gamma0, gamma)
     budget = min(cfg.resolved_sb_budget(), ns)
+    # an explicit sb_budget below γ0 caps round 0 too (the candidate list is only
+    # budget wide); clamping here keeps the visited-superblock accounting honest
+    g0 = min(cfg.gamma0, gamma, budget)
     qb = prune_terms(qb_full, cfg.beta)
     qdense = scatter_dense(qb_full)
 
@@ -152,12 +158,15 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
     # ---- phase 3: document scoring
     scores1, pos1 = _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, cfg, impl)
 
-    # ---- merge rounds, final top-k
+    # ---- merge rounds, final top-k. Canonical (score desc, doc-id asc) selection:
+    # equal-score ties at the k boundary resolve by global doc id, not by traversal
+    # position — the total order a sharded merge can reproduce bit-identically.
     all_scores = jnp.concatenate([scores0, scores1], axis=1)
     all_pos = jnp.concatenate([pos0, pos1], axis=1)
-    vals, idx = jax.lax.top_k(all_scores, cfg.k)
-    pos_k = jnp.take_along_axis(all_pos, idx, axis=1)
-    ids = index.doc_remap[jnp.clip(pos_k, 0, index.doc_remap.shape[0] - 1)]
+    all_ids = index.doc_remap[jnp.clip(all_pos, 0, index.doc_remap.shape[0] - 1)]
+    vals, ids = canonical_topk(
+        all_scores, all_ids.astype(jnp.int32), cfg.k, id_bound=index.n_docs + 1
+    )
     ids = jnp.where(vals > NEG / 2, ids, -1)
 
     # ---- block accounting: phase-3 blocks inside a round-0 superblock (possible for
@@ -177,6 +186,7 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
         scores=jnp.where(vals > NEG / 2, vals, jnp.float32(NEG)),
         n_superblocks_visited=g0 + n_sb_new,
         n_blocks_scored=n_blocks_scored,
+        theta=theta,
     )
 
 
@@ -201,15 +211,17 @@ def _retrieve_bmp(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, im
 
     all_scores = jnp.concatenate([scores0, scores1], axis=1)
     all_pos = jnp.concatenate([pos0, pos1], axis=1)
-    tvals, tidx = jax.lax.top_k(all_scores, cfg.k)
-    pos_k = jnp.take_along_axis(all_pos, tidx, axis=1)
-    ids = index.doc_remap[jnp.clip(pos_k, 0, index.doc_remap.shape[0] - 1)]
+    all_ids = index.doc_remap[jnp.clip(all_pos, 0, index.doc_remap.shape[0] - 1)]
+    tvals, ids = canonical_topk(
+        all_scores, all_ids.astype(jnp.int32), cfg.k, id_bound=index.n_docs + 1
+    )
     ids = jnp.where(tvals > NEG / 2, ids, -1)
     return RetrievalResult(
         doc_ids=ids,
         scores=jnp.where(tvals > NEG / 2, tvals, jnp.float32(NEG)),
         n_superblocks_visited=jnp.zeros(ids.shape[0], jnp.int32),
         n_blocks_scored=b0 + eligible.sum(axis=1, dtype=jnp.int32),
+        theta=theta,
     )
 
 

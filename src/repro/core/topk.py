@@ -1,0 +1,108 @@
+"""Canonical (deterministic) top-k selection.
+
+``jax.lax.top_k`` breaks score ties by *position* (lower index first). Positions
+are an artifact of traversal order — round-0 vs phase-3 concatenation, block
+visitation order — and differ between the single-device pipeline and a sharded
+one, so equal-score ties at the k boundary would make the two paths return
+different (equally correct) documents. Sharded serving promises *bit-identical*
+results (tests/test_sharded_parity.py), which needs a total order independent
+of traversal: ``canonical_topk`` selects by **(score descending, id ascending)**.
+Ids are the original document ids, which are globally unique, so the order is
+total and every pipeline that scores the same candidate set selects the same k
+documents in the same order — regardless of how the candidates were produced,
+partitioned, or merged.
+
+The naive implementation is one two-key variadic sort over the candidate axis —
+but XLA lowers that to a full sort, which on CPU is an order of magnitude slower
+than its TopK lowering (same pathology as the sliced-θ form in core/lsp.py), and
+the final merge runs on every query. So for wide inputs the selection runs as
+three TopK passes plus one tiny 2k-wide sort, all exact:
+
+  1. value-only top-k -> the k-th value v_k (ties don't affect *values*);
+  2. the strictly-greater set (score > v_k; at most k-1 entries, every one of
+     which is canonically selected no matter its id);
+  3. the k smallest ids among entries tied at exactly v_k (top-k over negated
+     ids) — the canonical tie-break, computed only where it matters;
+  4. canonical sort of the 2k-entry union -> first k. The union provably
+     contains the canonical top-k set, and the tiny sort orders it.
+
+The per-shard/merge structure composes exactly: the canonical top-k of a union
+of sets equals the canonical top-k of the union of each set's canonical top-k,
+which is what makes the O(k·P) distributed merge (distributed/topk.py) exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = jnp.float32(-1e30)  # == core.scoring.NEG (kept literal: no import cycle)
+_ID_LAST = jnp.int32(2**31 - 1)  # id sentinel that loses every ascending tie-break
+
+
+def _canonical_sort_topk(
+    scores: jnp.ndarray, ids: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference path: one two-key sort (score desc, id asc), first k."""
+    neg_sorted, ids_sorted = jax.lax.sort(
+        (-scores, ids), dimension=-1, is_stable=True, num_keys=2
+    )
+    return -neg_sorted[..., :k], ids_sorted[..., :k]
+
+
+_FLOAT_EXACT_IDS = 2**24  # float32 represents every int of magnitude <= 2^24
+
+
+def canonical_topk(
+    scores: jnp.ndarray, ids: jnp.ndarray, k: int, id_bound: int | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k by (score desc, id asc) along the last axis.
+
+    scores [..., N] float32, ids [..., N] int32 -> (vals [..., k], ids [..., k]).
+    Requires N >= k (same contract as ``lax.top_k``).
+
+    ``id_bound``: static exclusive upper bound on |ids| when the caller knows
+    one (n_docs for document merges, the superblock count for candidate
+    merges). A bound under 2^24 lets the tie pass run as a FLOAT top-k — ids
+    encode exactly in float32 — which matters because XLA's fast TopK lowering
+    is float-only on CPU; an integer top-k falls back to a full variadic sort.
+    Without a bound the integer path keeps the selection exact for any id.
+    """
+    ids = ids.astype(jnp.int32)
+    n = scores.shape[-1]
+    if n <= max(4 * k, 128):  # narrow input: the direct sort is already cheap
+        return _canonical_sort_topk(scores, ids, k)
+    # 1. one value top-k gives both the tie-independent k-th value AND the
+    #    strictly-greater set: entries with score > v_k number at most k-1, so
+    #    every one of them sits inside these k slots already. v_k as min over
+    #    the k lanes, NOT vals[..., -1:]: consuming a slice of the TopK output
+    #    makes XLA rewrite it into a full variadic sort (~60x slower on CPU),
+    #    the same pathology core/lsp.py:_kth_threshold documents.
+    vals, idx = jax.lax.top_k(scores, k)
+    v_k = vals.min(axis=-1, keepdims=True)
+    # 2. strictly-greater entries are selected regardless of id; the remaining
+    #    slots (boundary ties, picked by position here) are neutralized to
+    #    (_NEG, _ID_LAST) so they can never shadow or phantom-duplicate the
+    #    canonically tie-broken entries from step 3
+    gt_sel = vals > v_k
+    gt_vals = jnp.where(gt_sel, vals, _NEG)
+    gt_ids = jnp.where(gt_sel, jnp.take_along_axis(ids, idx, axis=-1), _ID_LAST)
+    # 3. among entries tied at exactly v_k, the canonical picks are the smallest
+    #    ids: top-k over negated ids touches only the tie set
+    eq = scores == v_k
+    if id_bound is not None and id_bound < _FLOAT_EXACT_IDS:
+        neg_f = jnp.where(eq, -ids.astype(jnp.float32), -jnp.inf)
+        tie_neg = jax.lax.top_k(neg_f, k)[0]
+        tie_valid = tie_neg != -jnp.inf
+        tie_ids = jnp.where(tie_valid, (-tie_neg).astype(jnp.int32), _ID_LAST)
+    else:
+        tie_neg = jax.lax.top_k(jnp.where(eq, -ids, -_ID_LAST), k)[0]
+        tie_valid = tie_neg != -_ID_LAST
+        tie_ids = jnp.where(tie_valid, -tie_neg, _ID_LAST)
+    tie_vals = jnp.where(tie_valid, jnp.broadcast_to(v_k, tie_neg.shape), _NEG)
+    # 4. the 2k union covers the canonical top-k; the tiny sort orders it
+    return _canonical_sort_topk(
+        jnp.concatenate([gt_vals, tie_vals], axis=-1),
+        jnp.concatenate([gt_ids, tie_ids], axis=-1),
+        k,
+    )

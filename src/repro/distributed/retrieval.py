@@ -30,9 +30,17 @@ from repro.index.pack import pack_rows_strided, unpack_rows_strided
 
 
 def _pb_slice(pb: PackedBounds, lo_unit: int, n_unit: int) -> PackedBounds:
-    """Slice a packed bounds matrix to a unit range (unpack -> slice -> repack)."""
+    """Slice a packed bounds matrix to a unit range (unpack -> slice -> repack).
+
+    Units past ``pb.n`` (the ragged tail of the last shard) are padded with
+    zero bounds: a quantized zero bound means SBMax == 0 for any query, so a
+    padded superblock can never out-rank a real one under the canonical
+    (value desc, id asc) candidate order — pad ids are the largest."""
     rows = unpack_rows_strided(np.asarray(pb.packed), pb.bits, pb.granule_words, pb.n)
-    sl = rows[:, lo_unit : lo_unit + n_unit]
+    hi = lo_unit + n_unit
+    if hi > rows.shape[1]:
+        rows = np.pad(rows, ((0, 0), (0, hi - rows.shape[1])))
+    sl = rows[:, lo_unit:hi]
     return PackedBounds(
         jnp.asarray(pack_rows_strided(sl, pb.bits, pb.granule_words)),
         pb.bits,
@@ -42,14 +50,32 @@ def _pb_slice(pb: PackedBounds, lo_unit: int, n_unit: int) -> PackedBounds:
     )
 
 
+def _pad_rows(a: np.ndarray, n_rows: int, fill) -> np.ndarray:
+    """Pad the leading axis of ``a`` to ``n_rows`` with ``fill``."""
+    if a.shape[0] >= n_rows:
+        return a
+    pad = [(0, n_rows - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, pad, constant_values=fill)
+
+
+def shards_of(n_superblocks: int, n_shards: int) -> int:
+    """Per-shard superblock count: ceil(NS / P). The last shard's tail is padded
+    with empty superblocks so arbitrary corpus sizes shard evenly."""
+    return -(-n_superblocks // n_shards)
+
+
 def _local_index(index: LSPIndex, shard: int, n_shards: int) -> LSPIndex:
-    assert index.n_superblocks % n_shards == 0, (
-        f"n_superblocks {index.n_superblocks} must divide by n_shards {n_shards}"
-    )
-    ns_l = index.n_superblocks // n_shards
+    ns_l = shards_of(index.n_superblocks, n_shards)
     nb_l = ns_l * index.c
     nd_l = nb_l * index.b
     s0, b0, d0 = shard * ns_l, shard * nb_l, shard * nd_l
+    fq = index.docs_fwdq
+    # ragged tail: padded blocks hold sentinel terms (id == vocab, weight 0) and
+    # padded doc positions remap to the n_docs sentinel — they score NEG everywhere
+    remap = _pad_rows(np.asarray(index.doc_remap)[d0 : d0 + nd_l], nd_l, index.n_docs)
+    fq_tids = _pad_rows(np.asarray(fq.tids)[b0 : b0 + nb_l], nb_l, index.vocab)
+    fq_ws = _pad_rows(np.asarray(fq.ws)[b0 : b0 + nb_l], nb_l, 0)
+    fq_scales = _pad_rows(np.asarray(fq.scales)[b0 : b0 + nb_l], nb_l, 1.0)
     return LSPIndex(
         b=index.b,
         c=index.c,
@@ -62,17 +88,17 @@ def _local_index(index: LSPIndex, shard: int, n_shards: int) -> LSPIndex:
         sb_avg=None if index.sb_avg is None else _pb_slice(index.sb_avg, s0, ns_l),
         docs_fwd=None,  # scoring reads docs_fwdq only; don't duplicate the big layout
         docs_flat=None,  # distributed path uses the Fwd layout
-        doc_remap=index.doc_remap[d0 : d0 + nd_l],
-        docs_fwdq=index.docs_fwdq._replace(
-            tids=index.docs_fwdq.tids[b0 : b0 + nb_l],
-            ws=index.docs_fwdq.ws[b0 : b0 + nb_l],
-            scales=index.docs_fwdq.scales[b0 : b0 + nb_l],
+        doc_remap=jnp.asarray(remap),
+        docs_fwdq=fq._replace(
+            tids=jnp.asarray(fq_tids), ws=jnp.asarray(fq_ws), scales=jnp.asarray(fq_scales)
         ),
         docs_flatq=None,
     )
 
 
 def shard_index(index: LSPIndex, n_shards: int) -> list[LSPIndex]:
+    """Contiguous superblock-range shards; the last shard's ragged tail (when
+    NS % n_shards != 0) is padded with empty superblocks that score NEG."""
     return [_local_index(index, s, n_shards) for s in range(n_shards)]
 
 

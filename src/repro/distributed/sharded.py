@@ -1,0 +1,519 @@
+"""Sharded LSP serving retriever: global pruning decisions, local scoring.
+
+``retrieve_distributed``/``make_mesh_retriever`` (distributed/retrieval.py) run
+the *whole* pipeline per shard at the same γ and merge — safe (the union of
+per-shard top-γ covers the global top-γ) but not *identical*: a shard with weak
+round-0 documents seeds a lower θ and visits superblocks the global traversal
+would not, so results can legitimately differ at equal parameters. Production
+serving wants the stronger property — a sharded engine that is **bit-identical**
+to the single-device engine — so this module splits the traversal differently:
+
+  every *decision* is global, every *scoring gather* is local.
+
+    stage 1   per-shard SBMax over the local superblock range -> local top-B
+              candidates -> canonical merge (value desc, global id asc) into THE
+              global candidate list — identical to single-device ``lax.top_k``
+              (which breaks ties by position) because ids are positions.
+    stage 2   each shard scores its members of the *global* top-γ₀ (round 0),
+              per-shard top-k score lists merge into the *global* θ — the same
+              k-th value ``_kth_threshold`` computes, because the k largest of a
+              union are contained in the union of per-shard k-largest.
+    stage 3   the variant eligibility rule runs against the global (rank, value,
+              θ) triple masked to owned superblocks; block BoundSums, θ/η block
+              pruning and document scoring read only local index memory; local
+              canonical top-k -> all_gather [Q, P·k] -> canonical final top-k.
+
+Per-query collective volume: O(P·B) for the candidate merge + O(P·k) for θ and
+the final merge — independent of corpus size (index reads stay local). Compute
+per shard keeps the single-device *shapes* (the worst case where one shard owns
+every global candidate is real), while index memory is 1/P per device: sharding
+buys capacity and bandwidth, not FLOP count (DESIGN.md §8).
+
+Exactness requires the competitive *block* budget to be non-binding (a global
+block cut would need one more bounds merge); ``ShardedRetriever`` rejects a
+``block_budget`` below the full ``budget·c``, the default. BMP (no superblock
+level) and the legacy scoring path are likewise rejected.
+
+Two transports share all of the per-shard math above:
+  * host-loop (``mesh=None``): shards traversed in one jitted program on any
+    device count — the reference semantics, used by the property suites;
+  * ``shard_map`` over the mesh ``model`` axis with ``lax.all_gather`` merges
+    (queries shard over pod/data when those axes exist, else replicate).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ops
+from repro.core.config import RetrievalConfig
+from repro.core.lsp import _expand_superblocks
+from repro.core.query import QueryBatch, prune_terms, scatter_dense
+from repro.core.scoring import NEG, score_blocks
+from repro.core.topk import canonical_topk
+from repro.index.layout import LSPIndex
+from repro.distributed.retrieval import StackedShards, shard_index
+
+
+class ShardedRetrievalResult(NamedTuple):
+    """RetrievalResult-compatible prefix + per-shard pruning telemetry.
+
+    The first five fields mirror ``core.lsp.RetrievalResult`` (the serving
+    engine unpacks ``out[0]``/``out[1]``); the ``shard_*`` fields expose the
+    per-shard view the pruning-safety property tests assert over."""
+
+    doc_ids: jnp.ndarray  # int32 [Q, k] original doc ids, -1 where no result
+    scores: jnp.ndarray  # float32 [Q, k]
+    n_superblocks_visited: jnp.ndarray  # int32 [Q] summed over shards (distinct)
+    n_blocks_scored: jnp.ndarray  # int32 [Q] summed over shards (distinct)
+    theta: jnp.ndarray  # float32 [Q] the global round-0 threshold
+    shard_theta: jnp.ndarray  # float32 [Q, P] per-shard local round-0 θ
+    shard_superblocks: jnp.ndarray  # int32 [Q, P] distinct superblocks per shard
+    shard_blocks: jnp.ndarray  # int32 [Q, P] distinct blocks per shard
+
+
+class _Plan(NamedTuple):
+    """Static shape knobs shared by every shard (mirrors retrieve()'s locals)."""
+
+    gamma: int
+    g0: int
+    budget: int  # global candidate-list width, clamped at the TRUE superblock count
+    budget_l: int  # per-shard candidate contribution
+    k: int
+    width0: int  # round-0 score width g0*c*b (θ's clamp width)
+    k_l: int  # per-shard θ contribution min(k, width0)
+    ns_l: int  # per-shard (padded) superblock count
+    n_shards: int
+
+
+def make_plan(cfg: RetrievalConfig, ns_true: int, ns_l: int, c: int, b: int, n_shards: int) -> _Plan:
+    gamma = min(cfg.gamma, ns_true)
+    budget = min(cfg.resolved_sb_budget(), ns_true)
+    g0 = min(cfg.gamma0, gamma, budget)
+    width0 = g0 * c * b
+    return _Plan(
+        gamma=gamma,
+        g0=g0,
+        budget=budget,
+        budget_l=min(budget, ns_l),
+        k=cfg.k,
+        width0=width0,
+        k_l=min(cfg.k, width0),
+        ns_l=ns_l,
+        n_shards=n_shards,
+    )
+
+
+# --------------------------------------------------------------- per-shard stages
+# Pure functions of (local index, replicated global arrays): the host-loop and
+# shard_map transports call exactly this math, so the two paths cannot diverge.
+
+
+def _phase1_local(local: LSPIndex, qb_pr: QueryBatch, impl: str, plan: _Plan):
+    """Local SBMax + local top-budget_l candidates (stable: local id asc on ties)."""
+    sbmax_l = ops.sbmax(local.sb_bounds, qb_pr.tids, qb_pr.ws, impl)  # [Q, ns_l]
+    return jax.lax.top_k(sbmax_l, plan.budget_l)
+
+
+def _round0_local(local: LSPIndex, qdense, g_ids, lo, cfg, impl, plan: _Plan):
+    """Score the shard's members of the GLOBAL top-γ₀ superblocks."""
+    g0_ids = g_ids[:, : plan.g0]
+    owned0 = (g0_ids >= lo) & (g0_ids < lo + plan.ns_l)
+    loc0 = jnp.clip(g0_ids - lo, 0, plan.ns_l - 1)
+    blk0 = _expand_superblocks(loc0, local.c)  # [Q, g0*c] local block ids
+    mask0 = jnp.repeat(owned0, local.c, axis=1)
+    scores0, pos0 = score_blocks(local, qdense, blk0, mask0, cfg.doc_layout, impl)
+    return owned0, loc0, scores0, pos0
+
+
+def _local_theta(scores0: jnp.ndarray, plan: _Plan) -> jnp.ndarray:
+    """The shard-local round-0 threshold (same clamp rule as _kth_threshold)."""
+    vals, _ = jax.lax.top_k(scores0, plan.k_l)
+    return jnp.maximum(vals.min(axis=-1), 0.0)
+
+
+def merge_theta(theta_lists: jnp.ndarray, plan: _Plan) -> jnp.ndarray:
+    """Global θ from concatenated per-shard top-k_l round-0 score lists [Q, P*k_l].
+
+    Takes the min over the top-min(k, width0) of the union — exactly what
+    ``_kth_threshold`` computes over the unsharded round-0 array: if k exceeds
+    the round-0 width the single-device θ degrades to the global min (usually
+    clamped to 0), and min(k, width0) reproduces that degradation."""
+    vals, _ = jax.lax.top_k(theta_lists, min(plan.k, plan.width0))
+    return jnp.maximum(vals.min(axis=-1), 0.0)
+
+
+def _phase23_local(
+    local: LSPIndex,
+    lo,
+    qb_pr: QueryBatch,
+    qdense,
+    g_vals,
+    g_ids,
+    theta,
+    owned0,
+    loc0,
+    scores0,
+    pos0,
+    cfg: RetrievalConfig,
+    impl: str,
+    plan: _Plan,
+):
+    """Eligibility at the global (rank, value, θ), local block pruning + scoring,
+    local canonical top-k and distinct-visit accounting."""
+    c, ns_l = local.c, plan.ns_l
+    rank = jnp.arange(plan.budget)[None, :]
+    th = theta[:, None]
+    owned = (g_ids >= lo) & (g_ids < lo + ns_l)
+    loc_idx = jnp.clip(g_ids - lo, 0, ns_l - 1)
+    in_gamma = (rank < plan.gamma) & (g_vals >= th)
+    if cfg.variant == "lsp0":
+        eligible = in_gamma
+    elif cfg.variant == "lsp1":
+        eligible = in_gamma | (g_vals > th / cfg.mu)
+    elif cfg.variant in ("lsp2", "sp"):
+        assert local.sb_avg is not None, f"{cfg.variant} needs superblock averages"
+        sbavg_l = ops.sbmax(local.sb_avg, qb_pr.tids, qb_pr.ws, impl)  # [Q, ns_l]
+        avg_vals = jnp.take_along_axis(sbavg_l, loc_idx, axis=1)  # garbage if !owned
+        sp_rule = (g_vals > th / cfg.mu) | (avg_vals > th / cfg.eta)
+        eligible = (in_gamma | sp_rule) if cfg.variant == "lsp2" else sp_rule
+    else:
+        raise ValueError(f"unknown variant {cfg.variant!r}")
+    if cfg.variant == "sp":
+        # faithful SP: round 0 only seeds θ; its documents are not returned
+        scores0 = jnp.full_like(scores0, NEG)
+    else:
+        eligible = eligible & (rank >= plan.g0)
+    eligible = eligible & owned  # each shard prunes/scores only what it owns
+
+    blk_bounds = ops.gathered_block_bounds(
+        local.blk_bounds, c, qb_pr.tids, qb_pr.ws, loc_idx, impl
+    )  # [Q, budget, c]
+    blk_bounds = jnp.where(eligible[:, :, None], blk_bounds, NEG)
+    blk_keep = blk_bounds > th[:, :, None] / cfg.eta
+    flat_bounds = jnp.where(blk_keep, blk_bounds, NEG).reshape(blk_bounds.shape[0], -1)
+    block_budget = plan.budget * c  # full width: the θ/η cut is the only block filter
+    bvals, bidx = jax.lax.top_k(flat_bounds, block_budget)
+    sel_sb = jnp.take_along_axis(loc_idx, bidx // c, axis=1)
+    blk_ids = sel_sb * c + bidx % c
+    blk_mask = bvals > NEG / 2
+
+    scores1, pos1 = score_blocks(local, qdense, blk_ids, blk_mask, cfg.doc_layout, impl)
+
+    all_scores = jnp.concatenate([scores0, scores1], axis=1)
+    all_pos = jnp.concatenate([pos0, pos1], axis=1)
+    n_pad = local.doc_remap.shape[0]
+    all_ids = local.doc_remap[jnp.clip(all_pos, 0, n_pad - 1)]  # ORIGINAL doc ids
+    vals_k, ids_k = canonical_topk(
+        all_scores, all_ids.astype(jnp.int32), plan.k, id_bound=local.n_docs + 1
+    )
+    ids_k = jnp.where(vals_k > NEG / 2, ids_k, -1)
+    vals_k = jnp.where(vals_k > NEG / 2, vals_k, jnp.float32(NEG))
+
+    # distinct-visit accounting, partitioned by ownership: summed over shards it
+    # reproduces the single-device counters exactly (each candidate has one owner)
+    n_owned0 = owned0.sum(axis=1, dtype=jnp.int32)
+    in_round0 = ((blk_ids[:, :, None] // c == loc0[:, None, :]) & owned0[:, None, :]).any(2)
+    n_blk = n_owned0 * c + (blk_mask & ~in_round0).sum(axis=1, dtype=jnp.int32)
+    n_sb = n_owned0 + (eligible & (rank >= plan.g0)).sum(axis=1, dtype=jnp.int32)
+    return ids_k, vals_k, n_sb, n_blk
+
+
+def _validate(cfg: RetrievalConfig, impl: str, c: int, ns_true: int) -> None:
+    if cfg.variant == "bmp":
+        raise ValueError("ShardedRetriever: bmp has no superblock level to shard on")
+    if cfg.doc_layout != "fwd":
+        raise ValueError("ShardedRetriever: shards carry the fwd quantized operand only")
+    if impl == "legacy":
+        raise ValueError("ShardedRetriever: legacy scoring is a single-device baseline")
+    budget = min(cfg.resolved_sb_budget(), ns_true)
+    if cfg.block_budget and cfg.block_budget < budget * c:
+        raise ValueError(
+            f"ShardedRetriever: competitive block_budget {cfg.block_budget} < "
+            f"budget*c {budget * c} would need a cross-shard bounds merge; "
+            "use block_budget=0 (θ/η pruning only)"
+        )
+
+
+# ------------------------------------------------------------------- host loop
+
+
+def sharded_retrieve(
+    shards: Sequence[LSPIndex],
+    qb_full: QueryBatch,
+    cfg: RetrievalConfig,
+    impl: str = "auto",
+    ns_true: Optional[int] = None,
+) -> ShardedRetrievalResult:
+    """Host-loop transport: every shard traversed in-process (one XLA program
+    under jit). Bit-identical to ``retrieve`` on the unsharded index, and to the
+    shard_map transport — the property suites pin both."""
+    meta = shards[0]
+    ns_true = ns_true if ns_true is not None else sum(s.n_superblocks for s in shards)
+    _validate(cfg, impl, meta.c, ns_true)
+    plan = make_plan(cfg, ns_true, meta.n_superblocks, meta.c, meta.b, len(shards))
+    bounds_impl = impl
+    qb_pr = prune_terms(qb_full, cfg.beta)
+    qdense = scatter_dense(qb_full)
+
+    # stage 1: local candidates -> global canonical candidate list (replicated)
+    lvs, lis = zip(*(_phase1_local(s, qb_pr, bounds_impl, plan) for s in shards))
+    vals_cat = jnp.concatenate(lvs, axis=1)
+    ids_cat = jnp.concatenate(
+        [li + p * plan.ns_l for p, li in enumerate(lis)], axis=1
+    ).astype(jnp.int32)
+    g_vals, g_ids = canonical_topk(
+        vals_cat, ids_cat, plan.budget, id_bound=plan.ns_l * plan.n_shards
+    )
+
+    # stage 2: round-0 scoring of owned global-top-γ₀ members -> global θ
+    r0 = [
+        _round0_local(s, qdense, g_ids, p * plan.ns_l, cfg, impl, plan)
+        for p, s in enumerate(shards)
+    ]
+    shard_theta = jnp.stack([_local_theta(scores0, plan) for _, _, scores0, _ in r0], axis=1)
+    th_lists = jnp.concatenate([jax.lax.top_k(s0, plan.k_l)[0] for _, _, s0, _ in r0], axis=1)
+    theta = merge_theta(th_lists, plan)
+
+    # stage 3: eligibility + block pruning + scoring, local canonical top-k
+    parts = [
+        _phase23_local(
+            s, p * plan.ns_l, qb_pr, qdense, g_vals, g_ids, theta,
+            r0[p][0], r0[p][1], r0[p][2], r0[p][3], cfg, impl, plan,
+        )
+        for p, s in enumerate(shards)
+    ]
+    ids_cat = jnp.concatenate([pr[0] for pr in parts], axis=1)
+    vals_cat = jnp.concatenate([pr[1] for pr in parts], axis=1)
+    fvals, fids = canonical_topk(vals_cat, ids_cat, plan.k, id_bound=meta.n_docs + 1)
+    n_sb = jnp.stack([pr[2] for pr in parts], axis=1)  # [Q, P]
+    n_blk = jnp.stack([pr[3] for pr in parts], axis=1)
+    return ShardedRetrievalResult(
+        doc_ids=jnp.where(fvals > NEG / 2, fids, -1),
+        scores=jnp.where(fvals > NEG / 2, fvals, jnp.float32(NEG)),
+        n_superblocks_visited=n_sb.sum(axis=1),
+        n_blocks_scored=n_blk.sum(axis=1),
+        theta=theta,
+        shard_theta=shard_theta,
+        shard_superblocks=n_sb,
+        shard_blocks=n_blk,
+    )
+
+
+# ------------------------------------------------------------------- shard_map
+
+
+def _local_index_from(meta: LSPIndex, sb_packed, blk_packed, sbavg_packed, tids, ws, scales, remap) -> LSPIndex:
+    return LSPIndex(
+        b=meta.b,
+        c=meta.c,
+        n_docs=meta.n_docs,
+        vocab=meta.vocab,
+        n_blocks=meta.n_blocks,
+        n_superblocks=meta.n_superblocks,
+        sb_bounds=meta.sb_bounds._replace(packed=sb_packed),
+        blk_bounds=meta.blk_bounds._replace(packed=blk_packed),
+        sb_avg=None if meta.sb_avg is None else meta.sb_avg._replace(packed=sbavg_packed),
+        docs_fwd=None,
+        docs_flat=None,
+        doc_remap=remap,
+        docs_fwdq=meta.docs_fwdq._replace(tids=tids, ws=ws, scales=scales),
+        docs_flatq=None,
+    )
+
+
+class _StackedShardsAvg(StackedShards):
+    """StackedShards + the sb_avg operand (needed by lsp2/sp under sharding)."""
+
+    def __init__(self, shards: Sequence[LSPIndex]):
+        super().__init__(list(shards))
+        self.sbavg_packed = (
+            None
+            if shards[0].sb_avg is None
+            else jnp.stack([s.sb_avg.packed for s in shards])
+        )
+
+
+def make_sharded_mesh_fn(shards: Sequence[LSPIndex], cfg: RetrievalConfig, mesh, impl: str, ns_true: int):
+    """shard_map transport: same stages, lax.all_gather merges over `model`."""
+    from jax.experimental.shard_map import shard_map
+
+    stacked = _StackedShardsAvg(shards)
+    meta = stacked.meta
+    plan = make_plan(cfg, ns_true, meta.n_superblocks, meta.c, meta.b, len(shards))
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    data_sharded = any(mesh.shape[a] > 1 for a in batch_axes if a in mesh.axis_names)
+    qspec = P(batch_axes, None) if data_sharded else P(None, None)
+    have_avg = stacked.sbavg_packed is not None
+
+    def local_fn(sb_packed, blk_packed, sbavg_packed, fwdq_tids, fwdq_ws, fwdq_scales, remap, q_tids, q_ws):
+        local = _local_index_from(
+            meta, sb_packed[0], blk_packed[0], None if not have_avg else sbavg_packed[0],
+            fwdq_tids[0], fwdq_ws[0], fwdq_scales[0], remap[0],
+        )
+        lo = jax.lax.axis_index("model") * plan.ns_l
+        qb = QueryBatch(q_tids, q_ws, meta.vocab)
+        qb_pr = prune_terms(qb, cfg.beta)
+        qdense = scatter_dense(qb)
+
+        lv, li = _phase1_local(local, qb_pr, impl, plan)
+        vals_cat = jax.lax.all_gather(lv, "model", axis=1, tiled=True)
+        ids_cat = jax.lax.all_gather((li + lo).astype(jnp.int32), "model", axis=1, tiled=True)
+        g_vals, g_ids = canonical_topk(
+            vals_cat, ids_cat, plan.budget, id_bound=plan.ns_l * plan.n_shards
+        )
+
+        owned0, loc0, scores0, pos0 = _round0_local(local, qdense, g_ids, lo, cfg, impl, plan)
+        theta_l = _local_theta(scores0, plan)
+        th_lists = jax.lax.all_gather(
+            jax.lax.top_k(scores0, plan.k_l)[0], "model", axis=1, tiled=True
+        )
+        theta = merge_theta(th_lists, plan)
+
+        ids_k, vals_k, n_sb, n_blk = _phase23_local(
+            local, lo, qb_pr, qdense, g_vals, g_ids, theta,
+            owned0, loc0, scores0, pos0, cfg, impl, plan,
+        )
+        fids = jax.lax.all_gather(ids_k, "model", axis=1, tiled=True)
+        fvals = jax.lax.all_gather(vals_k, "model", axis=1, tiled=True)
+        mvals, mids = canonical_topk(fvals, fids, plan.k, id_bound=meta.n_docs + 1)
+        shard_sb = jax.lax.all_gather(n_sb[:, None], "model", axis=1, tiled=True)
+        shard_blk = jax.lax.all_gather(n_blk[:, None], "model", axis=1, tiled=True)
+        shard_th = jax.lax.all_gather(theta_l[:, None], "model", axis=1, tiled=True)
+        return ShardedRetrievalResult(
+            doc_ids=jnp.where(mvals > NEG / 2, mids, -1),
+            scores=jnp.where(mvals > NEG / 2, mvals, jnp.float32(NEG)),
+            n_superblocks_visited=shard_sb.sum(axis=1),
+            n_blocks_scored=shard_blk.sum(axis=1),
+            theta=theta,
+            shard_theta=shard_th,
+            shard_superblocks=shard_sb,
+            shard_blocks=shard_blk,
+        )
+
+    shard_spec3 = P("model", None, None)
+    vec_spec = P(batch_axes) if data_sharded else P(None)
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            shard_spec3,
+            shard_spec3,
+            shard_spec3 if have_avg else P(None),
+            P("model", None, None, None),
+            P("model", None, None, None),
+            P("model", None),
+            P("model", None),
+            qspec,
+            qspec,
+        ),
+        out_specs=ShardedRetrievalResult(
+            doc_ids=qspec,
+            scores=qspec,
+            n_superblocks_visited=vec_spec,
+            n_blocks_scored=vec_spec,
+            theta=vec_spec,
+            shard_theta=qspec,
+            shard_superblocks=qspec,
+            shard_blocks=qspec,
+        ),
+        check_rep=False,
+    )
+    dummy_avg = jnp.zeros((1,), jnp.uint32)
+
+    def run(tids, ws):
+        return fn(
+            stacked.sb_packed,
+            stacked.blk_packed,
+            stacked.sbavg_packed if have_avg else dummy_avg,
+            stacked.fwdq_tids,
+            stacked.fwdq_ws,
+            stacked.fwdq_scales,
+            stacked.remap,
+            tids,
+            ws,
+        )
+
+    return run
+
+
+# ------------------------------------------------------------------- retriever
+
+
+class ShardedRetriever:
+    """Engine-pluggable sharded retriever: ``retrieve(QueryBatch) -> result``
+    whose (doc_ids, scores) prefix is bit-identical to ``jit_retrieve`` on the
+    unsharded index. Accepts an unsharded ``LSPIndex`` (sharded here) or a
+    pre-sharded list (e.g. ``index.store.load_sharded_index``; pass the global
+    ``ns_true`` from the manifest — shard-local padding makes it unrecoverable
+    from the shards alone).
+
+    ``mesh=None`` runs the host-loop transport (any device count, one program);
+    a mesh with a ``model`` axis of size ``n_shards`` runs under shard_map.
+    Exposes the same ``warmup(shapes)`` hook as ``jit_retrieve`` so the serving
+    engine's bucket ladder pre-compiles every shape."""
+
+    def __init__(
+        self,
+        index_or_shards,
+        cfg: RetrievalConfig,
+        n_shards: Optional[int] = None,
+        mesh=None,
+        impl: str = "auto",
+        ns_true: Optional[int] = None,
+    ):
+        if isinstance(index_or_shards, LSPIndex):
+            ns_true = index_or_shards.n_superblocks
+            assert n_shards, "n_shards required when passing an unsharded index"
+            shards = shard_index(index_or_shards, n_shards)
+        elif hasattr(index_or_shards, "shards"):  # index.store.ShardedIndex
+            shards = list(index_or_shards.shards)
+            ns_true = index_or_shards.n_superblocks
+        else:
+            shards = list(index_or_shards)
+            if ns_true is None:
+                ns_true = sum(s.n_superblocks for s in shards)  # exact iff unpadded
+        self.shards = shards
+        self.n_shards = len(shards)
+        self.cfg = cfg
+        self.impl = impl
+        self.ns_true = ns_true
+        self.vocab = shards[0].vocab
+        self.mesh = mesh
+        _validate(cfg, impl, shards[0].c, ns_true)
+        if mesh is not None:
+            assert mesh.shape["model"] == self.n_shards, (
+                f"mesh model axis {mesh.shape['model']} != n_shards {self.n_shards}"
+            )
+            self._fn = jax.jit(make_sharded_mesh_fn(shards, cfg, mesh, impl, ns_true))
+        else:
+            sh, imp, nst = shards, impl, ns_true
+
+            @jax.jit
+            def _host(tids, ws):
+                return sharded_retrieve(sh, QueryBatch(tids, ws, sh[0].vocab), cfg, imp, nst)
+
+            self._fn = _host
+
+    def __call__(self, qb: QueryBatch) -> ShardedRetrievalResult:
+        return self._fn(qb.tids, qb.ws)
+
+    def warmup(self, shapes) -> None:
+        """Pre-compile every (Q, nq) bucket shape with sentinel-only queries."""
+        for q, nq in shapes:
+            out = self._fn(
+                jnp.full((q, nq), self.vocab, jnp.int32), jnp.zeros((q, nq), jnp.float32)
+            )
+            jax.block_until_ready(out)
+
+    @classmethod
+    def from_dir(cls, directory: str, cfg: RetrievalConfig, mesh=None, impl: str = "auto"):
+        """Build from a persisted sharded index (``index.store.save_sharded_index``)."""
+        from repro.index.store import load_index_auto
+
+        return cls(load_index_auto(directory, mmap=True, device=True), cfg, mesh=mesh, impl=impl)

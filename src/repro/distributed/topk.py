@@ -1,8 +1,15 @@
 """Hierarchical distributed top-k (shard_map building block).
 
-Local top-k per shard -> all_gather of (value, global-id) pairs over the index axis ->
-final top-k. Collective volume is P * k * 8B per query — independent of corpus size,
-which is what makes index-sharded retrieval collective-light (see §Roofline).
+Canonical local top-k per shard -> all_gather of (value, global-id) pairs over
+the index axis -> canonical final top-k. Collective volume is P * k * 8B per
+query — independent of corpus size, which is what makes index-sharded retrieval
+collective-light (see §Roofline).
+
+Selection is canonical — (value desc, global id asc), ``core/topk.py`` — so the
+merge is *exact*: the canonical top-k of a union equals the canonical top-k of
+the union of per-shard canonical top-ks, and when ids are global positions the
+result is bit-identical to a stable ``lax.top_k`` over the unsharded array
+(XLA's top-k breaks ties by position, i.e. by global id).
 """
 
 from __future__ import annotations
@@ -10,24 +17,31 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.topk import canonical_topk
+
 
 def distributed_topk(
     scores: jnp.ndarray,  # [Q, N_local]
     k: int,
     axis_name: str,
     local_offset: jnp.ndarray | None = None,
+    ids: jnp.ndarray | None = None,  # [Q, N_local] global ids; default = positions
+    id_bound: int | None = None,  # static bound on |ids| (P*N_local for positions):
+    # under 2^24 the tie pass runs as a float top-k instead of an integer one,
+    # which XLA would lower to a full sort on CPU (see core/topk.py)
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (vals [Q, k], global_ids [Q, k]) across the sharded N dimension."""
     n_local = scores.shape[-1]
     k_local = min(k, n_local)
-    lv, li = jax.lax.top_k(scores, k_local)
-    if local_offset is None:
-        local_offset = jax.lax.axis_index(axis_name) * n_local
-    gi = li + local_offset
+    if ids is None:
+        if local_offset is None:
+            local_offset = jax.lax.axis_index(axis_name) * n_local
+        ids = jnp.arange(n_local, dtype=jnp.int32)[None, :] + local_offset
+        ids = jnp.broadcast_to(ids, scores.shape)
+    lv, li = canonical_topk(scores, ids.astype(jnp.int32), k_local, id_bound=id_bound)
     av = jax.lax.all_gather(lv, axis_name, axis=1, tiled=True)  # [Q, P*k]
-    ai = jax.lax.all_gather(gi, axis_name, axis=1, tiled=True)
-    vals, idx = jax.lax.top_k(av, k)
-    return vals, jnp.take_along_axis(ai, idx, axis=1)
+    ai = jax.lax.all_gather(li, axis_name, axis=1, tiled=True)
+    return canonical_topk(av, ai, k, id_bound=id_bound)
 
 
 def pmax_scalar(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:

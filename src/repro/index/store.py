@@ -33,7 +33,7 @@ import dataclasses
 import hashlib
 import io
 import os
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax.numpy as jnp
 import msgpack
@@ -53,6 +53,7 @@ from repro.index.layout import (
 
 MANIFEST_NAME = "manifest.msgpack"
 MANIFEST_FORMAT = "lsp-index"
+SHARDED_MANIFEST_FORMAT = "lsp-sharded-index"
 
 # Every NamedTuple node that may appear in an LSPIndex, by manifest type tag. The
 # manifest spells out the full tree, so a load can only ever construct these types.
@@ -138,12 +139,16 @@ def save_index(directory: str, index: LSPIndex, cfg: Optional[IndexBuildConfig] 
     return fingerprint
 
 
-def read_manifest(directory: str) -> dict:
-    """The raw manifest of a committed index dir (version / fingerprint / config)."""
+def _read_raw_manifest(directory: str) -> dict:
     if not is_complete(directory):
         raise FileNotFoundError(f"{directory} is not a committed index (missing marker)")
     with open(os.path.join(directory, MANIFEST_NAME), "rb") as f:
-        manifest = msgpack.unpackb(f.read(), strict_map_key=False)
+        return msgpack.unpackb(f.read(), strict_map_key=False)
+
+
+def read_manifest(directory: str) -> dict:
+    """The raw manifest of a committed index dir (version / fingerprint / config)."""
+    manifest = _read_raw_manifest(directory)
     if manifest.get("format") != MANIFEST_FORMAT:
         raise IndexStoreError(f"{directory}: not an index manifest ({manifest.get('format')!r})")
     return manifest
@@ -187,6 +192,120 @@ def build_config_of(directory: str) -> Optional[IndexBuildConfig]:
     """The IndexBuildConfig recorded at save time, if any."""
     cfg = read_manifest(directory).get("build_config")
     return IndexBuildConfig(**cfg) if cfg is not None else None
+
+
+# ------------------------------------------------------------- sharded indexes
+
+
+class ShardedIndex(NamedTuple):
+    """A loaded sharded index: per-shard LSPIndex leaves + the global metadata a
+    retriever needs (shard-local padding makes ``n_superblocks`` — the TRUE
+    global superblock count — unrecoverable from the shards alone)."""
+
+    shards: tuple  # tuple[LSPIndex, ...]
+    n_superblocks: int
+    fingerprint: str  # global content fingerprint (over per-shard fingerprints)
+
+
+def save_sharded_index(
+    directory: str,
+    index: LSPIndex,
+    n_shards: int,
+    cfg: Optional[IndexBuildConfig] = None,
+) -> str:
+    """Shard ``index`` into ``n_shards`` contiguous superblock ranges and persist
+    them under one atomically-committed directory:
+
+      <dir>/manifest.msgpack   format/version, n_shards, global superblock count,
+                               per-shard dir names + fingerprints, and the global
+                               fingerprint (blake2b over the shard fingerprints)
+      <dir>/shard-00000/       one ordinary index dir per shard (save_index)
+      <dir>/.complete          whole-set commit marker
+
+    The parent commit marker lands only after every shard dir has committed, so
+    a hot-swap can never observe a half-written shard set. Returns the global
+    fingerprint (what ``swap_index`` epochs and audits key on)."""
+    from repro.distributed.retrieval import shard_index
+
+    shards = shard_index(index, n_shards)
+    parent = os.path.dirname(os.path.abspath(directory))
+    os.makedirs(parent, exist_ok=True)
+    with dir_lock(parent):
+        with atomic_commit_dir(os.path.abspath(directory)) as tmp:
+            shard_dirs, shard_fps = [], []
+            for i, shard in enumerate(shards):
+                name = f"shard-{i:05d}"
+                shard_dirs.append(name)
+                shard_fps.append(save_index(os.path.join(tmp, name), shard, cfg))
+            h = hashlib.blake2b(digest_size=16)
+            for fp in shard_fps:
+                h.update(fp.encode())
+            manifest = {
+                "format": SHARDED_MANIFEST_FORMAT,
+                "layout_version": LAYOUT_VERSION,
+                "n_shards": n_shards,
+                "n_superblocks": index.n_superblocks,
+                "n_docs": index.n_docs,
+                "vocab": index.vocab,
+                "shard_dirs": shard_dirs,
+                "shard_fingerprints": shard_fps,
+                "fingerprint": h.hexdigest(),
+                "build_config": dataclasses.asdict(cfg) if cfg is not None else None,
+            }
+            fsync_write(os.path.join(tmp, MANIFEST_NAME), msgpack.packb(manifest))
+    return manifest["fingerprint"]
+
+
+def read_sharded_manifest(directory: str) -> dict:
+    manifest = _read_raw_manifest(directory)
+    if manifest.get("format") != SHARDED_MANIFEST_FORMAT:
+        raise IndexStoreError(
+            f"{directory}: not a sharded index manifest ({manifest.get('format')!r})"
+        )
+    return manifest
+
+
+def load_sharded_index(
+    directory: str, mmap: bool = True, device: bool = False, verify: bool = False
+) -> list[LSPIndex]:
+    """Load every shard of a persisted sharded index (each structure-checked and
+    fingerprint-pinned against the parent manifest). Use ``load_index_auto`` when
+    the caller also needs the global metadata (``ShardedIndex``)."""
+    manifest = read_sharded_manifest(directory)
+    if manifest["layout_version"] != LAYOUT_VERSION:
+        raise IndexStoreError(
+            f"{directory}: layout version {manifest['layout_version']} != "
+            f"code version {LAYOUT_VERSION}; rebuild the index"
+        )
+    return [
+        load_index(
+            os.path.join(directory, name),
+            mmap=mmap,
+            device=device,
+            verify=verify,
+            expect_fingerprint=fp,
+        )
+        for name, fp in zip(manifest["shard_dirs"], manifest["shard_fingerprints"])
+    ]
+
+
+def load_index_auto(
+    directory: str, mmap: bool = True, device: bool = False, verify: bool = False
+):
+    """Load a committed index dir of either format: an ``LSPIndex`` for the
+    single-device format, a ``ShardedIndex`` for the sharded one. This is what
+    ``RetrievalEngine.swap_index`` feeds the retriever factory, so one engine
+    can hot-swap between single-device and sharded corpus generations."""
+    fmt = _read_raw_manifest(directory).get("format")
+    if fmt == SHARDED_MANIFEST_FORMAT:
+        manifest = read_sharded_manifest(directory)
+        shards = load_sharded_index(directory, mmap=mmap, device=device, verify=verify)
+        return ShardedIndex(
+            shards=tuple(shards),
+            n_superblocks=manifest["n_superblocks"],
+            fingerprint=manifest["fingerprint"],
+        )
+    return load_index(directory, mmap=mmap, device=device, verify=verify)
 
 
 def to_device(index: LSPIndex) -> LSPIndex:

@@ -8,12 +8,20 @@ rebuilt; a fresh build is saved there for the next start. ``--swap-mid-run``
 demonstrates zero-downtime hot-swap: halfway through the request stream the engine
 flips to a re-built index while traffic keeps flowing.
 
+``--shards N`` serves through the sharded retriever (DESIGN.md §8) — bit-identical
+results to the single-device engine, index memory 1/N per shard. With a mesh whose
+``model`` axis matches N (e.g. 4 host devices for --shards 4) the shards run under
+shard_map; otherwise the host-loop transport serves from one process. With
+``--index-dir`` the sharded shard set is persisted/loaded as one atomically
+committed manifest, and --swap-mid-run swaps ALL shards under one epoch.
+
   PYTHONPATH=src python -m repro.launch.serve --n-docs 16384 --requests 128
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/lsp_index  # save, then mmap
   PYTHONPATH=src python -m repro.launch.serve --swap-mid-run
   PYTHONPATH=src python -m repro.launch.serve --no-buckets --cache-size 0  # old engine
+  PYTHONPATH=src python -m repro.launch.serve --shards 4  # host-loop transport
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
-      PYTHONPATH=src python -m repro.launch.serve --sharded
+      PYTHONPATH=src python -m repro.launch.serve --shards 4  # shard_map transport
 """
 
 from __future__ import annotations
@@ -22,13 +30,17 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.core import RetrievalConfig, jit_retrieve
-from repro.core.query import QueryBatch
 from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
 from repro.index.builder import IndexBuildConfig, build_index
-from repro.index.store import IndexStoreError, load_index, read_manifest, save_index
+from repro.index.store import (
+    IndexStoreError,
+    load_index_auto,
+    read_manifest,
+    save_index,
+    save_sharded_index,
+)
 from repro.serve import RetrievalEngine
 
 
@@ -47,7 +59,10 @@ def main() -> None:
                    help="single compiled shape: every batch padded to max-batch")
     p.add_argument("--cache-size", type=int, default=1024, help="result-cache entries; 0 disables")
     p.add_argument("--no-warmup", action="store_true", help="skip bucket pre-compilation")
-    p.add_argument("--sharded", action="store_true")
+    p.add_argument("--shards", type=int, default=0,
+                   help="serve through the sharded retriever over N index shards "
+                        "(shard_map when the device count allows a model=N mesh, "
+                        "else the bit-identical host-loop transport)")
     p.add_argument("--index-dir", default=None,
                    help="persisted-index dir: mmap-load if committed, else build + save")
     p.add_argument("--swap-mid-run", action="store_true",
@@ -57,18 +72,25 @@ def main() -> None:
     ccfg = CorpusConfig(n_docs=args.n_docs, vocab=args.vocab, n_topics=32, seed=0)
     corpus = make_corpus(ccfg)
     bcfg = IndexBuildConfig(b=args.b, c=args.c)
+    n_shards = args.shards
 
     def build():
         return build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab, bcfg)
 
-    idx = None
+    idx = None  # LSPIndex, or store.ShardedIndex when --shards is persisted
     if args.index_dir:
         try:
             t0 = time.perf_counter()
-            idx = load_index(args.index_dir, mmap=True, device=True)
-            fp = read_manifest(args.index_dir)["fingerprint"]
-            print(f"[serve] mmap-loaded index {args.index_dir} ({fp[:12]}…) "
-                  f"in {time.perf_counter() - t0:.3f}s")
+            idx = load_index_auto(args.index_dir, mmap=True, device=True)
+            stored_shards = len(idx.shards) if hasattr(idx, "shards") else 0
+            if stored_shards != n_shards:
+                print(f"[serve] stored index has {stored_shards} shards, "
+                      f"want {n_shards}; rebuilding")
+                idx = None
+            else:
+                fp = idx.fingerprint if stored_shards else read_manifest(args.index_dir)["fingerprint"]
+                print(f"[serve] mmap-loaded index {args.index_dir} ({fp[:12]}…) "
+                      f"in {time.perf_counter() - t0:.3f}s")
         except FileNotFoundError:
             pass
         except IndexStoreError as exc:  # version/manifest drift -> rebuild + resave
@@ -78,34 +100,40 @@ def main() -> None:
         idx = build()
         print(f"[serve] built index in {time.perf_counter() - t0:.1f}s")
         if args.index_dir:
-            fp = save_index(args.index_dir, idx, bcfg)
-            print(f"[serve] saved index -> {args.index_dir} ({fp[:12]}…)")
+            if n_shards:
+                fp = save_sharded_index(args.index_dir, idx, n_shards, bcfg)
+                idx = load_index_auto(args.index_dir, mmap=True, device=True)
+                print(f"[serve] saved {n_shards}-shard index -> {args.index_dir} ({fp[:12]}…)")
+            else:
+                fp = save_index(args.index_dir, idx, bcfg)
+                print(f"[serve] saved index -> {args.index_dir} ({fp[:12]}…)")
     gamma = args.gamma or max(16, idx.n_superblocks // 8)
     cfg = RetrievalConfig(variant=args.variant, k=args.k, gamma=gamma, beta=0.33)
-    print(f"[serve] index NB={idx.n_blocks} NS={idx.n_superblocks}, {args.variant} γ={gamma}")
+    print(f"[serve] NS={idx.n_superblocks}, {args.variant} γ={gamma}"
+          + (f", {n_shards} shards" if n_shards else ""))
 
-    batch_buckets = None
-    if args.sharded and len(jax.devices()) >= 4:
-        from repro.distributed.retrieval import make_mesh_retriever, shard_index
+    mesh = None
+    if n_shards and len(jax.devices()) >= n_shards:
         from repro.launch.mesh import make_host_mesh
 
-        mesh = make_host_mesh(model=2, data=2)
-        run, _ = make_mesh_retriever(shard_index(idx, 2), cfg, mesh)
-        retriever = lambda qb: run(qb)
-        batch_q = 4
-        batch_buckets = [batch_q]  # sharded batch must divide the data axis: one rung
-        print(f"[serve] sharded over mesh {dict(mesh.shape)}")
-    else:
-        retriever = jit_retrieve(idx, cfg)  # RetrievalResult plugs into the engine
-        batch_q = args.max_batch
-        if args.no_buckets:
-            batch_buckets = [batch_q]
+        mesh = make_host_mesh(model=n_shards, data=1)
+        print(f"[serve] shard_map transport over mesh {dict(mesh.shape)}")
+    elif n_shards:
+        print(f"[serve] {len(jax.devices())} device(s) < {n_shards} shards: host-loop transport")
 
+    def make_retriever(ix):
+        if n_shards:
+            from repro.distributed.sharded import ShardedRetriever
+
+            return ShardedRetriever(ix, cfg, n_shards=n_shards, mesh=mesh)
+        return jit_retrieve(ix, cfg)  # RetrievalResult plugs into the engine
+
+    batch_buckets = [args.max_batch] if args.no_buckets else None
     eng = RetrievalEngine(
-        retriever, corpus.vocab, max_batch=batch_q, nq_max=64,
+        make_retriever(idx), corpus.vocab, max_batch=args.max_batch, nq_max=64,
         batch_buckets=batch_buckets, cache_size=args.cache_size,
         warmup=not args.no_warmup,
-        retriever_factory=lambda ix: jit_retrieve(ix, cfg),
+        retriever_factory=make_retriever,
     )
     print(f"[serve] buckets {eng.ladder}, cache={args.cache_size}")
     queries = make_queries(ccfg, corpus, args.requests)

@@ -273,15 +273,19 @@ class RetrievalEngine:
         return epoch
 
     def swap_index(self, path_or_index, warm: bool = True) -> int:
-        """Hot-swap to a new index: an LSPIndex, or a path to a persisted one
-        (``repro.index.store`` — loaded mmap-backed, then realized on device).
-        Needs ``retriever_factory``; build + warm happen off the worker thread."""
+        """Hot-swap to a new index: an LSPIndex, a ``store.ShardedIndex``, or a
+        path to a persisted one of either format (``repro.index.store`` — loaded
+        mmap-backed, then realized on device; a sharded dir loads every shard of
+        the set, so all shards flip together under the one epoch bump). Needs
+        ``retriever_factory``; load + build + warm all happen off the worker
+        thread, so a failing load or shard build raises HERE and the engine
+        keeps serving on the old retriever — failure isolation extends to swaps."""
         if self.retriever_factory is None:
             raise RuntimeError("swap_index needs retriever_factory= at engine construction")
         if isinstance(path_or_index, (str, os.PathLike)):
-            from repro.index.store import load_index
+            from repro.index.store import load_index_auto
 
-            path_or_index = load_index(os.fspath(path_or_index), mmap=True, device=True)
+            path_or_index = load_index_auto(os.fspath(path_or_index), mmap=True, device=True)
         return self.swap_retriever(self.retriever_factory(path_or_index), warm=warm)
 
     def shutdown(self) -> None:

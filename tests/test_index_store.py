@@ -18,10 +18,15 @@ from repro.index.layout import LAYOUT_VERSION
 from repro.index.store import (
     MANIFEST_NAME,
     IndexStoreError,
+    ShardedIndex,
     build_config_of,
     load_index,
+    load_index_auto,
+    load_sharded_index,
     read_manifest,
+    read_sharded_manifest,
     save_index,
+    save_sharded_index,
     to_device,
 )
 
@@ -113,6 +118,49 @@ def test_fingerprint_and_shape_mismatch_rejected(tiny_index, store_dir):
     np.save(leaf, arr.astype(np.int64))
     with pytest.raises(IndexStoreError, match="manifest"):
         load_index(store_dir)
+
+
+def test_sharded_roundtrip_and_global_fingerprint(tiny_index, store_dir):
+    """Sharded manifest: per-shard leaf dirs round-trip leaf-exact against
+    shard_index, the global fingerprint pins the shard set, and load_index_auto
+    dispatches on the manifest format (incl. a ragged 3-way split)."""
+    from repro.distributed.retrieval import shard_index
+
+    cfg = IndexBuildConfig(b=8, c=8, kmeans_iters=3)
+    fp = save_sharded_index(store_dir, tiny_index, 3, cfg)
+    manifest = read_sharded_manifest(store_dir)
+    assert manifest["n_shards"] == 3
+    assert manifest["n_superblocks"] == tiny_index.n_superblocks  # TRUE global NS
+    assert manifest["fingerprint"] == fp and len(manifest["shard_fingerprints"]) == 3
+    want = shard_index(tiny_index, 3)
+    got = load_sharded_index(store_dir, mmap=False, verify=True)
+    assert len(got) == 3
+    for w, g in zip(want, got):
+        _leaves_equal(w, g)
+    bundle = load_index_auto(store_dir, mmap=True)
+    assert isinstance(bundle, ShardedIndex) and bundle.fingerprint == fp
+    assert bundle.n_superblocks == tiny_index.n_superblocks
+    # the plain format still loads as a bare LSPIndex through the same entry point
+    plain_dir = store_dir + "_plain"
+    save_index(plain_dir, tiny_index)
+    assert not isinstance(load_index_auto(plain_dir), ShardedIndex)
+    # format confusion is rejected, not misread
+    with pytest.raises(IndexStoreError, match="manifest"):
+        read_manifest(store_dir)
+    with pytest.raises(IndexStoreError, match="sharded"):
+        read_sharded_manifest(plain_dir)
+
+
+def test_sharded_shard_corruption_rejected(tiny_index, store_dir):
+    """A tampered shard leaf fails the per-shard fingerprint pinned in the parent
+    manifest (verify=True) — a half-poisoned shard set can never be swapped in."""
+    save_sharded_index(store_dir, tiny_index, 2)
+    leaf = os.path.join(store_dir, "shard-00001", "doc_remap.npy")
+    arr = np.load(leaf)
+    arr[0] ^= 1
+    np.save(leaf, arr)
+    with pytest.raises(IndexStoreError, match="content hash"):
+        load_sharded_index(store_dir, mmap=False, verify=True)
 
 
 def test_uncommitted_dir_rejected_and_save_is_atomic(tiny_index, store_dir):

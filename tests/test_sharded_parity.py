@@ -1,0 +1,303 @@
+"""Property-based sharded/single-device parity + pruning-safety invariants.
+
+The sharded pipeline (distributed/sharded.py) promises *bit-identical* results
+to ``retrieve`` on the unsharded index: global pruning decisions + local scoring
++ canonical (score desc, doc-id asc) selection everywhere. These suites draw
+random corpora, retrieval configs and shard counts (including ragged tails and
+corpora engineered to produce exact score ties at the merge boundary) and assert
+identity of ids, scores, θ and the distinct-visit counters — and the module
+docstring's union-covers-global claim, finally tested: per-shard θ never exceeds
+the global θ, per-shard visit counts sum to the single-device counters, and the
+aggregate never exceeds the true superblock count.
+
+Runs on any device count (the host-loop transport is the reference semantics;
+tests/test_distributed.py pins host-loop == shard_map on a 4-device mesh).
+PROPTEST_CASES / PROPTEST_SEED control the grid (CI runs 50 cases).
+"""
+
+import numpy as np
+import pytest
+
+from proptest import given, integers, sampled_from
+
+from repro.core import RetrievalConfig, make_query_batch, retrieve
+from repro.core.query import QueryBatch
+from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
+from repro.distributed.retrieval import shard_index, shards_of
+from repro.distributed.sharded import ShardedRetriever, sharded_retrieve
+from repro.index.builder import IndexBuildConfig, build_index
+from repro.serve import RetrievalEngine
+
+# (b, c, bound_bits) triples satisfying the word-alignment constraint c*bits % 32 == 0
+_GEOM = [(4, 8, 4), (2, 4, 8), (4, 4, 8)]
+_VARIANTS = ["lsp0", "lsp1", "lsp2", "sp"]
+
+
+def _build_case(seed, n_docs, vocab, geom):
+    b, c, bits = geom
+    ccfg = CorpusConfig(n_docs=n_docs, vocab=vocab, n_topics=6, seed=seed)
+    corpus = make_corpus(ccfg)
+    idx = build_index(
+        corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab,
+        IndexBuildConfig(b=b, c=c, bound_bits=bits, kmeans_iters=1, d_proj=16, seed=seed),
+    )
+    qb = make_query_batch(make_queries(ccfg, corpus, 4, seed=seed + 1), corpus.vocab)
+    return corpus, idx, qb
+
+
+def _cfg_case(idx, variant, gamma_frac, gamma0_frac, eta, mu, beta, k):
+    """γ/γ0 drawn as fractions of NS so every corpus hits the same edge regimes:
+    γ=1, γ≈NS/2, γ=NS and γ>NS (clamps), γ0 from 1 up to γ."""
+    ns = idx.n_superblocks
+    gamma = max(1, int(round(gamma_frac * ns)))
+    gamma0 = max(1, int(round(gamma0_frac * gamma)))
+    return RetrievalConfig(
+        variant=variant, k=k, gamma=gamma, gamma0=gamma0, eta=eta, mu=mu, beta=beta
+    )
+
+
+def _assert_bit_identical(ref, res):
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids), np.asarray(res.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(res.scores))
+    np.testing.assert_array_equal(np.asarray(ref.theta), np.asarray(res.theta))
+    np.testing.assert_array_equal(
+        np.asarray(ref.n_superblocks_visited), np.asarray(res.n_superblocks_visited)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ref.n_blocks_scored), np.asarray(res.n_blocks_scored)
+    )
+
+
+# ---- parity: sharded retrieve is bit-identical to single-device --------------------
+
+
+@given(
+    seed=integers(0, 10_000),
+    n_docs=integers(192, 640),
+    vocab=sampled_from([64, 96, 160]),
+    geom=sampled_from(_GEOM),
+    variant=sampled_from(_VARIANTS),
+    gamma_frac=sampled_from([0.02, 0.25, 0.5, 1.0, 1.5]),  # γ=1 … γ>NS
+    gamma0_frac=sampled_from([0.05, 0.5, 1.0]),
+    eta=sampled_from([0.25, 0.5, 1.0, 4.0]),
+    mu=sampled_from([0.1, 0.5, 1.0]),
+    beta=sampled_from([0.33, 0.66, 1.0]),
+    k=sampled_from([1, 5, 10, 16]),
+    n_shards=sampled_from([1, 2, 3, 4]),
+)
+def test_sharded_retrieve_bit_identical(
+    seed, n_docs, vocab, geom, variant, gamma_frac, gamma0_frac, eta, mu, beta, k, n_shards
+):
+    _, idx, qb = _build_case(seed, n_docs, vocab, geom)
+    cfg = _cfg_case(idx, variant, gamma_frac, gamma0_frac, eta, mu, beta, k)
+    ref = retrieve(idx, qb, cfg, impl="ref")
+    shards = shard_index(idx, n_shards)
+    res = sharded_retrieve(shards, qb, cfg, impl="ref", ns_true=idx.n_superblocks)
+    _assert_bit_identical(ref, res)
+
+
+@given(
+    seed=integers(0, 10_000),
+    n_base=sampled_from([3, 5, 8]),
+    copies=sampled_from([16, 24, 40]),
+    n_shards=sampled_from([2, 3, 4]),
+    variant=sampled_from(["lsp0", "lsp1"]),
+    k=sampled_from([5, 10]),
+)
+def test_equal_score_ties_at_merge_boundary(seed, n_base, copies, n_shards, variant, k):
+    """Corpora of duplicated documents: many docs share the exact same float
+    score, so the k boundary lands inside an equal-score run that straddles the
+    shard cut. The canonical (score desc, id asc) order must pick the same ids
+    on both paths — this is exactly where value-only merges diverge."""
+    rng = np.random.default_rng(seed)
+    vocab = 64
+    base = [np.sort(rng.choice(vocab, rng.integers(4, 9), replace=False)) for _ in range(n_base)]
+    docs = [base[i % n_base] for i in range(n_base * copies)]
+    lens = np.array([len(d) for d in docs], np.int64)
+    doc_ptr = np.zeros(len(docs) + 1, np.int64)
+    np.cumsum(lens, out=doc_ptr[1:])
+    tids = np.concatenate(docs).astype(np.int32)
+    ws = np.ones_like(tids, np.float32)  # constant weights -> exact ties everywhere
+    idx = build_index(
+        doc_ptr, tids, ws, vocab,
+        IndexBuildConfig(b=4, c=8, kmeans_iters=1, d_proj=16, seed=seed),
+    )
+    qt = base[rng.integers(0, n_base)].astype(np.int32)
+    qb = make_query_batch([(qt, np.ones_like(qt, np.float32))], vocab)
+    cfg = RetrievalConfig(variant=variant, k=k, gamma=max(2, idx.n_superblocks // 2),
+                          gamma0=2, beta=1.0)
+    ref = retrieve(idx, qb, cfg, impl="ref")
+    # sanity: the boundary really is tied (duplicated docs share the k-th score)
+    scores = np.asarray(ref.scores)[0]
+    assert (scores == scores[k - 1]).sum() > 1, "tie construction failed"
+    res = sharded_retrieve(
+        shard_index(idx, n_shards), qb, cfg, impl="ref", ns_true=idx.n_superblocks
+    )
+    _assert_bit_identical(ref, res)
+
+
+@given(
+    seed=integers(0, 10_000),
+    n_docs=integers(200, 520),
+    n_shards=sampled_from([3, 4]),
+    variant=sampled_from(_VARIANTS),
+)
+def test_ragged_tail_shards(seed, n_docs, n_shards, variant):
+    """Arbitrary corpus sizes shard: the last shard's tail is padded with empty
+    superblocks (zero bounds, sentinel docs) that can never surface in results
+    or distort the candidate order."""
+    _, idx, qb = _build_case(seed, n_docs, 96, (4, 8, 4))
+    ns = idx.n_superblocks
+    shards = shard_index(idx, n_shards)
+    ns_l = shards_of(ns, n_shards)
+    assert all(s.n_superblocks == ns_l for s in shards)
+    if ns % n_shards:  # the padded tail case this property is about
+        assert ns_l * n_shards > ns
+        pad_docs = ns_l * n_shards * idx.c * idx.b - idx.doc_remap.shape[0]
+        last = shards[-1]
+        if pad_docs > 0:  # padded doc positions carry the sentinel remap
+            assert (np.asarray(last.doc_remap)[-pad_docs:] == idx.n_docs).all()
+    cfg = _cfg_case(idx, variant, 0.5, 0.5, 0.5, 0.5, 0.66, 10)
+    ref = retrieve(idx, qb, cfg, impl="ref")
+    res = sharded_retrieve(shards, qb, cfg, impl="ref", ns_true=ns)
+    _assert_bit_identical(ref, res)
+    assert (np.asarray(res.doc_ids) < idx.n_docs).all(), "padding leaked into results"
+
+
+# ---- pruning-safety invariants under sharding --------------------------------------
+
+
+@given(
+    seed=integers(0, 10_000),
+    n_docs=integers(192, 560),
+    geom=sampled_from(_GEOM),
+    variant=sampled_from(_VARIANTS),
+    gamma_frac=sampled_from([0.25, 0.5, 1.0]),
+    eta=sampled_from([0.25, 1.0]),
+    n_shards=sampled_from([2, 3, 4]),
+)
+def test_sharded_pruning_invariants(seed, n_docs, geom, variant, gamma_frac, eta, n_shards):
+    """The union-covers-global claim, quantified per shard:
+    * the aggregate distinct superblock count never exceeds the TRUE NS
+      (shard padding must not inflate it);
+    * per-shard distinct counts sum exactly to the single-device counters
+      (each candidate has one owner — nothing double-counted, nothing lost);
+    * each shard's local round-0 θ never exceeds the global θ (a shard's
+      round-0 documents are a subset, so its k-th best cannot be larger) —
+      pruning at θ_p is therefore never more aggressive than global pruning."""
+    _, idx, qb = _build_case(seed, n_docs, 96, geom)
+    cfg = _cfg_case(idx, variant, gamma_frac, 0.5, eta, 0.5, 0.66, 10)
+    ref = retrieve(idx, qb, cfg, impl="ref")
+    res = sharded_retrieve(
+        shard_index(idx, n_shards), qb, cfg, impl="ref", ns_true=idx.n_superblocks
+    )
+    n_sb = np.asarray(res.n_superblocks_visited)
+    assert (n_sb <= idx.n_superblocks).all(), (int(n_sb.max()), idx.n_superblocks)
+    np.testing.assert_array_equal(
+        np.asarray(res.shard_superblocks).sum(axis=1), np.asarray(ref.n_superblocks_visited)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.shard_blocks).sum(axis=1), np.asarray(ref.n_blocks_scored)
+    )
+    assert (np.asarray(res.shard_blocks) >= 0).all()
+    theta = np.asarray(res.theta)[:, None]
+    assert (np.asarray(res.shard_theta) <= theta + 0).all(), "per-shard θ exceeded global θ"
+
+
+# ---- parity through the serving engine ---------------------------------------------
+
+
+@given(
+    seed=integers(0, 10_000),
+    variant=sampled_from(["lsp0", "lsp2"]),
+    gamma_frac=sampled_from([0.25, 0.5, 1.0]),
+    n_shards=sampled_from([1, 2, 3, 4]),
+)
+def test_engine_parity_single_vs_sharded(seed, variant, gamma_frac, n_shards):
+    """The full serving path — canonicalization, bucket padding, batching —
+    composed with the sharded retriever returns byte-identical futures to the
+    single-device engine for the same submissions."""
+    corpus, idx, _ = _build_case(seed, 384, 96, (4, 8, 4))
+    cfg = _cfg_case(idx, variant, gamma_frac, 0.5, 0.5, 0.5, 0.66, 10)
+    shards = shard_index(idx, n_shards)
+    ns = idx.n_superblocks
+    single = RetrievalEngine(
+        lambda qb: retrieve(idx, qb, cfg, impl="ref"),
+        corpus.vocab, max_batch=4, nq_max=32, max_wait_ms=0.0, cache_size=0,
+    )
+    sharded = RetrievalEngine(
+        lambda qb: sharded_retrieve(shards, qb, cfg, impl="ref", ns_true=ns),
+        corpus.vocab, max_batch=4, nq_max=32, max_wait_ms=0.0, cache_size=0,
+    )
+    try:
+        ccfg = CorpusConfig(n_docs=384, vocab=96, n_topics=6, seed=seed)
+        queries = make_queries(ccfg, corpus, 3, seed=seed + 2)
+        for t, w in queries:
+            ia, sa = single.submit(t, w).result(timeout=120)
+            ib, sb = sharded.submit(t, w).result(timeout=120)
+            np.testing.assert_array_equal(ia, ib)
+            np.testing.assert_array_equal(sa, sb)
+    finally:
+        single.shutdown()
+        sharded.shutdown()
+
+
+# ---- canonical_topk: fast path == reference sort -----------------------------------
+
+
+@given(
+    seed=integers(0, 100_000),
+    n=sampled_from([129, 200, 512, 1000]),  # above the direct-sort threshold
+    k=sampled_from([1, 5, 10, 16]),
+    n_levels=sampled_from([1, 2, 5, 50]),  # few levels -> massive tie runs
+    with_neg=sampled_from([False, True]),
+)
+def test_canonical_topk_fast_path_matches_reference(seed, n, k, n_levels, with_neg):
+    """The 3×top_k + tiny-sort implementation must equal the one-big-sort
+    reference bit-for-bit, including degenerate all-tied inputs, boundary ties,
+    duplicate ids and NEG-sentinel rows (fewer than k valid candidates)."""
+    import jax.numpy as jnp
+
+    from repro.core.scoring import NEG
+    from repro.core.topk import _canonical_sort_topk, canonical_topk
+
+    rng = np.random.default_rng(seed)
+    levels = rng.uniform(0.0, 10.0, n_levels).astype(np.float32)
+    scores = levels[rng.integers(0, n_levels, (3, n))]
+    ids = rng.integers(0, n, (3, n)).astype(np.int32)  # collisions on purpose
+    if with_neg:
+        scores[rng.random((3, n)) < 0.7] = NEG  # most rows invalid: v_k == NEG
+    ref = _canonical_sort_topk(jnp.asarray(scores), jnp.asarray(ids.astype(np.int32)), k)
+    for bound in (None, n + 1):  # int tie pass and float-encoded tie pass
+        fast = canonical_topk(jnp.asarray(scores), jnp.asarray(ids), k, id_bound=bound)
+        np.testing.assert_array_equal(np.asarray(fast[0]), np.asarray(ref[0]), err_msg=str(bound))
+        np.testing.assert_array_equal(np.asarray(fast[1]), np.asarray(ref[1]), err_msg=str(bound))
+
+
+# ---- deterministic regression cases ------------------------------------------------
+
+
+def test_sharded_retriever_rejects_unsupported_configs(tiny_index):
+    with pytest.raises(ValueError, match="bmp"):
+        ShardedRetriever(tiny_index, RetrievalConfig(variant="bmp"), n_shards=2)
+    with pytest.raises(ValueError, match="fwd"):
+        ShardedRetriever(tiny_index, RetrievalConfig(doc_layout="flat"), n_shards=2)
+    with pytest.raises(ValueError, match="legacy"):
+        ShardedRetriever(tiny_index, RetrievalConfig(), n_shards=2, impl="legacy")
+    with pytest.raises(ValueError, match="block_budget"):
+        ShardedRetriever(tiny_index, RetrievalConfig(gamma=8, block_budget=2), n_shards=2)
+
+
+def test_sharded_retriever_callable_and_warmup(tiny_index, tiny_corpus):
+    """The jitted host-loop retriever exposes the jit_retrieve warmup contract
+    and matches single-device retrieve exactly (incl. a ragged 3-way split)."""
+    _, corpus, queries = tiny_corpus
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5)
+    sr = ShardedRetriever(tiny_index, cfg, n_shards=3, impl="ref")
+    assert tiny_index.n_superblocks % 3 != 0  # the split really is ragged
+    sr.warmup([(1, 16), (2, 32)])
+    qb = make_query_batch(queries[:2], corpus.vocab, nq_max=32)
+    ref = retrieve(tiny_index, qb, cfg, impl="ref")
+    res = sr(qb)
+    _assert_bit_identical(ref, res)
+    assert np.asarray(res.shard_theta).shape == (2, 3)

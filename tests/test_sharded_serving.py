@@ -1,0 +1,203 @@
+"""Serving-engine lifecycle semantics composed with the sharded retriever:
+hot-swap flips ALL shards under one epoch, in-flight batches complete on the old
+shard set, the epoch-keyed cache never resurfaces pre-swap results, and a
+mid-swap shard-build/load failure leaves the old retriever serving (failure
+isolation extends to swaps). Uses two distinguishable corpus generations
+(different seeds) so 'which shard set answered' is observable from results."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import RetrievalConfig, make_query_batch, retrieve
+from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
+from repro.distributed.sharded import ShardedRetriever
+from repro.index.builder import IndexBuildConfig, build_index
+from repro.index.store import IndexStoreError, load_index_auto, save_sharded_index
+from repro.serve import RetrievalEngine
+
+CFG = RetrievalConfig(variant="lsp0", k=10, gamma=12, gamma0=4, beta=0.5)
+N_SHARDS = 3
+
+
+def _gen(seed: int):
+    """One corpus generation: (corpus, index, queries)."""
+    ccfg = CorpusConfig(n_docs=768, vocab=128, n_topics=6, seed=seed)
+    corpus = make_corpus(ccfg)
+    idx = build_index(
+        corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab,
+        IndexBuildConfig(b=4, c=8, kmeans_iters=1, d_proj=16),
+    )
+    return corpus, idx, make_queries(ccfg, corpus, 6, seed=99)
+
+
+@pytest.fixture(scope="module")
+def gens():
+    return _gen(0), _gen(1)
+
+
+def _factory(ix):
+    return ShardedRetriever(ix, CFG, n_shards=N_SHARDS, impl="ref")
+
+
+def _expected(idx, t, w, vocab, nq_max=64):
+    qb = make_query_batch([(t, w)], vocab, nq_max=nq_max)
+    res = retrieve(idx, qb, CFG, impl="ref")
+    return np.asarray(res.doc_ids)[0], np.asarray(res.scores)[0]
+
+
+def test_sharded_swap_from_disk_all_shards_one_epoch(gens, tmp_path):
+    """swap_index on a sharded dir reloads every shard and flips them together:
+    post-swap answers match the NEW generation's single-device reference and the
+    pre-swap cache entry never hits again."""
+    (corpus0, idx0, queries), (_, idx1, _) = gens
+    d0, d1 = str(tmp_path / "gen0"), str(tmp_path / "gen1")
+    save_sharded_index(d0, idx0, N_SHARDS)
+    save_sharded_index(d1, idx1, N_SHARDS)
+    eng = RetrievalEngine(
+        _factory(load_index_auto(d0, device=True)), corpus0.vocab,
+        max_batch=2, nq_max=64, cache_size=16, retriever_factory=_factory,
+    )
+    try:
+        t, w = queries[0]
+        ids0, sc0 = eng.submit(t, w).result(timeout=300)
+        e_ids0, e_sc0 = _expected(idx0, t, w, corpus0.vocab)
+        np.testing.assert_array_equal(ids0, e_ids0)
+        np.testing.assert_array_equal(sc0, e_sc0)
+        eng.submit(t, w).result(timeout=300)  # cache hit on epoch 0
+        assert eng.stats.summary()["cache_hits"] == 1
+
+        epoch = eng.swap_index(d1)
+        assert epoch == eng.epoch == 1
+        ids1, sc1 = eng.submit(t, w).result(timeout=300)  # MUST miss the cache
+        assert eng.stats.summary()["cache_hits"] == 1
+        e_ids1, e_sc1 = _expected(idx1, t, w, corpus0.vocab)
+        np.testing.assert_array_equal(ids1, e_ids1)
+        np.testing.assert_array_equal(sc1, e_sc1)
+        # the generations are actually distinguishable, so the assertions above bite
+        assert not (np.array_equal(ids0, ids1) and np.array_equal(sc0, sc1))
+    finally:
+        eng.shutdown()
+
+
+def test_sharded_swap_inflight_batch_completes_on_old_shard_set(gens):
+    (corpus0, idx0, queries), (_, idx1, _) = gens
+    old = _factory(idx0)
+    entered, release = threading.Event(), threading.Event()
+
+    def gated_old(qb):
+        entered.set()
+        release.wait(timeout=60)
+        return old(qb)
+
+    eng = RetrievalEngine(gated_old, corpus0.vocab, max_batch=2, nq_max=64,
+                          max_wait_ms=0.0, cache_size=16,
+                          retriever_factory=_factory)
+    try:
+        t, w = queries[1]
+        fut = eng.submit(t, w)
+        assert entered.wait(timeout=60)  # worker is inside the old shard set
+        assert eng.swap_index(idx1, warm=False) == 1  # swap lands mid-flight
+        release.set()
+        ids, sc = fut.result(timeout=300)
+        e_ids0, e_sc0 = _expected(idx0, t, w, corpus0.vocab)
+        np.testing.assert_array_equal(ids, e_ids0)  # served by the OLD shard set
+        np.testing.assert_array_equal(sc, e_sc0)
+        # its cache fill was dropped (epoch retired mid-flight): resubmission
+        # misses and scores on the new shard set
+        ids1, sc1 = eng.submit(t, w).result(timeout=300)
+        e_ids1, e_sc1 = _expected(idx1, t, w, corpus0.vocab)
+        np.testing.assert_array_equal(ids1, e_ids1)
+        np.testing.assert_array_equal(sc1, e_sc1)
+        assert eng.stats.summary()["cache_hits"] == 0
+    finally:
+        release.set()
+        eng.shutdown()
+
+
+def test_mid_swap_shard_failure_leaves_old_serving(gens, tmp_path):
+    """A corrupted shard in the new set fails the swap on the CALLING thread;
+    the engine keeps serving the old shard set, epoch unchanged, zero failures."""
+    (corpus0, idx0, queries), (_, idx1, _) = gens
+    d1 = str(tmp_path / "gen1")
+    save_sharded_index(d1, idx1, N_SHARDS)
+    # corrupt one shard's leaf: dtype/shape no longer match its manifest
+    leaf = tmp_path / "gen1" / "shard-00001" / "doc_remap.npy"
+    np.save(leaf, np.zeros(3, np.float64))
+    eng = RetrievalEngine(_factory(idx0), corpus0.vocab, max_batch=2, nq_max=64,
+                          cache_size=16, retriever_factory=_factory)
+    try:
+        t, w = queries[2]
+        before = eng.submit(t, w).result(timeout=300)
+        with pytest.raises(IndexStoreError):
+            eng.swap_index(d1)
+        assert eng.epoch == 0 and eng.stats.summary()["swaps"] == 0
+        # a factory blow-up (shard build failure) is isolated the same way
+        def exploding_factory(ix):
+            raise RuntimeError("shard build failed")
+        eng.retriever_factory = exploding_factory
+        with pytest.raises(RuntimeError, match="shard build failed"):
+            eng.swap_index(idx1)
+        assert eng.epoch == 0
+        after = eng.submit(t, w).result(timeout=300)  # cache hit: same epoch
+        np.testing.assert_array_equal(before[0], after[0])
+        np.testing.assert_array_equal(before[1], after[1])
+        assert eng.stats.summary()["failures"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_sharded_swap_under_continuous_traffic_zero_failures_zero_stale(gens):
+    """Concurrent clients stream a fixed pool through the engine while the shard
+    set hot-swaps between generations: every future resolves (0 failures) and
+    every result is exactly one generation's answer — never a mixture, never a
+    stale cache row (0 results unattributable to the epoch-consistent set)."""
+    (corpus0, idx0, queries), (_, idx1, _) = gens
+    pool = queries[:4]
+    expected = {
+        g: [_expected(idx, t, w, corpus0.vocab) for t, w in pool]
+        for g, idx in ((0, idx0), (1, idx1))
+    }
+    eng = RetrievalEngine(_factory(idx0), corpus0.vocab, max_batch=4, nq_max=64,
+                          max_wait_ms=0.5, cache_size=32, retriever_factory=_factory)
+    stop = threading.Event()
+    errors, stale, gens_seen = [], [], set()
+    lock = threading.Lock()
+
+    def client(seed):
+        i = seed
+        while not stop.is_set():
+            qi = i % len(pool)
+            try:
+                ids, sc = eng.submit(*pool[qi]).result(timeout=120)
+            except Exception as exc:  # noqa: BLE001
+                errors.append(exc)
+                return
+            matched = None
+            for g in (0, 1):
+                if np.array_equal(ids, expected[g][qi][0]) and np.array_equal(sc, expected[g][qi][1]):
+                    matched = g
+            with lock:
+                if matched is None:
+                    stale.append((qi, ids, sc))
+                else:
+                    gens_seen.add(matched)
+            i += 1
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in range(3)]
+    for th in threads:
+        th.start()
+    try:
+        for gen_idx in (idx1, idx0, idx1):
+            eng.swap_index(gen_idx, warm=True)
+    finally:
+        stop.set()
+        for th in threads:
+            th.join(timeout=60)
+        eng.shutdown()
+    assert not errors, errors
+    assert not stale, f"{len(stale)} results matched neither generation"
+    s = eng.stats.summary()
+    assert s["failures"] == 0 and s["swaps"] == 3
+    assert gens_seen == {0, 1}  # traffic observed both generations
