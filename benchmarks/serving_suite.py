@@ -28,7 +28,8 @@ import time
 import numpy as np
 
 from benchmarks.common import CORPUS_CFG, K_DEFAULT, Row, index, queries
-from repro.core import RetrievalConfig, jit_retrieve
+from repro.api import DynamicParams, SearchRequest, StaticConfig
+from repro.core import jit_search
 from repro.serve import RetrievalEngine
 
 BENCH_JSON = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
@@ -45,11 +46,14 @@ class _FailEvery:
         self.every = every
         self.count = 0
 
-    def __call__(self, qb):
+    def __call__(self, qb, dyn=None):
         self.count += 1
         if self.count % self.every == 0:
             raise RuntimeError("injected retriever failure")
-        return self.inner(qb)
+        return self.inner(qb, dyn)
+
+    def __getattr__(self, name):  # supports_dynamic / defaults / warmup / ...
+        return getattr(self.inner, name)
 
 
 def _engine(retr, **kw) -> RetrievalEngine:
@@ -73,11 +77,12 @@ def _summary(eng: RetrievalEngine, n: int, wall: float) -> dict:
     }
 
 
-def _single_stream(eng, qs, order) -> float:
+def _single_stream(eng, qs, order, params=None) -> float:
     t0 = time.perf_counter()
     for i in order:
         t, w = qs[i % len(qs)]
-        eng.submit(t, w).result(timeout=300)
+        p = params[i % len(params)] if params else None
+        eng.search(SearchRequest(t, w, params=p)).result(timeout=300)
     return time.perf_counter() - t0
 
 
@@ -85,7 +90,8 @@ def _bursty(eng, qs, n, burst) -> float:
     t0 = time.perf_counter()
     done = 0
     while done < n:
-        futs = [eng.submit(*qs[(done + j) % len(qs)]) for j in range(min(burst, n - done))]
+        futs = [eng.search(SearchRequest(*qs[(done + j) % len(qs)]))
+                for j in range(min(burst, n - done))]
         for f in futs:
             f.result(timeout=300)
         done += len(futs)
@@ -97,8 +103,9 @@ def run() -> list[Row]:
     n = 24 if smoke else 96
     idx = index()
     qs = [(np.asarray(t), np.asarray(w)) for t, w in queries()]
-    cfg = RetrievalConfig("lsp0", k=K_DEFAULT, gamma=max(8, idx.n_superblocks // 8), gamma0=8, beta=0.33)
-    retr = jit_retrieve(idx, cfg, impl="ref")
+    gamma = max(8, idx.n_superblocks // 8)
+    scfg = StaticConfig("lsp0", gamma=gamma, gamma0=min(8, gamma), k_max=K_DEFAULT)
+    retr = jit_search(idx, scfg, impl="ref", defaults=DynamicParams.recommended(K_DEFAULT))
     scenarios: dict[str, dict] = {}
 
     # padded single-shape baseline (the pre-bucketing engine): one rung, no cache
@@ -127,6 +134,20 @@ def run() -> list[Row]:
     eng.shutdown()
     scenarios["bursty_bucketed"] = _summary(eng, n, wall)
 
+    # mixed per-request dynamic overrides: every request tunes (k, mu, eta, beta)
+    # itself; ONE bucket ladder serves the whole mix with zero recompiles
+    eng = _engine(retr, warmup=True)
+    grid = [DynamicParams(k=k_, mu=m_, eta=e_, beta=b_)
+            for k_ in (1, K_DEFAULT // 2 or 1, K_DEFAULT)
+            for m_ in (0.25, 0.5) for e_ in (0.5, 1.0) for b_ in (0.33, 1.0)]
+    traces_before = retr.n_traces()
+    wall = _single_stream(eng, qs, range(n), params=grid)
+    recompiles = retr.n_traces() - traces_before
+    eng.shutdown()
+    scenarios["dynamic_mixed"] = dict(
+        _summary(eng, n, wall), grid_points=len(grid), recompiles=recompiles
+    )
+
     # error injection: every 4th batch raises; the pipeline must keep serving
     # (all bucket shapes are already compiled in retr's jit cache, so warmup=False)
     eng = _engine(_FailEvery(retr, every=4))
@@ -135,7 +156,7 @@ def run() -> list[Row]:
     t0 = time.perf_counter()
     for i in range(n):
         try:
-            eng.submit(*qs[i % len(qs)]).result(timeout=300)
+            eng.search(SearchRequest(*qs[i % len(qs)])).result(timeout=300)
             ok += 1
             if fails:
                 served_after_failure = True
@@ -158,6 +179,8 @@ def run() -> list[Row]:
         "scenarios": scenarios,
         "single_p50_speedup_bucketed_vs_padded": padded["p50_ms"] / max(bucketed["p50_ms"], 1e-9),
         "zipf_cache_hit_rate": scenarios["zipf_repeat_cached"]["cache_hit_rate"],
+        "dynamic_mixed_recompiles": scenarios["dynamic_mixed"]["recompiles"],
+        "dynamic_mixed_grid_points": scenarios["dynamic_mixed"]["grid_points"],
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=2)

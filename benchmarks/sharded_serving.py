@@ -29,8 +29,9 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import CORPUS_CFG, K_DEFAULT, Row, index, queries
-from repro.core import RetrievalConfig, jit_retrieve
+from benchmarks.common import CORPUS_CFG, K_DEFAULT, Row, index, queries, query_batch
+from repro.api import SearchRequest, StaticConfig
+from repro.core import jit_search
 from repro.distributed.sharded import ShardedRetriever
 from repro.index.layout import fwdq_bytes, packed_bounds_bytes
 from repro.serve import RetrievalEngine
@@ -61,11 +62,31 @@ def _run_stream(eng: RetrievalEngine, qs, order, reference) -> tuple[float, int]
     t0 = time.perf_counter()
     for i in order:
         qi = i % len(qs)
-        ids, scores = eng.submit(*qs[qi]).result(timeout=600)
+        r = eng.search(SearchRequest(*qs[qi])).result(timeout=600)
         ref_ids, ref_scores = reference[qi]
-        if not (np.array_equal(ids, ref_ids) and np.array_equal(scores, ref_scores)):
+        if not (np.array_equal(r.doc_ids, ref_ids) and np.array_equal(r.scores, ref_scores)):
             mismatches += 1
     return time.perf_counter() - t0, mismatches
+
+
+def _load_balance(retr: ShardedRetriever) -> dict:
+    """Per-shard share of the global top-γ candidate list over the query pool —
+    the data behind the ROADMAP's interleaved-assignment question. Contiguous
+    superblock ranges can concentrate a topical query's whole candidate set on
+    one shard; skew_max_over_mean == P means one shard owns everything."""
+    res = retr(query_batch())
+    cand = np.asarray(res.shard_candidates).astype(np.float64)  # [Q, P]
+    totals = cand.sum(axis=1, keepdims=True)
+    shares = cand / np.maximum(totals, 1.0)  # [Q, P] per-query ownership fractions
+    mean_shares = shares.mean(axis=0)  # [P]
+    per_query_max = shares.max(axis=1)  # [Q]
+    p = cand.shape[1]
+    return {
+        "mean_share_per_shard": [round(float(v), 4) for v in mean_shares],
+        "skew_max_over_mean": float(mean_shares.max() * p),
+        "mean_per_query_max_share": float(per_query_max.mean()),
+        "ideal_share": 1.0 / p,
+    }
 
 
 def run() -> list[Row]:
@@ -74,17 +95,19 @@ def run() -> list[Row]:
     shard_counts = SHARD_COUNTS[: 3 if smoke else 4]
     idx = index()
     qs = [(np.asarray(t), np.asarray(w)) for t, w in queries()]
-    cfg = RetrievalConfig(
-        "lsp0", k=K_DEFAULT, gamma=max(8, idx.n_superblocks // 8), gamma0=8, beta=0.33
-    )
+    gamma = max(8, idx.n_superblocks // 8)
+    scfg = StaticConfig("lsp0", gamma=gamma, gamma0=min(8, gamma), k_max=K_DEFAULT)
     n_devices = len(jax.devices())
 
     # single-device reference answers through the same engine path (the audit oracle)
     ref_eng = RetrievalEngine(
-        jit_retrieve(idx, cfg, impl="ref"), CORPUS_CFG.vocab,
+        jit_search(idx, scfg, impl="ref"), CORPUS_CFG.vocab,
         max_batch=MAX_BATCH, nq_max=NQ_MAX, max_wait_ms=1.0, cache_size=0, warmup=True,
     )
-    reference = [ref_eng.submit(t, w).result(timeout=600) for t, w in qs]
+    reference = []
+    for t, w in qs:
+        r = ref_eng.search(SearchRequest(t, w)).result(timeout=600)
+        reference.append((r.doc_ids, r.scores))
     ref_eng.shutdown()
 
     rng = np.random.default_rng(7)
@@ -105,9 +128,9 @@ def run() -> list[Row]:
             mesh = make_host_mesh(model=p, data=1)
             transport = "shard_map"
         retr = (
-            jit_retrieve(idx, cfg, impl="ref")
+            jit_search(idx, scfg, impl="ref")
             if p == 1
-            else ShardedRetriever(idx, cfg, n_shards=p, mesh=mesh, impl="ref")
+            else ShardedRetriever(idx, scfg, n_shards=p, mesh=mesh, impl="ref")
         )
         shard_bytes = _shard_bytes(retr.shards) if p > 1 else _shard_bytes([idx])
         per_shard: dict[str, dict] = {}
@@ -134,6 +157,8 @@ def run() -> list[Row]:
             "transport": transport,
             "shard_index_bytes": shard_bytes,
             "arms": per_shard,
+            # per-shard ownership of the global top-γ (ROADMAP load-balance item)
+            "load_balance": _load_balance(retr) if p > 1 else None,
         }
 
     payload = {

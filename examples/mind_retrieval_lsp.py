@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import DynamicParams, StaticConfig, combine
 from repro.configs import get_arch
-from repro.core.config import RetrievalConfig
 from repro.core.lsp_dense import DenseIndexConfig, build_dense_index, retrieve_dense, retrieve_dense_exact
 from repro.models import recsys as R
 
@@ -41,7 +41,12 @@ def main() -> None:
     jax.block_until_ready(oid)
     t0 = time.perf_counter(); exact_fn(q)[0].block_until_ready(); t_exact = time.perf_counter() - t0
 
-    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=max(8, idx.n_superblocks // 8), gamma0=4)
+    # the dense path takes the combined (static, dynamic) view; the same split
+    # configures it as the sparse facade (repro.api) uses
+    cfg = combine(
+        StaticConfig(variant="lsp0", gamma=max(8, idx.n_superblocks // 8), gamma0=4, k_max=10),
+        DynamicParams(k=10),
+    )
     lsp_fn = jax.jit(lambda qq: retrieve_dense(idx, qq, cfg))
     ids, _ = lsp_fn(q)
     jax.block_until_ready(ids)

@@ -1,14 +1,16 @@
-"""Quickstart: build an LSP index over a synthetic sparse corpus and retrieve.
+"""Quickstart: build an LSP index over a synthetic sparse corpus and search it
+through the unified ``repro.api`` facade — including a per-request parameter
+override that costs zero recompiles (DESIGN.md §9).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import RetrievalConfig, jit_retrieve, make_query_batch, retrieve_exact
+from repro.api import DynamicParams, Retriever, SearchRequest, StaticConfig
 from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
 from repro.eval.metrics import recall_vs_oracle
-from repro.index.builder import IndexBuildConfig, build_index
+from repro.index.builder import IndexBuildConfig
 
 
 def main() -> None:
@@ -17,28 +19,50 @@ def main() -> None:
     corpus = make_corpus(ccfg)
     print(f"corpus: {ccfg.n_docs} docs, {len(corpus.tids)} postings, vocab {ccfg.vocab}")
 
-    # 2. offline index build (paper-recommended: b=8, c=16, 4-bit bounds)
-    idx = build_index(
-        corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab,
-        IndexBuildConfig(b=8, c=16, bound_bits=4),
+    # 2. one facade call: offline index build (paper-recommended: b=8, c=16,
+    #    4-bit bounds) + compiled LSP/0 backend. The StaticConfig is the
+    #    shape-bearing half (γ here scales the paper's fixed γ=250 down to this
+    #    toy corpus); the zero-shot DynamicParams default rides along.
+    retr = Retriever.build(
+        corpus,
+        build_cfg=IndexBuildConfig(b=8, c=16, bound_bits=4),
+    )
+    idx = retr.index
+    gamma = max(16, idx.n_superblocks // 8)
+    retr = Retriever.from_index(
+        idx, StaticConfig(variant="lsp0", gamma=gamma, gamma0=min(32, gamma), k_max=10)
     )
     print(f"index: {idx.n_blocks} blocks, {idx.n_superblocks} superblocks")
+    print(f"retriever: {retr}")
 
-    # 3. retrieve with LSP/0 (guaranteed top-γ superblocks, zero-shot config)
+    # 3. typed search: SearchRequest in, SearchResponse (ids, scores, θ, visit
+    #    counters, provenance) out
     queries = make_queries(ccfg, corpus, 16)
-    qb = make_query_batch(queries, corpus.vocab)
-    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=max(16, idx.n_superblocks // 8), beta=0.33)
-    retriever = jit_retrieve(idx, cfg)
-    res = retriever(qb)
+    resps = retr.search_batch([SearchRequest(t, w) for t, w in queries])
 
-    # 4. compare against the rank-safe oracle
-    oracle_ids, _ = retrieve_exact(idx, qb, k=10)
-    rec = recall_vs_oracle(np.asarray(res.doc_ids), np.asarray(oracle_ids))
-    visited = float(np.asarray(res.n_superblocks_visited).mean())
+    # 4. compare against the rank-safe oracle — itself just another backend
+    oracle = Retriever.from_index(idx, retr.static_cfg, backend="exact")
+    oracle_resps = oracle.search_batch([SearchRequest(t, w) for t, w in queries])
+    ids = np.stack([r.doc_ids for r in resps])
+    oracle_ids = np.stack([r.doc_ids for r in oracle_resps])
+    rec = recall_vs_oracle(ids, oracle_ids)
+    visited = float(np.mean([r.n_superblocks_visited for r in resps]))
     print(f"recall@10 vs exact: {rec:.3f}")
     print(f"superblocks visited: {visited:.0f} / {idx.n_superblocks} "
           f"({100 * visited / idx.n_superblocks:.1f}% — the rest were pruned)")
-    print("top-5 docs for query 0:", np.asarray(res.doc_ids)[0, :5].tolist())
+    print("top-5 docs for query 0:", resps[0].doc_ids[:5].tolist())
+
+    # 5. per-request tuning WITHOUT recompiling: override (k, μ, η, β) per call.
+    #    (The first single-query search compiles the (1, nq) shape — shapes are
+    #    static; the dynamic point is not.)
+    t, w = queries[0]
+    retr.search(SearchRequest(t, w))
+    before = retr.n_traces()
+    deep = retr.search(SearchRequest(t, w, params=DynamicParams(k=5, beta=1.0)))
+    sweep = [retr.search(SearchRequest(t, w, params=DynamicParams(k=kk, mu=m)))
+             for kk in (1, 3, 10) for m in (0.25, 0.5, 1.0)]
+    print(f"k=5 β=1.0 override: {deep.doc_ids.tolist()} "
+          f"(recompiles across a {1 + len(sweep)}-point sweep: {retr.n_traces() - before})")
 
 
 if __name__ == "__main__":

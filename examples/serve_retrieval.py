@@ -1,11 +1,10 @@
-"""Serving example: the bucketed retrieval engine (shape-bucket ladder + query-result
-cache + resilient batching pipeline, DESIGN.md §6) with latency percentiles, plus the
-index lifecycle (DESIGN.md §7): the built index is persisted to disk, mmap-loaded
-back (orders of magnitude faster than rebuilding), and finally hot-swapped into the
-running engine with traffic in flight — the epoch-keyed cache guarantees no result
-from the pre-swap index is ever served afterwards.
+"""Serving example: the unified ``repro.api`` surface end to end — build, persist,
+mmap-load, serve through the bucketed engine (shape-bucket ladder + query-result
+cache + resilient batching pipeline, DESIGN.md §6), hot-swap with traffic in
+flight (DESIGN.md §7), and per-request ``DynamicParams`` overrides served with
+zero recompiles through one bucket ladder (DESIGN.md §9).
 
-``--shards N`` serves through the sharded retriever (DESIGN.md §8): the index is
+``--shards N`` serves through the sharded backend (DESIGN.md §8): the index is
 persisted as an atomically-committed N-shard set, every shard mmap-loads, results
 are bit-identical to the single-device engine, and the hot-swap flips ALL shards
 under one epoch. With enough devices the shards run under shard_map; otherwise the
@@ -13,9 +12,11 @@ host-loop transport demonstrates identical semantics on one device.
 
 The stream replays each query twice, so the second half of the run is served from
 the result cache — the engine summary shows the hit rate and which shape buckets
-actually ran.
+actually ran. A third wave re-runs the same queries at a different dynamic point:
+all cache misses (the key carries the params bytes), zero recompiles.
 
     PYTHONPATH=src python examples/serve_retrieval.py
+    PYTHONPATH=src python examples/serve_retrieval.py --smoke   # CI gate: small + fast
     PYTHONPATH=src python examples/serve_retrieval.py --shards 2
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
         PYTHONPATH=src python examples/serve_retrieval.py --shards 4
@@ -28,22 +29,25 @@ import time
 
 import jax
 
-from repro.core import RetrievalConfig, jit_retrieve
+from repro.api import DynamicParams, Retriever, SearchRequest, StaticConfig
 from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
 from repro.index.builder import IndexBuildConfig, build_index
-from repro.index.store import load_index_auto, save_index, save_sharded_index
-from repro.serve import RetrievalEngine
+from repro.index.store import save_index, save_sharded_index
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--shards", type=int, default=0,
-                    help="serve over N index shards (0 = single-device retriever)")
+                    help="serve over N index shards (0 = single-device backend)")
     ap.add_argument("--n-requests", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: small corpus, few requests")
     args = ap.parse_args()
     n_shards = args.shards
+    n_docs = 4096 if args.smoke else 16384
+    n_requests = 16 if args.smoke else args.n_requests
 
-    ccfg = CorpusConfig(n_docs=16384, vocab=2048, n_topics=32, seed=0)
+    ccfg = CorpusConfig(n_docs=n_docs, vocab=2048, n_topics=32, seed=0)
     corpus = make_corpus(ccfg)
     bcfg = IndexBuildConfig(b=8, c=16, build_avg=False)
     t0 = time.perf_counter()
@@ -56,15 +60,9 @@ def main() -> None:
         fingerprint = save_sharded_index(index_dir, built, n_shards, bcfg)
     else:
         fingerprint = save_index(index_dir, built, bcfg)
-    t0 = time.perf_counter()
-    idx = load_index_auto(index_dir, mmap=True, device=True)  # LSPIndex or ShardedIndex
-    load_s = time.perf_counter() - t0
-    print(f"index: build {build_s:.1f}s, mmap-load {load_s:.3f}s "
-          f"({build_s / max(load_s, 1e-9):.0f}x) | fingerprint {fingerprint[:12]}… "
-          f"| {n_shards or 'no'} shard(s)")
 
-    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=max(16, idx.n_superblocks // 8), beta=0.33)
-
+    gamma = max(16, built.n_superblocks // 8)
+    scfg = StaticConfig(variant="lsp0", gamma=gamma, gamma0=min(16, gamma), k_max=10)
     mesh = None
     if n_shards and len(jax.devices()) >= n_shards:
         from repro.launch.mesh import make_host_mesh
@@ -74,34 +72,44 @@ def main() -> None:
     elif n_shards:
         print(f"{len(jax.devices())} device(s): host-loop shard transport")
 
-    def make_retriever(ix):
-        if n_shards:
-            from repro.distributed.sharded import ShardedRetriever
+    t0 = time.perf_counter()
+    retr = Retriever.load(index_dir, scfg, mesh=mesh)  # single or sharded: auto
+    load_s = time.perf_counter() - t0
+    print(f"index: build {build_s:.1f}s, mmap-load {load_s:.3f}s "
+          f"({build_s / max(load_s, 1e-9):.0f}x) | fingerprint {fingerprint[:12]}… "
+          f"| backend {retr.backend_name} | defaults {retr.defaults}")
 
-            return ShardedRetriever(ix, cfg, n_shards=n_shards, mesh=mesh)
-        return jit_retrieve(ix, cfg)  # RetrievalResult plugs into the engine
-
-    eng = RetrievalEngine(make_retriever(idx), corpus.vocab, max_batch=8, nq_max=64,
-                          max_wait_ms=2.0, cache_size=256, warmup=True,
-                          retriever_factory=make_retriever)
-    base = make_queries(ccfg, corpus, max(args.n_requests // 2, 1))
+    # ---- the one facade call that starts serving ----------------------------------
+    eng = retr.serve(max_batch=8, nq_max=64, max_wait_ms=2.0, cache_size=256, warmup=True)
+    base = make_queries(ccfg, corpus, max(n_requests // 2, 1))
     # two waves of the same queries: the replay wave is served from the result cache
     # (the probe happens at submit time, so the first wave must have resolved)
     results = []
     for wave in (base, base):
-        futures = [eng.submit(t, w) for t, w in wave]
+        futures = [eng.search(SearchRequest(t, w)) for t, w in wave]
         results.extend(f.result(timeout=300) for f in futures)
+
+    # ---- per-request dynamic overrides: one ladder, zero recompiles ----------------
+    traces_before = retr.n_traces()
+    deep = DynamicParams(k=5, mu=0.3, eta=0.5, beta=1.0)
+    over = [eng.search(SearchRequest(t, w, params=deep)) for t, w in base]
+    over_r = [f.result(timeout=300) for f in over]
+    assert all(not r.cache_hit and r.k == 5 for r in over_r)  # distinct params: all misses
+    print(f"dynamic override wave: {len(over_r)} requests at {deep} | "
+          f"recompiles {retr.n_traces() - traces_before} | "
+          f"bucket of last {over_r[-1].bucket}, epoch {over_r[-1].epoch}")
 
     # ---- lifecycle: zero-downtime hot-swap with traffic in flight ------------------
     # (a sharded dir reloads every shard and flips them under the one epoch bump)
-    inflight = [eng.submit(t, w) for t, w in base]
+    inflight = [eng.search(SearchRequest(t, w)) for t, w in base]
     epoch = eng.swap_index(index_dir)  # mmap-load + warm off-thread, atomic flip
-    post = [eng.submit(t, w) for t, w in base]  # epoch-keyed: all cache misses
+    post = [eng.search(SearchRequest(t, w)) for t, w in base]  # epoch-keyed: all misses
     swap_results = [f.result(timeout=300) for f in inflight + post]
     stats = eng.stats.summary()
     print(f"hot-swap: epoch {epoch} in {stats['last_swap_ms']:.0f} ms, "
           f"{len(swap_results)} in-flight/post-swap requests, "
-          f"failures={stats['failures']}")
+          f"failures={stats['failures']}, post-swap epochs "
+          f"{sorted({r.epoch for r in swap_results[len(base):]})}")
     eng.shutdown()
 
     stats = eng.stats.summary()
@@ -110,7 +118,7 @@ def main() -> None:
     print(f"shape buckets used: {stats['bucket_batches']}")
     print(f"cache: hit_rate={stats['cache_hit_rate']:.2f} "
           f"({stats['cache_hits']} hits / {stats['cache_misses']} misses)")
-    print("sample result ids:", results[0][0][:5].tolist())
+    print("sample result ids:", results[0].doc_ids[:5].tolist())
 
 
 if __name__ == "__main__":

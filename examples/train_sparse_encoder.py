@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Retriever, SearchRequest, StaticConfig
 from repro.configs.base import LMCfg
-from repro.core import RetrievalConfig, jit_retrieve, make_query_batch, retrieve_exact
 from repro.data.pipeline import CounterPipeline, PipelineConfig, splade_synthetic_batch
 from repro.eval.metrics import recall_vs_oracle
 from repro.index.builder import IndexBuildConfig, build_index
@@ -78,12 +78,14 @@ def main() -> None:
 
     q_order = np.argsort(-qs, axis=1)[:, :32]
     queries = [(q_order[i].astype(np.int32), np.take_along_axis(qs[i][None], q_order[i][None], 1)[0]) for i in range(len(qs))]
-    qb = make_query_batch(queries, cfg.vocab)
-    cfg_r = RetrievalConfig(variant="lsp0", k=10, gamma=max(8, idx.n_superblocks // 4), gamma0=4)
-    res = jit_retrieve(idx, cfg_r)(qb)
-    oracle_ids, _ = retrieve_exact(idx, qb, k=10)
-    print(f"LSP recall@10 on learned index: "
-          f"{recall_vs_oracle(np.asarray(res.doc_ids), np.asarray(oracle_ids)):.3f}")
+    scfg = StaticConfig(variant="lsp0", gamma=max(8, idx.n_superblocks // 4), gamma0=4, k_max=10)
+    retr = Retriever.from_index(idx, scfg)
+    oracle = Retriever.from_index(idx, scfg, backend="exact")
+    res = retr.search_batch([SearchRequest(t, w) for t, w in queries])
+    ora = oracle.search_batch([SearchRequest(t, w) for t, w in queries])
+    ids = np.stack([r.doc_ids for r in res])
+    oracle_ids = np.stack([r.doc_ids for r in ora])
+    print(f"LSP recall@10 on learned index: {recall_vs_oracle(ids, oracle_ids):.3f}")
 
 
 if __name__ == "__main__":

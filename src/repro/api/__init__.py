@@ -1,0 +1,56 @@
+"""repro.api — the unified search API (DESIGN.md §9).
+
+One facade (``Retriever``), one typed envelope (``SearchRequest`` /
+``SearchResponse``), one config boundary (``StaticConfig`` compiles,
+``DynamicParams`` is per-request — zero recompiles across a sweep), and a
+backend registry (local / sharded / shard_map / exact) behind it all.
+
+    from repro.api import Retriever, SearchRequest, DynamicParams
+
+    retr = Retriever.build(corpus)
+    resp = retr.search(SearchRequest(tids, weights))
+    resp = retr.search(SearchRequest(tids, weights, params=DynamicParams(k=5, beta=0.5)))
+    eng  = retr.serve(max_batch=8)          # async engine; eng.search(...) -> Future
+
+``__all__`` is the public surface, pinned by tests/api_manifest.txt (CI fails
+on drift).
+"""
+
+from repro.api.backends import get_backend, list_backends, register_backend
+from repro.api.retriever import Retriever
+from repro.api.types import SearchRequest, SearchResponse
+from repro.core.config import (
+    ConfigError,
+    DynamicParams,
+    RetrievalConfig,
+    StaticConfig,
+    combine,
+    recommended,
+    recommended_static,
+)
+__all__ = [
+    "ConfigError",
+    "DynamicParams",
+    "RetrievalConfig",
+    "RetrievalEngine",
+    "Retriever",
+    "SearchRequest",
+    "SearchResponse",
+    "StaticConfig",
+    "combine",
+    "get_backend",
+    "list_backends",
+    "recommended",
+    "recommended_static",
+    "register_backend",
+]
+
+
+def __getattr__(name):
+    # lazy: repro.serve.engine itself imports repro.api.types (the envelope),
+    # so an eager import here would be circular
+    if name == "RetrievalEngine":
+        from repro.serve.engine import RetrievalEngine
+
+        return RetrievalEngine
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

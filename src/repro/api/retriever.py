@@ -1,0 +1,268 @@
+"""The ``Retriever`` facade: one construction ritual for every serving shape
+(DESIGN.md §9).
+
+    retr = Retriever.build(corpus)                      # index + local backend
+    retr = Retriever.load("/path/to/index", shards=4)   # persisted, sharded
+    resp = retr.search(SearchRequest(tids, ws))          # one query, typed
+    resp = retr.search(SearchRequest(tids, ws, params=DynamicParams(k=100, beta=0.5)))
+    eng  = retr.serve(max_batch=8, cache_size=1024)      # async bucketed engine
+
+The facade owns the static/dynamic boundary: ``StaticConfig`` picks the
+compiled program (backend registry: local / sharded / shard_map / exact), the
+paper's ``DynamicParams.recommended(k)`` zero-shot preset is the default
+dynamic point, and any request may override it per call — zero recompiles.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.api.backends import get_backend
+from repro.api.types import SearchRequest, SearchResponse
+from repro.core.config import (
+    DynamicParams,
+    StaticConfig,
+    recommended_static,
+)
+from repro.core.query import make_query_batch
+
+
+def _corpus_arrays(corpus):
+    """Accept a data.synthetic.Corpus (or anything with the same attrs) or a
+    bare (doc_ptr, tids, ws, vocab) tuple."""
+    if hasattr(corpus, "doc_ptr"):
+        return corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab
+    doc_ptr, tids, ws, vocab = corpus[:4]
+    return doc_ptr, tids, ws, vocab
+
+
+def _nq_bucket(n: int) -> int:
+    """Geometric nq padding so repeated searches of similar-length queries
+    reuse one compiled shape (mirrors the serving ladder's nq rungs)."""
+    nq = 16
+    while nq < n:
+        nq *= 2
+    return nq
+
+
+class Retriever:
+    """Unified search facade over an LSP index and a registered backend.
+
+    Construction: ``build`` (corpus -> index), ``load`` (persisted dir, single
+    or sharded), or ``from_index`` (an ``LSPIndex`` / ``store.ShardedIndex`` /
+    shard list you already have). The backend resolves automatically — 'local'
+    for one device, 'sharded' when shards are requested or loaded, 'shard_map'
+    when a mesh is given — or pass ``backend=`` explicitly (see
+    ``api.backends.list_backends()``).
+    """
+
+    def __init__(self, backend_callable, *, index, static_cfg: StaticConfig,
+                 defaults: DynamicParams, backend_name: str, vocab: int,
+                 factory=None):
+        self._backend = backend_callable
+        self._factory = factory
+        self.index = index
+        self.static_cfg = static_cfg
+        self.defaults = defaults
+        self.backend_name = backend_name
+        self.vocab = vocab
+
+    # ---- construction ----------------------------------------------------------
+
+    @classmethod
+    def from_index(
+        cls,
+        index,
+        static_cfg: Optional[StaticConfig] = None,
+        *,
+        params: Optional[DynamicParams] = None,
+        backend: Optional[str] = None,
+        shards: int = 0,
+        mesh=None,
+        impl: str = "auto",
+        ns_true: Optional[int] = None,
+        **backend_kw,
+    ) -> "Retriever":
+        from repro.index.layout import LSPIndex
+
+        stored_shards = len(index.shards) if hasattr(index, "shards") else 0
+        # LSPIndex and store.ShardedIndex are NamedTuples — a "shard list" is
+        # any sequence that is neither
+        is_shard_list = isinstance(index, (list, tuple)) and not isinstance(
+            index, LSPIndex
+        ) and not stored_shards
+        is_sharded = bool(stored_shards or shards or is_shard_list)
+        if backend is None:
+            backend = "shard_map" if (mesh is not None and is_sharded) else (
+                "sharded" if is_sharded else "local"
+            )
+        if static_cfg is None:
+            k = params.k if params is not None else DynamicParams.k
+            # a bare shard list has no global count attribute; the per-shard sum
+            # (>= the true NS because of tail padding) is a safe γ clamp
+            ns = (
+                ns_true
+                or (sum(s.n_superblocks for s in index) if is_shard_list else index.n_superblocks)
+            )
+            static_cfg = recommended_static(k, n_superblocks=ns)
+        defaults = (params or DynamicParams.recommended(static_cfg.k_max)).validate_for(static_cfg)
+        make = get_backend(backend)
+        kw = dict(
+            shards=shards or stored_shards, mesh=mesh, impl=impl,
+            defaults=defaults, ns_true=ns_true, **backend_kw,
+        )
+
+        def factory(ix):
+            """Rebuild the backend over a fresh index — the hot-swap hook the
+            serving engine's ``swap_index`` uses."""
+            return make(ix, static_cfg, **kw)
+
+        meta = index.shards[0] if stored_shards else (
+            index[0] if is_shard_list else index
+        )
+        return cls(
+            make(index, static_cfg, **kw),
+            index=index,
+            static_cfg=static_cfg,
+            defaults=defaults,
+            backend_name=backend,
+            vocab=meta.vocab,
+            factory=factory,
+        )
+
+    @classmethod
+    def build(
+        cls,
+        corpus,
+        static_cfg: Optional[StaticConfig] = None,
+        *,
+        build_cfg=None,
+        params: Optional[DynamicParams] = None,
+        backend: Optional[str] = None,
+        shards: int = 0,
+        mesh=None,
+        impl: str = "auto",
+        **backend_kw,
+    ) -> "Retriever":
+        """Build an index over ``corpus`` (a ``data.synthetic.Corpus`` or a
+        (doc_ptr, tids, ws, vocab) tuple) and wrap it in a backend."""
+        from repro.index.builder import IndexBuildConfig, build_index
+
+        doc_ptr, tids, ws, vocab = _corpus_arrays(corpus)
+        index = build_index(doc_ptr, tids, ws, vocab, build_cfg or IndexBuildConfig())
+        return cls.from_index(
+            index, static_cfg, params=params, backend=backend, shards=shards,
+            mesh=mesh, impl=impl, **backend_kw,
+        )
+
+    @classmethod
+    def load(
+        cls,
+        directory: str,
+        static_cfg: Optional[StaticConfig] = None,
+        *,
+        params: Optional[DynamicParams] = None,
+        backend: Optional[str] = None,
+        shards: Optional[int] = None,
+        mesh=None,
+        impl: str = "auto",
+        mmap: bool = True,
+        **backend_kw,
+    ) -> "Retriever":
+        """Open a persisted index (``repro.index.store`` format, single or
+        sharded — auto-detected) mmap-backed and wrap it in a backend. A
+        sharded directory yields the sharded backend at its stored shard
+        count; ``shards=`` re-shards a *single*-index directory in memory."""
+        from repro.index.store import load_index_auto
+
+        index = load_index_auto(directory, mmap=mmap, device=True)
+        stored = len(index.shards) if hasattr(index, "shards") else 0
+        if stored and shards and shards != stored:
+            raise ValueError(
+                f"{directory} stores a {stored}-shard index; cannot serve it as "
+                f"shards={shards} — re-save with save_sharded_index or drop shards="
+            )
+        return cls.from_index(
+            index, static_cfg, params=params, backend=backend,
+            shards=0 if stored else (shards or 0), mesh=mesh, impl=impl, **backend_kw,
+        )
+
+    # ---- search ----------------------------------------------------------------
+
+    def search(self, request: Union[SearchRequest, tuple]) -> SearchResponse:
+        """Synchronous single-query search. ``request.params`` overrides the
+        zero-shot defaults without recompiling anything."""
+        if not isinstance(request, SearchRequest):
+            request = SearchRequest(*request)
+        return self.search_batch([request])[0]
+
+    def search_batch(self, requests: Sequence[SearchRequest]) -> List[SearchResponse]:
+        """One batched call through the backend; per-request ``DynamicParams``
+        mix freely within the batch (they ride as per-row traced arrays)."""
+        requests = [
+            r if isinstance(r, SearchRequest) else SearchRequest(*r) for r in requests
+        ]
+        row_params = [(r.params or self.defaults).validate_for(self.static_cfg) for r in requests]
+        nq = _nq_bucket(max((len(r.tids) for r in requests), default=1))
+        qb = make_query_batch(
+            [(r.tids, r.weights) for r in requests], self.vocab, nq_max=nq
+        )
+        out = self._backend(qb, row_params)
+        ids = np.asarray(out.doc_ids)
+        scores = np.asarray(out.scores)
+        theta = np.asarray(out.theta) if out.theta is not None else None
+        nsb = np.asarray(out.n_superblocks_visited)
+        nblk = np.asarray(out.n_blocks_scored)
+        shard_cand = getattr(out, "shard_candidates", None)
+        shard_cand = None if shard_cand is None else np.asarray(shard_cand)
+        bucket = (len(requests), nq)
+        return [
+            SearchResponse(
+                doc_ids=ids[i, : row_params[i].k].copy(),
+                scores=scores[i, : row_params[i].k].copy(),
+                theta=None if theta is None else float(theta[i]),
+                n_superblocks_visited=int(nsb[i]),
+                n_blocks_scored=int(nblk[i]),
+                params=row_params[i],
+                epoch=0,
+                cache_hit=False,
+                bucket=bucket,
+                shard_candidates=None if shard_cand is None else shard_cand[i].copy(),
+            )
+            for i in range(len(requests))
+        ]
+
+    # ---- serving ----------------------------------------------------------------
+
+    def serve(self, **engine_knobs):
+        """Wrap this retriever in the async bucketed serving engine (DESIGN.md
+        §6): batching, shape buckets, result cache (keyed on the dynamic-params
+        bytes), failure isolation and ``swap_index`` hot-swaps all compose."""
+        from repro.serve.engine import RetrievalEngine
+
+        return RetrievalEngine(
+            self._backend,
+            self.vocab,
+            default_params=self.defaults,
+            retriever_factory=self._factory,
+            **engine_knobs,
+        )
+
+    # ---- introspection -----------------------------------------------------------
+
+    def n_traces(self) -> int:
+        """Compiled-trace count of the backend (one per (Q, nq) shape; a
+        dynamic sweep must not grow it — see the zero-recompilation tests)."""
+        fn = getattr(self._backend, "n_traces", None)
+        return fn() if fn else 0
+
+    def warmup(self, shapes) -> None:
+        self._backend.warmup(shapes)
+
+    def __repr__(self) -> str:
+        return (
+            f"Retriever(backend={self.backend_name!r}, static={self.static_cfg}, "
+            f"defaults={self.defaults})"
+        )

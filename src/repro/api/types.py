@@ -1,0 +1,63 @@
+"""Typed request/response envelope for the unified search API (DESIGN.md §9).
+
+``SearchRequest``/``SearchResponse`` replace the raw-array/tuple contracts end
+to end: the facade, the serving engine, the result cache (whose key includes
+the dynamic-params bytes) and the sharded merges all speak these types. The
+response carries provenance — which index epoch served it, whether it came
+from the cache, and which compiled shape bucket ran — so a caller can audit
+exactly how its answer was produced.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.config import DynamicParams
+
+
+@dataclass(frozen=True)
+class SearchRequest:
+    """One sparse query: term ids + weights, optionally with a per-request
+    ``DynamicParams`` override (k ≤ the program's k_max, μ, η, β). ``params``
+    is None for "serve at the engine's defaults"."""
+
+    tids: np.ndarray  # int [n_terms]
+    weights: np.ndarray  # float [n_terms]
+    params: Optional[DynamicParams] = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "tids", np.asarray(self.tids, np.int32))
+        object.__setattr__(self, "weights", np.asarray(self.weights, np.float32))
+        if self.tids.shape != self.weights.shape or self.tids.ndim != 1:
+            raise ValueError(
+                f"SearchRequest wants 1-D tids/weights of equal length, got "
+                f"{self.tids.shape} and {self.weights.shape}"
+            )
+
+
+@dataclass(frozen=True)
+class SearchResponse:
+    """Result of one request: top-k documents plus traversal + serving provenance.
+
+    ``doc_ids``/``scores`` are [k] (the request's dynamic k), -1 / NEG where
+    fewer than k documents survived. ``theta`` and the visit counters are None
+    when the serving retriever does not report them (e.g. a bare (ids, scores)
+    test retriever)."""
+
+    doc_ids: np.ndarray  # int32 [k], -1 where no result
+    scores: np.ndarray  # float32 [k]
+    theta: Optional[float] = None  # round-0 pruning threshold
+    n_superblocks_visited: Optional[int] = None
+    n_blocks_scored: Optional[int] = None
+    params: Optional[DynamicParams] = None  # the resolved dynamic point served
+    epoch: int = 0  # index epoch that produced this result
+    cache_hit: bool = False  # served from the result cache?
+    bucket: Optional[Tuple[int, int]] = None  # (batch, nq) compiled shape that ran
+    shard_candidates: Optional[np.ndarray] = field(default=None, repr=False)  # int32 [P] top-γ share per shard
+
+    @property
+    def k(self) -> int:
+        return int(self.doc_ids.shape[0])

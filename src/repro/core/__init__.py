@@ -1,6 +1,22 @@
 """The paper's primary contribution: LSP superblock-pruned sparse retrieval."""
 
-from repro.core.config import RetrievalConfig, recommended
-from repro.core.lsp import RetrievalResult, jit_retrieve, retrieve
+from repro.core.config import (
+    ConfigError,
+    DynamicArgs,
+    DynamicParams,
+    RetrievalConfig,
+    StaticConfig,
+    combine,
+    dynamic_args,
+    recommended,
+    recommended_static,
+)
+from repro.core.lsp import (
+    RetrievalResult,
+    jit_retrieve,
+    jit_search,
+    retrieve,
+    search_retrieve,
+)
 from repro.core.exact import retrieve_exact
 from repro.core.query import QueryBatch, canonical_query, make_query_batch, query_key

@@ -4,6 +4,14 @@ These functions are both (a) the oracle the Pallas kernels are tested against an
 (b) the default execution path on non-TPU backends. The packed layout is the
 lane-strided segment format of repro.index.pack (value v of segment s lives at word
 s*G + v%G, bit-lane v//G).
+
+Static/dynamic contract (DESIGN.md §9): nothing here is shape-dependent on the
+dynamic parameters. The query-pruning fraction β reaches these functions as a
+*mask in the weights*: ``prune_terms`` rewrites dropped terms to the sentinel
+(tid == vocab, weight 0), the clamp keeps the row gather in-bounds, and the zero
+weight kills the contribution — identically for a host β baked at trace time and
+a traced per-row β. That sentinel/zero-weight convention is the entire interface
+the dynamic layer needs, which is why per-request β costs no recompile.
 """
 
 from __future__ import annotations

@@ -1,12 +1,186 @@
-"""Online retrieval configuration (the paper's query-time parameters)."""
+"""Retrieval configuration: the static/dynamic split (DESIGN.md §9).
+
+The paper's query-time parameters divide into two tiers with very different
+compilation costs on TPU:
+
+* **StaticConfig** — anything *shape-bearing*: the variant (decides which bound
+  operands exist and which pruning rule compiles), γ/γ₀ and the superblock /
+  block budgets (they size the ``top_k`` widths and gather shapes of every
+  phase), the document layout and kernel toggle, and ``k_max`` (the widest
+  result a compiled program can produce). Changing any of these requires a new
+  XLA program.
+
+* **DynamicParams** — the paper's per-request tuning point (k ≤ k_max, μ, η,
+  β): threaded through the traversal as traced scalars/masks, so ONE compiled
+  program serves any dynamic point bit-identically to a program re-jitted with
+  those values baked in. This is what lets a zero-shot sweep or a mixed serving
+  workload run with zero recompiles (the per-query flexibility BMP-style
+  systems expose as runtime parameters).
+
+``RetrievalConfig`` remains as the legacy combined view (k == k_max); it
+``split()``s into the two tiers, and ``combine()`` reassembles them. All three
+dataclasses validate at construction — a bad config raises ``ConfigError``
+(a ``ValueError``) with an actionable message instead of surfacing as a shape
+error deep inside the trace.
+"""
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import NamedTuple, Optional, Union
+
+import numpy as np
+
+VARIANTS = ("lsp0", "lsp1", "lsp2", "sp", "bmp", "exact")
+DOC_LAYOUTS = ("fwd", "flat")
+
+
+class ConfigError(ValueError):
+    """A retrieval config field is out of its domain (raised at construction)."""
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ConfigError(msg)
+
+
+@dataclass(frozen=True)
+class DynamicParams:
+    """Per-request query-time parameters — traced, never shape-bearing.
+
+    One compiled program (see ``StaticConfig``) serves any point of this space
+    bit-identically to a program with the values baked in at trace time.
+    """
+
+    k: int = 10  # results returned; must be <= the program's StaticConfig.k_max
+    mu: float = 0.5  # threshold overestimation for max bounds (LSP/1, LSP/2, SP)
+    eta: float = 1.0  # block-level overestimation / SP avg-bound factor
+    beta: float = 0.33  # query pruning: keep top β fraction of query terms (bounds only)
+
+    def __post_init__(self) -> None:
+        _require(
+            int(self.k) == self.k and self.k >= 1,
+            f"k must be a positive integer, got {self.k!r} — it is the number of results returned",
+        )
+        _require(
+            0.0 < self.beta <= 1.0,
+            f"beta (query-pruning fraction) must be in (0, 1], got {self.beta!r}; "
+            "beta=1.0 disables query pruning",
+        )
+        _require(
+            self.mu > 0.0,
+            f"mu (max-bound overestimation divisor) must be > 0, got {self.mu!r}",
+        )
+        _require(
+            self.eta > 0.0,
+            f"eta (block-bound overestimation divisor) must be > 0, got {self.eta!r}",
+        )
+
+    def key_bytes(self) -> bytes:
+        """Canonical byte image for cache keys: distinct params never collide
+        with each other inside one (epoch, query) namespace."""
+        return (
+            np.int32(self.k).tobytes()
+            + np.asarray([self.mu, self.eta, self.beta], np.float32).tobytes()
+        )
+
+    def validate_for(self, static: "StaticConfig") -> "DynamicParams":
+        """Check this point is servable by a program compiled for ``static``."""
+        _require(
+            self.k <= static.k_max,
+            f"k={self.k} exceeds the compiled program's k_max={static.k_max}; "
+            "raise StaticConfig.k_max (a recompile) or lower k",
+        )
+        return self
+
+    @classmethod
+    def recommended(cls, k: int) -> "DynamicParams":
+        """The paper's zero-shot presets (§Conclusion), dynamic half: β grows
+        with k (0.33 for small k, 0.5 at k=1000); μ/η stay at their defaults."""
+        return cls(k=k, beta=0.33 if k <= 100 else 0.5)
+
+
+class DynamicArgs(NamedTuple):
+    """``DynamicParams`` in traced form: per-row [Q] device arrays, the shape
+    the jitted programs thread through the traversal. Mixed batches (one row
+    per request, each with its own params) are first-class."""
+
+    k: "np.ndarray"  # int32 [Q]
+    mu: "np.ndarray"  # float32 [Q]
+    eta: "np.ndarray"  # float32 [Q]
+    beta: "np.ndarray"  # float32 [Q]
+
+
+def dynamic_args(dyn: Union[DynamicParams, DynamicArgs, None], q: int, k_max: int = 0) -> DynamicArgs:
+    """Broadcast host params (or a list of per-row params) to [Q] arrays.
+
+    ``None`` means "the static point": k = k_max with default μ/η/β.
+    """
+    import jax.numpy as jnp
+
+    if isinstance(dyn, DynamicArgs):
+        return dyn
+    if dyn is None:
+        dyn = DynamicParams(k=k_max or DynamicParams.k)
+    if isinstance(dyn, DynamicParams):
+        dyn = [dyn] * q
+    if len(dyn) != q:
+        raise ValueError(f"per-row params: got {len(dyn)} for a batch of {q} rows")
+    ks = np.asarray([d.k for d in dyn], np.int32)
+    mus = np.asarray([d.mu for d in dyn], np.float32)
+    etas = np.asarray([d.eta for d in dyn], np.float32)
+    betas = np.asarray([d.beta for d in dyn], np.float32)
+    return DynamicArgs(jnp.asarray(ks), jnp.asarray(mus), jnp.asarray(etas), jnp.asarray(betas))
+
+
+@dataclass(frozen=True)
+class StaticConfig:
+    """Shape-bearing knobs: each value here sizes an array or selects a code
+    path in the compiled program, so changing one means re-jitting."""
+
+    variant: str = "lsp0"  # lsp0 | lsp1 | lsp2 | sp | bmp | exact
+    gamma: int = 250  # guaranteed top-γ superblocks (paper §4.1) — sizes the candidate list
+    gamma0: int = 32  # round-0 superblocks scored to seed θ — sizes round-0 gathers
+    k_max: int = 10  # widest k one program serves; result arrays are [Q, k_max]
+    sb_budget: int = 0  # cap on visited superblocks; 0 -> gamma (lsp0/bmp) / 2*gamma
+    block_budget: int = 0  # cap on scored blocks; 0 -> visited_superblocks * c
+    use_kernels: bool = True  # Pallas kernels vs pure-jnp reference ops
+    doc_layout: str = "fwd"  # fwd | flat
+
+    def __post_init__(self) -> None:
+        _require(
+            self.variant in VARIANTS,
+            f"unknown variant {self.variant!r}; expected one of {VARIANTS}",
+        )
+        _require(
+            self.doc_layout in DOC_LAYOUTS,
+            f"unknown doc_layout {self.doc_layout!r}; expected one of {DOC_LAYOUTS}",
+        )
+        _require(self.gamma >= 1, f"gamma must be >= 1, got {self.gamma!r}")
+        _require(self.k_max >= 1, f"k_max must be >= 1, got {self.k_max!r}")
+        _require(self.sb_budget >= 0, f"sb_budget must be >= 0 (0 = variant default), got {self.sb_budget!r}")
+        _require(self.block_budget >= 0, f"block_budget must be >= 0 (0 = no cap), got {self.block_budget!r}")
+        budget = self.resolved_sb_budget()
+        _require(
+            1 <= self.gamma0 <= budget,
+            f"gamma0={self.gamma0} must be in [1, resolved sb_budget={budget}] "
+            f"(variant={self.variant!r}, gamma={self.gamma}, sb_budget={self.sb_budget}): "
+            "round 0 cannot score more superblocks than the traversal may visit — "
+            "lower gamma0 or raise gamma/sb_budget",
+        )
+
+    def resolved_sb_budget(self) -> int:
+        if self.sb_budget:
+            return self.sb_budget
+        return self.gamma if self.variant in ("lsp0", "bmp") else 2 * self.gamma
 
 
 @dataclass(frozen=True)
 class RetrievalConfig:
+    """Legacy combined view (k == k_max): one dataclass holding both tiers.
+    ``split()`` yields the (StaticConfig, DynamicParams) pair the unified API
+    threads separately; construction validates both halves."""
+
     variant: str = "lsp0"  # lsp0 | lsp1 | lsp2 | sp | bmp | exact
     k: int = 10
     gamma: int = 250  # guaranteed top-γ superblocks (paper §4.1)
@@ -20,10 +194,51 @@ class RetrievalConfig:
     use_kernels: bool = True  # Pallas kernels vs pure-jnp reference ops
     doc_layout: str = "fwd"  # fwd | flat
 
+    def __post_init__(self) -> None:
+        self.split()  # validates both halves at construction
+
+    def static(self) -> StaticConfig:
+        return StaticConfig(
+            variant=self.variant,
+            gamma=self.gamma,
+            gamma0=self.gamma0,
+            k_max=self.k,
+            sb_budget=self.sb_budget,
+            block_budget=self.block_budget,
+            use_kernels=self.use_kernels,
+            doc_layout=self.doc_layout,
+        )
+
+    def dynamic(self) -> DynamicParams:
+        return DynamicParams(k=self.k, mu=self.mu, eta=self.eta, beta=self.beta)
+
+    def split(self) -> tuple[StaticConfig, DynamicParams]:
+        return self.static(), self.dynamic()
+
     def resolved_sb_budget(self) -> int:
         if self.sb_budget:
             return self.sb_budget
         return self.gamma if self.variant in ("lsp0", "bmp") else 2 * self.gamma
+
+
+def combine(static: StaticConfig, dyn: Optional[DynamicParams] = None) -> RetrievalConfig:
+    """The legacy combined config equivalent to serving ``dyn`` through a
+    program compiled for ``static`` — i.e. the config whose freshly-jitted
+    results the dynamic path must (and does, bit-for-bit) reproduce."""
+    dyn = (dyn or DynamicParams(k=static.k_max)).validate_for(static)
+    return RetrievalConfig(
+        variant=static.variant,
+        k=dyn.k,
+        gamma=static.gamma,
+        mu=dyn.mu,
+        eta=dyn.eta,
+        beta=dyn.beta,
+        gamma0=static.gamma0,
+        sb_budget=static.sb_budget,
+        block_budget=static.block_budget,
+        use_kernels=static.use_kernels,
+        doc_layout=static.doc_layout,
+    )
 
 
 # Paper-recommended zero-shot configurations (§Conclusion):
@@ -35,3 +250,13 @@ def recommended(k: int, variant: str = "lsp0") -> RetrievalConfig:
     if k <= 100:
         return RetrievalConfig(variant=variant, k=k, gamma=500, beta=0.33)
     return RetrievalConfig(variant=variant, k=k, gamma=1000, beta=0.5)
+
+
+def recommended_static(k: int, n_superblocks: int = 0, variant: str = "lsp0") -> StaticConfig:
+    """Static half of the zero-shot preset, optionally clamped to a corpus:
+    γ scales like the paper's fixed γ=250 does against MS-MARCO-sized indexes."""
+    cfg = recommended(k, variant)
+    gamma = cfg.gamma if not n_superblocks else max(1, min(cfg.gamma, n_superblocks))
+    return StaticConfig(
+        variant=variant, gamma=gamma, gamma0=min(cfg.gamma0, gamma), k_max=k
+    )

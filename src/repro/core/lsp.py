@@ -24,22 +24,36 @@ Both scoring rounds (round-0 superblock expansion and phase-3 block scoring) rou
 through ``score_blocks`` -> ``ops.score_gather``: one dispatch, ref/kernel parity,
 fwd or flat quantized operands (DESIGN.md §3-4).
 
+Static/dynamic split (DESIGN.md §9): the traversal takes a shape-bearing
+``StaticConfig`` plus traced per-row ``DynamicArgs`` (k ≤ k_max, μ, η, β) —
+``search_retrieve``/``jit_search`` are the canonical entry points, and ONE
+compiled program serves any dynamic point (even mixed within a batch)
+bit-identically to a program re-jitted with those values baked in. The legacy
+``retrieve``/``jit_retrieve`` (combined ``RetrievalConfig``) remain as thin
+deprecation shims over the same code path.
+
 impl: "auto" | "ref" | "kernel" as elsewhere, plus "legacy" — the seed's
 position-major jnp scoring, kept addressable so benchmarks can track the fused
-path's speedup against the pre-doc_score baseline.
+path's speedup against the pre-doc_score baseline. ("legacy" assumes the static
+point k == k_max; it exists for profiling, not for dynamic serving.)
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import warnings
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from typing import Optional
-
 from repro.core import ops
-from repro.core.config import RetrievalConfig
+from repro.core.config import (
+    DynamicArgs,
+    DynamicParams,
+    RetrievalConfig,
+    StaticConfig,
+    dynamic_args,
+)
 from repro.core.query import QueryBatch, prune_terms, scatter_dense
 from repro.core.scoring import NEG, score_blocks, score_positions_fwd
 from repro.core.topk import canonical_topk
@@ -54,18 +68,52 @@ class RetrievalResult(NamedTuple):
     theta: Optional[jnp.ndarray] = None  # float32 [Q] round-0 pruning threshold
 
 
-def _kth_threshold(scores: jnp.ndarray, k: int, legacy: bool = False) -> jnp.ndarray:
+def masked_kth_min(vals: jnp.ndarray, k_sel: jnp.ndarray) -> jnp.ndarray:
+    """min over the first k_sel lanes of a descending top-k list [Q, W] == the
+    per-row k_sel-th value, clamped at 0. The elementwise +inf mask before a
+    full reduce consumes every lane, which keeps XLA on its fast TopK lowering
+    (a slice would be rewritten into a full variadic sort — see _kth_threshold).
+    Both the single-device θ and the sharded θ merges use THIS function, so the
+    two paths' order statistics cannot drift apart."""
+    sel = jnp.arange(vals.shape[-1])[None, :] < k_sel[:, None]
+    return jnp.maximum(jnp.where(sel, vals, jnp.inf).min(axis=-1), 0.0)
+
+
+def _kth_threshold(scores: jnp.ndarray, k, k_max: int, legacy: bool = False) -> jnp.ndarray:
     """θ = k-th best score (0 if fewer than k valid docs -> prunes nothing unsafely).
 
-    min over the top-k (== the k-th value) instead of slicing [:, -1]: consuming all
-    k lanes keeps XLA on its fast TopK lowering — the sliced form gets rewritten to a
-    full variadic sort, ~60x slower on CPU for round-0-sized inputs. ``legacy`` keeps
-    the sliced form so impl="legacy" reproduces the pre-doc_score execution profile.
-    """
-    vals, _ = jax.lax.top_k(scores, min(k, scores.shape[-1]))
+    ``k`` may be a traced int32 [Q] array (per-row dynamic k ≤ k_max): the min is
+    then taken over the first k lanes of the top-min(k_max, width) list via an
+    elementwise +inf mask. Consuming all lanes keeps XLA on its fast TopK
+    lowering — the sliced form gets rewritten to a full variadic sort, ~60x
+    slower on CPU for round-0-sized inputs — and for k == k_max the mask is
+    all-true, reducing to exactly the static ``vals.min``. ``legacy`` keeps the
+    seed's sliced form so impl="legacy" reproduces the pre-doc_score execution
+    profile (static point only)."""
+    width = scores.shape[-1]
+    kk = min(k_max, width)
+    vals, _ = jax.lax.top_k(scores, kk)
     if legacy:
         return jnp.maximum(vals[:, -1], 0.0)
-    return jnp.maximum(vals.min(axis=-1), 0.0)
+    if not isinstance(k, jnp.ndarray):
+        if min(int(k), width) == kk:
+            return jnp.maximum(vals.min(axis=-1), 0.0)
+        k = jnp.full((scores.shape[0],), k, jnp.int32)
+    return masked_kth_min(vals, jnp.minimum(k, width))
+
+
+def mask_beyond_k(vals: jnp.ndarray, ids: jnp.ndarray, k, k_max: int):
+    """Finalize a canonical top-k_max selection: invalid slots (no candidate) and
+    slots at rank >= the row's dynamic k become (NEG, -1). The first k columns
+    of the k_max-wide canonical order ARE the canonical top-k (the order is
+    total), which is what makes dynamic k bit-identical to a re-jitted static
+    k. Returns (scores, ids)."""
+    valid = vals > NEG / 2
+    if isinstance(k, jnp.ndarray):
+        valid = valid & (jnp.arange(vals.shape[-1])[None, :] < k[:, None])
+    elif k < k_max:
+        valid = valid & (jnp.arange(vals.shape[-1])[None, :] < k)
+    return jnp.where(valid, vals, jnp.float32(NEG)), jnp.where(valid, ids, -1)
 
 
 def _expand_superblocks(sb_idx: jnp.ndarray, c: int) -> jnp.ndarray:
@@ -74,7 +122,7 @@ def _expand_superblocks(sb_idx: jnp.ndarray, c: int) -> jnp.ndarray:
     return blk.reshape(blk.shape[0], -1)
 
 
-def _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, cfg, impl):
+def _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, scfg, impl):
     """Layout + impl routing for both scoring rounds, including the legacy baseline."""
     if impl == "legacy":
         b = index.b
@@ -83,26 +131,46 @@ def _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, cfg, impl):
         scores = score_positions_fwd(index, qdense, pos)
         mask = jnp.repeat(blk_mask, b, axis=1)
         return jnp.where(mask, scores, NEG), pos
-    return score_blocks(index, qdense, blk_ids, blk_mask, cfg.doc_layout, impl)
+    return score_blocks(index, qdense, blk_ids, blk_mask, scfg.doc_layout, impl)
 
 
 _IMPLS = ("auto", "ref", "kernel", "legacy")
 
+Dynamic = Union[DynamicParams, DynamicArgs, None]
 
-def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: str = "auto") -> RetrievalResult:
+
+def search_retrieve(
+    index: LSPIndex,
+    qb_full: QueryBatch,
+    scfg: StaticConfig,
+    dyn: Dynamic = None,
+    impl: str = "auto",
+) -> RetrievalResult:
+    """The unified traversal: static shapes from ``scfg``, per-row dynamic
+    (k, μ, η, β) from ``dyn`` (host params are broadcast; ``None`` means the
+    static point k = k_max). Result arrays are [Q, k_max]; rows are masked at
+    their dynamic k."""
     assert impl in _IMPLS, f"impl must be one of {_IMPLS}, got {impl!r}"
-    variant = cfg.variant
+    if isinstance(dyn, DynamicParams):
+        dyn.validate_for(scfg)
+    d = dynamic_args(dyn, qb_full.tids.shape[0], scfg.k_max)
+    variant = scfg.variant
+    if variant == "exact":
+        raise ValueError(
+            "variant 'exact' has no pruned traversal; use the repro.api 'exact' "
+            "backend or core.exact.retrieve_exact"
+        )
     if variant == "bmp":
-        return _retrieve_bmp(index, qb_full, cfg, impl)
+        return _retrieve_bmp(index, qb_full, scfg, d, impl)
     bounds_impl = "ref" if impl == "legacy" else impl
 
     ns, c = index.n_superblocks, index.c
-    gamma = min(cfg.gamma, ns)
-    budget = min(cfg.resolved_sb_budget(), ns)
+    gamma = min(scfg.gamma, ns)
+    budget = min(scfg.resolved_sb_budget(), ns)
     # an explicit sb_budget below γ0 caps round 0 too (the candidate list is only
     # budget wide); clamping here keeps the visited-superblock accounting honest
-    g0 = min(cfg.gamma0, gamma, budget)
-    qb = prune_terms(qb_full, cfg.beta)
+    g0 = min(scfg.gamma0, gamma, budget)
+    qb = prune_terms(qb_full, d.beta)
     qdense = scatter_dense(qb_full)
 
     # ---- phase 1: superblock bounds (paper Eq. 1), full sorted candidate list
@@ -112,23 +180,25 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
     # ---- round 0: seed θ from the guaranteed head of the list
     blk0 = _expand_superblocks(top_idx[:, :g0], c)  # [Q, g0*c]
     scores0, pos0 = _score_blocks_dispatch(
-        index, qdense, blk0, jnp.ones_like(blk0, bool), cfg, impl
+        index, qdense, blk0, jnp.ones_like(blk0, bool), scfg, impl
     )
-    theta = _kth_threshold(scores0, cfg.k, legacy=impl == "legacy")  # [Q]
+    theta = _kth_threshold(scores0, d.k, scfg.k_max, legacy=impl == "legacy")  # [Q]
 
     # ---- variant eligibility over ranks [g0, budget)
     rank = jnp.arange(budget)[None, :]
     th = theta[:, None]
+    mu = d.mu[:, None]  # [Q, 1] — per-row dynamic μ/η broadcast over candidates
+    eta = d.eta[:, None]
     in_gamma = (rank < gamma) & (top_vals >= th)
     if variant == "lsp0":
         eligible = in_gamma
     elif variant == "lsp1":
-        eligible = in_gamma | (top_vals > th / cfg.mu)
+        eligible = in_gamma | (top_vals > th / mu)
     elif variant in ("lsp2", "sp"):
         assert index.sb_avg is not None, f"{variant} needs superblock averages in the index"
         sbavg = ops.sbmax(index.sb_avg, qb.tids, qb.ws, bounds_impl)
         avg_vals = jnp.take_along_axis(sbavg, top_idx, axis=1)
-        sp_rule = (top_vals > th / cfg.mu) | (avg_vals > th / cfg.eta)
+        sp_rule = (top_vals > th / mu) | (avg_vals > th / eta)
         eligible = (in_gamma | sp_rule) if variant == "lsp2" else sp_rule
     else:
         raise ValueError(f"unknown variant {variant!r}")
@@ -145,10 +215,10 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
         index.blk_bounds, c, qb.tids, qb.ws, top_idx, bounds_impl
     )  # [Q, budget, c]
     blk_bounds = jnp.where(eligible[:, :, None], blk_bounds, NEG)
-    blk_keep = blk_bounds > th[:, :, None] / cfg.eta
+    blk_keep = blk_bounds > th[:, :, None] / eta[:, :, None]
 
     flat_bounds = jnp.where(blk_keep, blk_bounds, NEG).reshape(blk_bounds.shape[0], -1)
-    block_budget = cfg.block_budget or budget * c
+    block_budget = scfg.block_budget or budget * c
     block_budget = min(block_budget, budget * c)
     bvals, bidx = jax.lax.top_k(flat_bounds, block_budget)  # over [Q, budget*c]
     sel_sb = jnp.take_along_axis(top_idx, bidx // c, axis=1)
@@ -156,7 +226,7 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
     blk_mask = bvals > NEG / 2
 
     # ---- phase 3: document scoring
-    scores1, pos1 = _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, cfg, impl)
+    scores1, pos1 = _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, scfg, impl)
 
     # ---- merge rounds, final top-k. Canonical (score desc, doc-id asc) selection:
     # equal-score ties at the k boundary resolve by global doc id, not by traversal
@@ -165,9 +235,9 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
     all_pos = jnp.concatenate([pos0, pos1], axis=1)
     all_ids = index.doc_remap[jnp.clip(all_pos, 0, index.doc_remap.shape[0] - 1)]
     vals, ids = canonical_topk(
-        all_scores, all_ids.astype(jnp.int32), cfg.k, id_bound=index.n_docs + 1
+        all_scores, all_ids.astype(jnp.int32), scfg.k_max, id_bound=index.n_docs + 1
     )
-    ids = jnp.where(vals > NEG / 2, ids, -1)
+    vals, ids = mask_beyond_k(vals, ids, d.k, scfg.k_max)
 
     # ---- block accounting: phase-3 blocks inside a round-0 superblock (possible for
     # the sp variant, whose eligibility does not exclude ranks < g0) are re-scores of
@@ -183,61 +253,169 @@ def retrieve(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: s
 
     return RetrievalResult(
         doc_ids=ids,
-        scores=jnp.where(vals > NEG / 2, vals, jnp.float32(NEG)),
+        scores=vals,
         n_superblocks_visited=g0 + n_sb_new,
         n_blocks_scored=n_blocks_scored,
         theta=theta,
     )
 
 
-def _retrieve_bmp(index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: str) -> RetrievalResult:
-    """BMP baseline: single-level block filtering (Mallia et al. '24) on our layout."""
+def _retrieve_bmp(
+    index: LSPIndex, qb_full: QueryBatch, scfg: StaticConfig, d: DynamicArgs, impl: str
+) -> RetrievalResult:
+    """BMP baseline: single-level block filtering (Mallia et al. '24) on our layout.
+
+    The round-0 block count b0 is sized by the *static* k_max (it is shape-
+    bearing), so bmp's dynamic-k guarantee is weaker than the lsp variants':
+    results match a re-jitted static config only at k == k_max."""
     nb, b = index.n_blocks, index.b
     bounds_impl = "ref" if impl == "legacy" else impl
-    qb = prune_terms(qb_full, cfg.beta)
+    qb = prune_terms(qb_full, d.beta)
     qdense = scatter_dense(qb_full)
 
     boundsum = ops.sbmax(index.blk_bounds, qb.tids, qb.ws, bounds_impl)  # [Q, NB]
-    b0 = min(max(cfg.gamma0 * index.c, cfg.k // b + 1), nb)
+    b0 = min(max(scfg.gamma0 * index.c, scfg.k_max // b + 1), nb)
     v0, i0 = jax.lax.top_k(boundsum, b0)
-    scores0, pos0 = _score_blocks_dispatch(index, qdense, i0, jnp.ones_like(i0, bool), cfg, impl)
-    theta = _kth_threshold(scores0, cfg.k, legacy=impl == "legacy")
+    scores0, pos0 = _score_blocks_dispatch(index, qdense, i0, jnp.ones_like(i0, bool), scfg, impl)
+    theta = _kth_threshold(scores0, d.k, scfg.k_max, legacy=impl == "legacy")
 
-    budget = min(cfg.block_budget or 4 * cfg.gamma * index.c, nb)
+    budget = min(scfg.block_budget or 4 * scfg.gamma * index.c, nb)
     vals, idx = jax.lax.top_k(boundsum, budget)
     rank = jnp.arange(budget)[None, :]
-    eligible = (vals > theta[:, None] / cfg.eta) & (rank >= b0)
-    scores1, pos1 = _score_blocks_dispatch(index, qdense, idx, eligible, cfg, impl)
+    eligible = (vals > theta[:, None] / d.eta[:, None]) & (rank >= b0)
+    scores1, pos1 = _score_blocks_dispatch(index, qdense, idx, eligible, scfg, impl)
 
     all_scores = jnp.concatenate([scores0, scores1], axis=1)
     all_pos = jnp.concatenate([pos0, pos1], axis=1)
     all_ids = index.doc_remap[jnp.clip(all_pos, 0, index.doc_remap.shape[0] - 1)]
     tvals, ids = canonical_topk(
-        all_scores, all_ids.astype(jnp.int32), cfg.k, id_bound=index.n_docs + 1
+        all_scores, all_ids.astype(jnp.int32), scfg.k_max, id_bound=index.n_docs + 1
     )
-    ids = jnp.where(tvals > NEG / 2, ids, -1)
+    tvals, ids = mask_beyond_k(tvals, ids, d.k, scfg.k_max)
     return RetrievalResult(
         doc_ids=ids,
-        scores=jnp.where(tvals > NEG / 2, tvals, jnp.float32(NEG)),
+        scores=tvals,
         n_superblocks_visited=jnp.zeros(ids.shape[0], jnp.int32),
         n_blocks_scored=b0 + eligible.sum(axis=1, dtype=jnp.int32),
         theta=theta,
     )
 
 
+def validate_dynamic(dyn: Dynamic, scfg: StaticConfig) -> None:
+    """Host-side check of a per-call dynamic point (or per-row list) against the
+    compiled program's StaticConfig (k <= k_max); traced DynamicArgs pass through."""
+    if isinstance(dyn, DynamicParams):
+        dyn.validate_for(scfg)
+    elif isinstance(dyn, (list, tuple)):
+        for p in dyn:
+            p.validate_for(scfg)
+
+
+def make_dynamic_runner(fn, scfg: StaticConfig, defaults: DynamicParams, vocab: int, traces: dict):
+    """Wrap a jitted ``fn(tids, ws, k, mu, eta, beta)`` into the backend
+    contract every serving layer consumes: ``run(qb, dyn=None)`` with host-param
+    validation + [Q] broadcasting, ``run.warmup(shapes)`` sentinel
+    pre-compilation, ``run.n_traces()`` (the zero-recompilation counter), and
+    the ``supports_dynamic``/``static_cfg``/``defaults``/``vocab`` attributes.
+    ``jit_search``, the 'exact' backend and ``ShardedRetriever`` all share THIS
+    wrapper, so the contract cannot drift between backends."""
+
+    def run(qb: QueryBatch, dyn: Dynamic = None):
+        validate_dynamic(dyn, scfg)
+        d = dynamic_args(defaults if dyn is None else dyn, qb.tids.shape[0], scfg.k_max)
+        return fn(qb.tids, qb.ws, d.k, d.mu, d.eta, d.beta)
+
+    def warmup(shapes) -> None:
+        for q, nq in shapes:
+            d = dynamic_args(defaults, q, scfg.k_max)
+            out = fn(
+                jnp.full((q, nq), vocab, jnp.int32), jnp.zeros((q, nq), jnp.float32), *d
+            )
+            jax.block_until_ready(out)
+
+    run.warmup = warmup
+    run.n_traces = lambda: traces["n"]
+    run.supports_dynamic = True
+    run.static_cfg = scfg
+    run.defaults = defaults
+    run.vocab = vocab
+    return run
+
+
+def jit_search(
+    index: LSPIndex,
+    scfg: StaticConfig,
+    impl: str = "auto",
+    defaults: Optional[DynamicParams] = None,
+):
+    """Compile the dynamic traversal closed over the index: ONE XLA program per
+    (Q, nq) input shape serves ANY ``DynamicParams`` point — including mixed
+    per-row points — with zero recompiles across a sweep.
+
+    The jit boundary takes (tids, ws) plus the four [Q] dynamic arrays; shapes
+    depend only on the batch, so a serving ladder's buckets each resolve to one
+    program through the returned callable. ``run.warmup(shapes)`` pre-triggers
+    those compilations, and ``run.n_traces()`` exposes the trace counter the
+    zero-recompilation property tests assert over.
+    """
+    vocab = index.vocab
+    defaults = (defaults or DynamicParams(k=scfg.k_max)).validate_for(scfg)
+    traces = {"n": 0}
+
+    @jax.jit
+    def fn(tids, ws, k, mu, eta, beta):
+        traces["n"] += 1  # python side effect: runs at trace time only
+        return search_retrieve(
+            index, QueryBatch(tids, ws, vocab), scfg, DynamicArgs(k, mu, eta, beta), impl=impl
+        )
+
+    return make_dynamic_runner(fn, scfg, defaults, vocab, traces)
+
+
+# --------------------------------------------------------------- legacy shims
+# Retained one release for existing call sites; both route through the same
+# unified code path at the static point (k == k_max), so behaviour — including
+# bitwise results — is unchanged.
+
+
+def retrieve(
+    index: LSPIndex, qb_full: QueryBatch, cfg: RetrievalConfig, impl: str = "auto"
+) -> RetrievalResult:
+    warnings.warn(
+        "retrieve(index, qb, RetrievalConfig) is deprecated; use "
+        "search_retrieve(index, qb, StaticConfig, DynamicParams) or the "
+        "repro.api.Retriever facade",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return search_retrieve(index, qb_full, cfg.static(), cfg.dynamic(), impl=impl)
+
+
 def jit_retrieve(index: LSPIndex, cfg: RetrievalConfig, impl: str = "auto"):
-    """Compile a retriever closed over the index. QueryBatch.vocab is static (shapes
-    depend on it), so the jit boundary takes only the tids/ws arrays.
+    """Deprecated: compile a retriever closed over the index at one fixed
+    ``RetrievalConfig`` point. QueryBatch.vocab is static (shapes depend on it),
+    so the jit boundary takes only the tids/ws arrays; the dynamic parameters
+    are baked into the trace as constants — this is exactly the "re-jitted
+    static config" the dynamic path's bit-identity tests compare against.
 
     jax.jit specializes per (Q, nq_max) input shape, so the serving ladder's shape
     buckets each resolve to their own XLA program through the one returned callable.
     ``run.warmup(shapes)`` pre-triggers those compilations: sentinel-only inputs are
     enough because compilation depends on shapes, not values."""
+    warnings.warn(
+        "jit_retrieve is deprecated; use jit_search(index, StaticConfig) or the "
+        "repro.api.Retriever facade",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     vocab = index.vocab
+    scfg, dyn = cfg.split()
+    traces = {"n": 0}
 
     @jax.jit
     def fn(tids, ws):
-        return retrieve(index, QueryBatch(tids, ws, vocab), cfg, impl=impl)
+        traces["n"] += 1
+        return search_retrieve(index, QueryBatch(tids, ws, vocab), scfg, dyn, impl=impl)
 
     def run(qb: QueryBatch):
         return fn(qb.tids, qb.ws)
@@ -248,4 +426,5 @@ def jit_retrieve(index: LSPIndex, cfg: RetrievalConfig, impl: str = "auto"):
             jax.block_until_ready(out)
 
     run.warmup = warmup
+    run.n_traces = lambda: traces["n"]
     return run

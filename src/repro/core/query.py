@@ -62,13 +62,21 @@ def make_query_batch(queries: list[tuple[np.ndarray, np.ndarray]], vocab: int, n
     return QueryBatch(jnp.asarray(tids), jnp.asarray(ws), vocab)
 
 
-def prune_terms(qb: QueryBatch, beta: float) -> QueryBatch:
+def prune_terms(qb: QueryBatch, beta) -> QueryBatch:
     """Keep the highest-weighted ceil(β * n_terms_i) terms of each query (paper's
-    query pruning; used for candidate generation only — scoring uses the full query)."""
-    if beta >= 1.0:
+    query pruning; used for candidate generation only — scoring uses the full query).
+
+    ``beta`` is a host float (static point, short-circuits at 1.0) or a traced
+    [Q] array (per-row dynamic β). The traced path computes the same masked
+    arrays the static path would: positions past a row's keep count are already
+    the sentinel (tid == vocab, weight 0), so re-writing them is bit-identical
+    to the static short-circuit at β == 1."""
+    if not isinstance(beta, jnp.ndarray) and beta >= 1.0:
         return qb
     valid = (qb.tids < qb.vocab).astype(jnp.int32)
     n_valid = valid.sum(axis=1, keepdims=True)
+    if isinstance(beta, jnp.ndarray) and beta.ndim == 1:
+        beta = beta[:, None]  # per-row β broadcasts over the term axis
     keep_n = jnp.ceil(beta * n_valid).astype(jnp.int32)
     # terms are weight-sorted at batch construction -> keep a prefix
     idx = jnp.arange(qb.nq_max)[None, :]

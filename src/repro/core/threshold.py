@@ -5,6 +5,11 @@ The batched pipeline's round 0 (score top-γ₀ superblocks) already provides an
 that want to shrink γ₀: score a uniform sample of documents and take an order-statistic
 corrected k-quantile. Underestimation is the safe direction (prunes less); we shrink
 the estimate by `safety` to stay on that side.
+
+``k`` follows the static/dynamic split (DESIGN.md §9): a host int is the static
+point; a traced int32 [Q] array (k ≤ k_max) selects the order statistic per row
+inside one compiled program — the sample width stays static, only the quantile
+index moves.
 """
 
 from __future__ import annotations
@@ -17,22 +22,39 @@ from repro.core.scoring import score_positions_fwd
 from repro.index.layout import LSPIndex
 
 
+def _k_eff(k, n_sample: int, n_docs: int):
+    """E[k-th of corpus] ~ (k * n_sample / n_docs)-th of a uniform sample."""
+    scale = n_sample / max(n_docs, 1)
+    if isinstance(k, jnp.ndarray):
+        return jnp.clip(jnp.round(k * scale).astype(jnp.int32), 1, n_sample)
+    return max(1, min(int(round(k * scale)), n_sample))
+
+
 def estimate_theta(
     index: LSPIndex,
     qb: QueryBatch,
-    k: int,
+    k,
     n_sample: int = 1024,
     safety: float = 0.9,
     seed: int = 0,
+    k_max: int = 0,
 ) -> jnp.ndarray:
-    """[Q] estimated k-th best score. E[k-th of corpus] ~ (k * n_sample / n_docs)-th of
-    a uniform sample; we take that order statistic and scale by `safety`."""
+    """[Q] estimated k-th best score, scaled by `safety`. With a traced ``k``,
+    pass ``k_max`` (the widest k the program serves) so the top-k width — the
+    only shape k touches — is sized statically."""
     n_pad = index.doc_remap.shape[0]
     n_sample = min(n_sample, n_pad)
     key = jax.random.PRNGKey(seed)
     pos = jax.random.choice(key, n_pad, (n_sample,), replace=False)
     qdense = scatter_dense(qb)
     scores = score_positions_fwd(index, qdense, jnp.broadcast_to(pos, (qb.tids.shape[0], n_sample)))
-    k_eff = max(1, int(round(k * n_sample / max(index.n_docs, 1))))
-    vals, _ = jax.lax.top_k(scores, k_eff)
-    return jnp.maximum(vals[:, -1] * safety, 0.0)
+    if not isinstance(k, jnp.ndarray):
+        vals, _ = jax.lax.top_k(scores, _k_eff(k, n_sample, index.n_docs))
+        return jnp.maximum(vals[:, -1] * safety, 0.0)
+    # dynamic k: static width from k_max, per-row order statistic via masked min
+    # (consuming all lanes keeps XLA's fast TopK lowering; see core/lsp.py)
+    width = _k_eff(int(k_max) or n_sample, n_sample, index.n_docs)
+    vals, _ = jax.lax.top_k(scores, width)
+    sel = jnp.arange(width)[None, :] < jnp.minimum(_k_eff(k, n_sample, index.n_docs), width)[:, None]
+    kth = jnp.where(sel, vals, jnp.inf).min(axis=-1)
+    return jnp.maximum(kth * safety, 0.0)

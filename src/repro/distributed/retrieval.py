@@ -22,7 +22,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.config import RetrievalConfig
-from repro.core.lsp import retrieve
+from repro.core.lsp import search_retrieve
 from repro.core.query import QueryBatch
 from repro.core.scoring import NEG
 from repro.index.layout import LSPIndex, PackedBounds
@@ -108,7 +108,7 @@ def retrieve_distributed(
     """Host-loop reference for the shard_map version (identical per-shard math)."""
     all_ids, all_scores = [], []
     for sh in shards:
-        res = retrieve(sh, qb, cfg, impl=impl)
+        res = search_retrieve(sh, qb, cfg.static(), cfg.dynamic(), impl=impl)
         all_ids.append(res.doc_ids)
         all_scores.append(jnp.where(res.doc_ids >= 0, res.scores, NEG))
     ids = jnp.concatenate(all_ids, axis=1)
@@ -161,7 +161,7 @@ def make_mesh_retriever(shards: list[LSPIndex], cfg: RetrievalConfig, mesh, impl
             ),
             docs_flatq=None,
         )
-        res = retrieve(local, QueryBatch(q_tids, q_ws, meta.vocab), cfg, impl=impl)
+        res = search_retrieve(local, QueryBatch(q_tids, q_ws, meta.vocab), cfg.static(), cfg.dynamic(), impl=impl)
         scores = jnp.where(res.doc_ids >= 0, res.scores, NEG)
         av = jax.lax.all_gather(scores, "model", axis=1, tiled=True)  # [Q, P*k]
         ai = jax.lax.all_gather(res.doc_ids, "model", axis=1, tiled=True)

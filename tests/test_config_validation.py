@@ -1,0 +1,138 @@
+"""Config-dataclass validation: a bad config must fail loudly AT CONSTRUCTION
+with an actionable message — not as a shape error deep inside the trace."""
+
+import numpy as np
+import pytest
+
+from repro.core.config import (
+    ConfigError,
+    DynamicParams,
+    RetrievalConfig,
+    StaticConfig,
+    combine,
+    dynamic_args,
+    recommended,
+    recommended_static,
+)
+
+
+# ---- valid constructions -------------------------------------------------------
+
+
+def test_defaults_construct():
+    RetrievalConfig()
+    StaticConfig()
+    DynamicParams()
+
+
+def test_every_variant_and_layout_accepted():
+    for v in ("lsp0", "lsp1", "lsp2", "sp", "bmp", "exact"):
+        StaticConfig(variant=v)
+    for lay in ("fwd", "flat"):
+        StaticConfig(doc_layout=lay)
+
+
+def test_recommended_presets_validate():
+    for k in (1, 10, 100, 1000):
+        cfg = recommended(k)
+        assert cfg.k == k
+        dp = DynamicParams.recommended(k)
+        assert dp.k == k and dp.beta == (0.33 if k <= 100 else 0.5)
+    s = recommended_static(10, n_superblocks=16)
+    assert s.gamma <= 16 and s.gamma0 <= s.gamma
+
+
+# ---- rejections, with actionable messages --------------------------------------
+
+
+def test_unknown_variant_rejected():
+    with pytest.raises(ConfigError, match="unknown variant.*lsp9"):
+        StaticConfig(variant="lsp9")
+    with pytest.raises(ValueError, match="variant"):
+        RetrievalConfig(variant="maxscore")
+
+
+def test_unknown_doc_layout_rejected():
+    with pytest.raises(ConfigError, match="doc_layout.*'inverted'"):
+        StaticConfig(doc_layout="inverted")
+    with pytest.raises(ValueError, match="doc_layout"):
+        RetrievalConfig(doc_layout="csc")
+
+
+def test_gamma0_above_resolved_budget_rejected():
+    # lsp0: resolved budget == gamma, so gamma0 > gamma is unservable
+    with pytest.raises(ConfigError, match="gamma0=32.*sb_budget=8"):
+        StaticConfig(variant="lsp0", gamma=8)  # default gamma0=32
+    # lsp1 doubles the budget: the same gamma0 fits
+    StaticConfig(variant="lsp1", gamma=16)  # budget 32 >= default gamma0
+    with pytest.raises(ValueError, match="gamma0"):
+        RetrievalConfig(gamma=8, gamma0=9)
+    with pytest.raises(ConfigError, match="sb_budget"):
+        StaticConfig(gamma=64, gamma0=40, sb_budget=32)
+
+
+def test_beta_outside_unit_interval_rejected():
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ConfigError, match="beta.*\\(0, 1\\]"):
+            DynamicParams(beta=bad)
+        with pytest.raises(ValueError, match="beta"):
+            RetrievalConfig(beta=bad)
+    DynamicParams(beta=1.0)  # the disable-pruning point is legal
+
+
+def test_nonpositive_k_mu_eta_rejected():
+    with pytest.raises(ConfigError, match="k must be a positive"):
+        DynamicParams(k=0)
+    with pytest.raises(ConfigError, match="mu"):
+        DynamicParams(mu=0.0)
+    with pytest.raises(ConfigError, match="eta"):
+        DynamicParams(eta=-1.0)
+    with pytest.raises(ConfigError, match="gamma"):
+        StaticConfig(gamma=0)
+    with pytest.raises(ConfigError, match="k_max"):
+        StaticConfig(k_max=0)
+
+
+def test_k_above_k_max_rejected_at_pairing():
+    s = StaticConfig(k_max=10)
+    with pytest.raises(ConfigError, match="k=11 exceeds.*k_max=10"):
+        DynamicParams(k=11).validate_for(s)
+    DynamicParams(k=10).validate_for(s)
+    with pytest.raises(ConfigError, match="k_max"):
+        combine(s, DynamicParams(k=64))
+
+
+# ---- split / combine round-trip ------------------------------------------------
+
+
+def test_split_combine_round_trip():
+    cfg = RetrievalConfig(
+        variant="lsp2", k=7, gamma=100, mu=0.4, eta=0.9, beta=0.5,
+        gamma0=16, sb_budget=150, block_budget=0, doc_layout="flat",
+    )
+    s, d = cfg.split()
+    assert s.k_max == cfg.k and d.k == cfg.k
+    assert combine(s, d) == cfg
+    assert s.resolved_sb_budget() == cfg.resolved_sb_budget() == 150
+
+
+def test_key_bytes_distinct_and_stable():
+    a = DynamicParams(k=10, mu=0.5, eta=1.0, beta=0.33)
+    b = DynamicParams(k=10, mu=0.5, eta=1.0, beta=0.34)
+    assert a.key_bytes() == DynamicParams(k=10).key_bytes()
+    seen = {a.key_bytes(), b.key_bytes(), DynamicParams(k=9).key_bytes(),
+            DynamicParams(k=10, mu=0.51).key_bytes(), DynamicParams(k=10, eta=0.9).key_bytes()}
+    assert len(seen) == 5  # every distinct point gets a distinct cache-key prefix
+
+
+def test_dynamic_args_broadcast_and_per_row():
+    d = dynamic_args(DynamicParams(k=3, mu=0.25), q=4, k_max=8)
+    assert d.k.shape == (4,) and int(d.k[0]) == 3
+    np.testing.assert_allclose(np.asarray(d.mu), 0.25)
+    rows = [DynamicParams(k=1), DynamicParams(k=5, beta=1.0)]
+    d2 = dynamic_args(rows, q=2, k_max=8)
+    assert [int(v) for v in np.asarray(d2.k)] == [1, 5]
+    assert float(np.asarray(d2.beta)[1]) == 1.0
+    # None -> the static point (k = k_max, default mu/eta/beta)
+    d3 = dynamic_args(None, q=2, k_max=8)
+    assert [int(v) for v in np.asarray(d3.k)] == [8, 8]

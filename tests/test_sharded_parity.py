@@ -202,6 +202,15 @@ def test_sharded_pruning_invariants(seed, n_docs, geom, variant, gamma_frac, eta
     assert (np.asarray(res.shard_blocks) >= 0).all()
     theta = np.asarray(res.theta)[:, None]
     assert (np.asarray(res.shard_theta) <= theta + 0).all(), "per-shard θ exceeded global θ"
+    # load-balance counters: each candidate in the global top-γ has exactly one
+    # owner, so per-shard shares partition min(γ, budget) (padded tail candidates
+    # included — they land in the last shard's range by construction)
+    shares = np.asarray(res.shard_candidates)
+    assert shares.shape == (np.asarray(res.theta).shape[0], n_shards)
+    assert (shares >= 0).all()
+    budget = min(cfg.resolved_sb_budget(), idx.n_superblocks)
+    expect = min(min(cfg.gamma, idx.n_superblocks), budget)
+    np.testing.assert_array_equal(shares.sum(axis=1), expect)
 
 
 # ---- parity through the serving engine ---------------------------------------------
@@ -284,8 +293,14 @@ def test_sharded_retriever_rejects_unsupported_configs(tiny_index):
         ShardedRetriever(tiny_index, RetrievalConfig(doc_layout="flat"), n_shards=2)
     with pytest.raises(ValueError, match="legacy"):
         ShardedRetriever(tiny_index, RetrievalConfig(), n_shards=2, impl="legacy")
-    with pytest.raises(ValueError, match="block_budget"):
-        ShardedRetriever(tiny_index, RetrievalConfig(gamma=8, block_budget=2), n_shards=2)
+    # a competitive block budget needs the (unimplemented) cross-shard bounds
+    # merge — the refusal must name the missing collective AND the fallback
+    with pytest.raises(NotImplementedError, match="cross-shard bounds merge") as ei:
+        ShardedRetriever(
+            tiny_index, RetrievalConfig(gamma=8, gamma0=8, block_budget=2), n_shards=2
+        )
+    assert "single-device" in str(ei.value)
+    assert "block_budget=0" in str(ei.value)
 
 
 def test_sharded_retriever_callable_and_warmup(tiny_index, tiny_corpus):
