@@ -120,6 +120,61 @@ def main() -> None:
           f"({stats['cache_hits']} hits / {stats['cache_misses']} misses)")
     print("sample result ids:", results[0].doc_ids[:5].tolist())
 
+    # ---- SLO control plane (DESIGN.md §10): overload -> degrade/shed -> recover ----
+    # An engine with an SLO target and per-request deadlines: a burst beyond
+    # capacity backs the queue up, the controller walks new admissions down the
+    # degradation ladder, queued requests past their deadline shed fast with a
+    # typed DeadlineExceeded — and a light trickle afterwards recovers to full
+    # quality (hysteresis: several consecutive healthy intervals per rung).
+    from repro.serve import AdmissionConfig, DeadlineExceeded, SLOConfig
+
+    eng = retr.serve(max_batch=8, nq_max=64, max_wait_ms=1.0, cache_size=0,
+                     warmup=True)  # calibrate unloaded capacity first
+    t0 = time.perf_counter()
+    for f in [eng.search(SearchRequest(t, w)) for t, w in base for _ in (0, 1)]:
+        f.result(timeout=300)
+    t_batch_ms = (time.perf_counter() - t0) / max(2 * len(base) / 8, 1) * 1e3
+    eng.shutdown()
+    slo_ms = max(5.0 * t_batch_ms, 30.0)
+    burst = min(8 * max(2, int(4.0 * slo_ms / t_batch_ms)), 512)
+    print(f"\noverload demo: capacity ~{t_batch_ms:.1f} ms/batch, "
+          f"SLO p99 <= {slo_ms:.0f} ms, deadline {slo_ms / 2:.0f} ms, burst {burst}")
+
+    eng = retr.serve(
+        max_batch=8, nq_max=64, max_wait_ms=1.0, cache_size=0, warmup=False,
+        queue_depth=4 * burst,
+        slo=SLOConfig(p99_ms=slo_ms, queue_high=0.05,
+                      interval_ms=max(t_batch_ms, 1.0), recover_after=3),
+        admission=AdmissionConfig(default_deadline_ms=slo_ms / 2),
+    )
+    served = shed = degraded = 0
+    for wave in range(2 if args.smoke else 4):
+        futures = [eng.search(SearchRequest(t, w)) for t, w in
+                   (base[i % len(base)] for i in range(burst))]
+        for f in futures:
+            try:
+                r = f.result(timeout=300)
+                served += 1
+                degraded += bool(r.degraded)
+            except DeadlineExceeded:
+                shed += 1
+        s = eng.stats.summary()
+        print(f"  burst {wave}: level={s['slo_level']} queue={s['queue_depth']} "
+              f"served={served} degraded={degraded} shed={shed} "
+              f"p99={s['p99_ms']:.0f} ms")
+    t_end = time.monotonic() + 30.0
+    while eng.slo.level > 0 and time.monotonic() < t_end:  # light trickle: recover
+        eng.search(SearchRequest(*base[0])).result(timeout=300)
+        time.sleep(max(t_batch_ms, 1.0) / 1e3)
+    s = eng.stats.summary()
+    snap = eng.slo.snapshot()
+    print(f"  recovered: level={s['slo_level']} after {snap['recover_steps']} step(s) "
+          f"up the ladder ({snap['degrade_steps']} down) | "
+          f"served p99 {s['p99_ms']:.0f} ms <= SLO {slo_ms:.0f} ms: {s['p99_ms'] <= slo_ms}")
+    eng.shutdown()
+    assert s["p99_ms"] <= slo_ms, "served p99 must hold under the SLO"
+    assert eng.slo.level == 0, "trickle traffic must recover to full quality"
+
 
 if __name__ == "__main__":
     main()

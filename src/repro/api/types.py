@@ -17,16 +17,31 @@ import numpy as np
 
 from repro.core.config import DynamicParams
 
+PRIORITIES = ("interactive", "batch")
+
 
 @dataclass(frozen=True)
 class SearchRequest:
     """One sparse query: term ids + weights, optionally with a per-request
     ``DynamicParams`` override (k ≤ the program's k_max, μ, η, β). ``params``
-    is None for "serve at the engine's defaults"."""
+    is None for "serve at the engine's defaults".
+
+    Serving-policy fields (DESIGN.md §10, all optional and inert outside the
+    engine): ``deadline_ms`` is a relative deadline — if it expires while the
+    request is queued, the engine fails the future fast with
+    ``DeadlineExceeded`` and never scores it; ``tenant`` names the token
+    bucket charged at admission; ``priority`` picks the queue lane
+    (``interactive`` preempts ``batch`` at every collect step); ``request_id``
+    tags the request for log/error correlation (the engine assigns one when
+    None)."""
 
     tids: np.ndarray  # int [n_terms]
     weights: np.ndarray  # float [n_terms]
     params: Optional[DynamicParams] = None
+    deadline_ms: Optional[float] = None  # relative; None = no deadline
+    tenant: Optional[str] = None  # admission quota bucket; None = anonymous
+    priority: str = "interactive"  # 'interactive' | 'batch' queue lane
+    request_id: Optional[str] = None  # caller-supplied correlation id
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "tids", np.asarray(self.tids, np.int32))
@@ -35,6 +50,14 @@ class SearchRequest:
             raise ValueError(
                 f"SearchRequest wants 1-D tids/weights of equal length, got "
                 f"{self.tids.shape} and {self.weights.shape}"
+            )
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0 (or None for no deadline), got {self.deadline_ms!r}"
+            )
+        if self.priority not in PRIORITIES:
+            raise ValueError(
+                f"unknown priority {self.priority!r}; expected one of {PRIORITIES}"
             )
 
 
@@ -45,7 +68,13 @@ class SearchResponse:
     ``doc_ids``/``scores`` are [k] (the request's dynamic k), -1 / NEG where
     fewer than k documents survived. ``theta`` and the visit counters are None
     when the serving retriever does not report them (e.g. a bare (ids, scores)
-    test retriever)."""
+    test retriever).
+
+    ``degraded``/``params_served`` (DESIGN.md §10): True when the SLO
+    controller walked this request down the degradation ladder; then
+    ``params_served`` is the cheaper point actually scored (``params`` keeps
+    the resolved point too — they are the same object — so existing callers
+    reading ``params`` see what was served either way)."""
 
     doc_ids: np.ndarray  # int32 [k], -1 where no result
     scores: np.ndarray  # float32 [k]
@@ -57,6 +86,8 @@ class SearchResponse:
     cache_hit: bool = False  # served from the result cache?
     bucket: Optional[Tuple[int, int]] = None  # (batch, nq) compiled shape that ran
     shard_candidates: Optional[np.ndarray] = field(default=None, repr=False)  # int32 [P] top-γ share per shard
+    degraded: bool = False  # served below the requested/default quality point?
+    params_served: Optional[DynamicParams] = None  # the point actually scored
 
     @property
     def k(self) -> int:

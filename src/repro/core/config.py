@@ -134,6 +134,66 @@ def dynamic_args(dyn: Union[DynamicParams, DynamicArgs, None], q: int, k_max: in
 
 
 @dataclass(frozen=True)
+class DegradationRung:
+    """One point on a serving degradation ladder (DESIGN.md §10): a dynamic
+    pruning point plus an optional query-term cap. Smaller μ/η/β mean more
+    pruning (bounds are compared against θ/μ and θ/η), smaller k raises θ —
+    all graceful-relevance knobs at zero recompiles — while ``nq_cap``
+    truncates the canonical query so it rides a *smaller compiled nq bucket*,
+    the one zero-recompile knob that shrinks the program actually run."""
+
+    params: DynamicParams
+    nq_cap: int = 0  # keep only the top-nq_cap query terms by weight; 0 = no cap
+
+    def __post_init__(self) -> None:
+        _require(
+            isinstance(self.params, DynamicParams),
+            f"DegradationRung.params must be DynamicParams, got {type(self.params).__name__}",
+        )
+        _require(self.nq_cap >= 0, f"nq_cap must be >= 0 (0 = no cap), got {self.nq_cap!r}")
+
+
+def validate_degradation_ladder(
+    rungs, static: Optional["StaticConfig"] = None
+) -> tuple[DegradationRung, ...]:
+    """Validate a degradation ladder and return it as ``DegradationRung``s.
+
+    ``rungs`` may mix bare ``DynamicParams`` (no term cap) and
+    ``DegradationRung``s. Rung 0 is the full-quality point; walking down the
+    ladder must never get *more* expensive, so k and every set ``nq_cap`` must
+    be non-increasing (a rung after a capped rung must itself be capped at or
+    below that cap). With ``static`` given, every rung must be servable by the
+    compiled program (k ≤ k_max)."""
+    out = []
+    for i, r in enumerate(rungs):
+        if isinstance(r, DynamicParams):
+            r = DegradationRung(r)
+        _require(
+            isinstance(r, DegradationRung),
+            f"ladder rung {i} must be DynamicParams or DegradationRung, "
+            f"got {type(r).__name__}",
+        )
+        if static is not None:
+            r.params.validate_for(static)
+        out.append(r)
+    _require(bool(out), "degradation ladder must have at least one rung (the full-quality point)")
+    for i in range(1, len(out)):
+        prev, cur = out[i - 1], out[i]
+        _require(
+            cur.params.k <= prev.params.k,
+            f"ladder rung {i} raises k ({prev.params.k} -> {cur.params.k}); "
+            "degradation must walk toward cheaper points, so k is non-increasing",
+        )
+        if prev.nq_cap:
+            _require(
+                0 < cur.nq_cap <= prev.nq_cap,
+                f"ladder rung {i} relaxes nq_cap ({prev.nq_cap} -> {cur.nq_cap or 'uncapped'}); "
+                "once a rung caps query terms, every later rung must cap at or below it",
+            )
+    return tuple(out)
+
+
+@dataclass(frozen=True)
 class StaticConfig:
     """Shape-bearing knobs: each value here sizes an array or selects a code
     path in the compiled program, so changing one means re-jitting."""

@@ -20,12 +20,20 @@ committed manifest, and --swap-mid-run swaps ALL shards under one epoch.
 static/dynamic split (DESIGN.md §9) serves every point through the one compiled
 ladder, zero recompiles.
 
+``--slo-p99-ms`` / ``--deadline-ms`` / ``--tenant-quota`` turn on the SLO
+control plane (DESIGN.md §10): the controller walks overloaded traffic down the
+degradation ladder to hold the served p99, queued requests past their deadline
+fail fast with ``DeadlineExceeded`` instead of being scored, and per-tenant
+token buckets reject over-quota traffic at admission.
+
   PYTHONPATH=src python -m repro.launch.serve --n-docs 16384 --requests 128
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/lsp_index  # save, then mmap
   PYTHONPATH=src python -m repro.launch.serve --swap-mid-run
   PYTHONPATH=src python -m repro.launch.serve --no-buckets --cache-size 0  # old engine
   PYTHONPATH=src python -m repro.launch.serve --shards 4  # host-loop transport
   PYTHONPATH=src python -m repro.launch.serve --sweep-k 1,5,10  # dynamic overrides
+  PYTHONPATH=src python -m repro.launch.serve --slo-p99-ms 50 --deadline-ms 25
+  PYTHONPATH=src python -m repro.launch.serve --tenant-quota 'default=100/20,teamA=500'
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
       PYTHONPATH=src python -m repro.launch.serve --shards 4  # shard_map transport
 """
@@ -47,6 +55,24 @@ from repro.index.store import (
     save_index,
     save_sharded_index,
 )
+from repro.serve import AdmissionConfig, DeadlineExceeded, SLOConfig, TenantQuota
+
+
+def parse_tenant_quotas(spec: str) -> AdmissionConfig:
+    """Parse ``'tenant=rate[/burst],...'``; the tenant name ``default`` sets the
+    quota applied to every tenant not listed explicitly."""
+    quotas, default_quota = {}, None
+    for item in spec.split(","):
+        name, sep, rb = item.partition("=")
+        if not sep or not name.strip():
+            raise ValueError(f"bad --tenant-quota item {item!r}; want 'tenant=rate[/burst]'")
+        rate, _, burst = rb.partition("/")
+        q = TenantQuota(rate=float(rate), burst=float(burst) if burst else 0.0)
+        if name.strip() == "default":
+            default_quota = q
+        else:
+            quotas[name.strip()] = q
+    return AdmissionConfig(quotas=quotas, default_quota=default_quota)
 
 
 def main() -> None:
@@ -75,6 +101,15 @@ def main() -> None:
     p.add_argument("--sweep-k", default=None,
                    help="comma-separated k values (each <= --k) replayed as "
                         "per-request DynamicParams overrides, zero recompiles")
+    p.add_argument("--slo-p99-ms", type=float, default=0.0,
+                   help="SLO controller target: degrade per-request params under "
+                        "queue/latency pressure to hold served p99 under this (0 = off)")
+    p.add_argument("--deadline-ms", type=float, default=0.0,
+                   help="per-request deadline: queued requests past it fail fast "
+                        "with DeadlineExceeded, never scored (0 = none)")
+    p.add_argument("--tenant-quota", default=None,
+                   help="admission quotas 'tenant=rate[/burst],...' in requests/s; "
+                        "tenant 'default' covers unlisted tenants")
     args = p.parse_args()
 
     ccfg = CorpusConfig(n_docs=args.n_docs, vocab=args.vocab, n_topics=32, seed=0)
@@ -137,9 +172,19 @@ def main() -> None:
         mesh=mesh,
     )
     batch_buckets = [args.max_batch] if args.no_buckets else None
+    serve_kw = {}
+    if args.slo_p99_ms:
+        serve_kw["slo"] = SLOConfig(p99_ms=args.slo_p99_ms)
+    if args.deadline_ms or args.tenant_quota:
+        adm = (parse_tenant_quotas(args.tenant_quota) if args.tenant_quota
+               else AdmissionConfig())
+        serve_kw["admission"] = AdmissionConfig(
+            default_deadline_ms=args.deadline_ms,
+            quotas=adm.quotas, default_quota=adm.default_quota,
+        )
     eng = retr.serve(
         max_batch=args.max_batch, nq_max=64, batch_buckets=batch_buckets,
-        cache_size=args.cache_size, warmup=not args.no_warmup,
+        cache_size=args.cache_size, warmup=not args.no_warmup, **serve_kw,
     )
     print(f"[serve] backend {retr.backend_name}, buckets {eng.ladder}, cache={args.cache_size}")
     queries = make_queries(ccfg, corpus, args.requests)
@@ -150,8 +195,14 @@ def main() -> None:
         print(f"[serve] hot-swapped to epoch {epoch} "
               f"({eng.stats.summary()['last_swap_ms']:.0f} ms) with traffic in flight")
         futs += [eng.search(SearchRequest(t, w)) for t, w in queries[half:]]
+    shed = 0
     for f in futs:
-        f.result(timeout=600)
+        try:
+            f.result(timeout=600)
+        except DeadlineExceeded:
+            shed += 1
+    if shed:
+        print(f"[serve] {shed} queued requests shed at their deadline (typed, never scored)")
     if args.sweep_k:
         ks = [int(v) for v in args.sweep_k.split(",")]
         t0 = time.perf_counter()
@@ -164,7 +215,10 @@ def main() -> None:
             for kv in ks for t, w in queries
         ]
         for f in sweep:
-            f.result(timeout=600)
+            try:
+                f.result(timeout=600)
+            except DeadlineExceeded:
+                pass
         print(f"[serve] dynamic sweep k={ks}: {len(sweep)} requests in "
               f"{time.perf_counter() - t0:.1f}s, recompiles={live.n_traces() - before}")
     eng.shutdown()
@@ -174,6 +228,11 @@ def main() -> None:
     print(f"[serve] buckets used {s['bucket_batches']} | "
           f"cache hit rate {s['cache_hit_rate']:.2f} ({s['cache_hits']}/{s['cache_hits'] + s['cache_misses']}) | "
           f"swaps {s['swaps']} | failures {s['failures']}")
+    if args.slo_p99_ms or args.deadline_ms or args.tenant_quota:
+        print(f"[serve] slo: degraded {s['degraded']} | "
+              f"deadline_expired {s['deadline_expired']} | "
+              f"quota_rejected {s['quota_rejected']} | rejected {s['rejected']}"
+              + (f" | level {s.get('slo_level')}" if args.slo_p99_ms else ""))
 
 
 if __name__ == "__main__":

@@ -1,8 +1,44 @@
 """Scale-out serving layer: bucketed batching, result caching, resilient pipeline
-(DESIGN.md §6)."""
+(DESIGN.md §6), and the SLO control plane — admission control, deadlines,
+priority lanes, adaptive degradation, fault injection (DESIGN.md §10)."""
 
+from repro.serve.admission import (
+    AdmissionConfig,
+    AdmissionController,
+    TenantQuota,
+    TokenBucket,
+)
 from repro.serve.buckets import Bucket, BucketLadder
 from repro.serve.cache import QueryResultCache
+from repro.serve.chaos import ChaosConfig, ChaosFault, ChaosInjector, ChaosRetriever
 from repro.serve.engine import RetrievalEngine, ServeStats
+from repro.serve.errors import (
+    AdmissionRejected,
+    DeadlineExceeded,
+    EngineShutdown,
+    ServeError,
+)
+from repro.serve.slo import SLOConfig, SLOController, default_degradation_ladder
 
-__all__ = ["Bucket", "BucketLadder", "QueryResultCache", "RetrievalEngine", "ServeStats"]
+__all__ = [
+    "AdmissionConfig",
+    "AdmissionController",
+    "AdmissionRejected",
+    "Bucket",
+    "BucketLadder",
+    "ChaosConfig",
+    "ChaosFault",
+    "ChaosInjector",
+    "ChaosRetriever",
+    "DeadlineExceeded",
+    "EngineShutdown",
+    "QueryResultCache",
+    "RetrievalEngine",
+    "SLOConfig",
+    "SLOController",
+    "ServeError",
+    "ServeStats",
+    "TenantQuota",
+    "TokenBucket",
+    "default_degradation_ladder",
+]

@@ -1,12 +1,14 @@
-"""Bucketed batched retrieval serving engine (DESIGN.md §6, §9).
+"""Bucketed batched retrieval serving engine (DESIGN.md §6, §9, §10).
 
-Request flow: search(SearchRequest) -> canonicalize + result-cache probe ->
-bounded batching queue (blocking put = backpressure) -> smallest shape bucket
-covering the collected batch (batch × nq ladder; each bucket is its own
-precompiled XLA program) -> retriever -> futures of SearchResponse + cache
-fill. A lone query runs the batch-1 program instead of paying max_batch-padded
-compute; bucket padding is result-invariant (sentinel terms and empty rows
-score nothing).
+Request flow: search(SearchRequest) -> admission (tenant token-bucket quota,
+deadline stamping, priority lane) -> canonicalize + result-cache probe ->
+bounded two-lane batching queue (blocking put = backpressure; a deadline that
+expires while blocked or queued fails fast with ``DeadlineExceeded``, never
+scored) -> smallest shape bucket covering the collected batch (batch × nq
+ladder; each bucket is its own precompiled XLA program) -> retriever ->
+futures of SearchResponse + cache fill. A lone query runs the batch-1 program
+instead of paying max_batch-padded compute; bucket padding is result-invariant
+(sentinel terms and empty rows score nothing).
 
 Dynamic parameters (DESIGN.md §9): a retriever advertising
 ``supports_dynamic`` (``core.lsp.jit_search``, ``ShardedRetriever``) serves
@@ -14,11 +16,23 @@ mixed per-request ``DynamicParams`` overrides through ONE bucket ladder — the
 overrides ride the batch as per-row traced arrays, so no extra programs
 compile. Cache keys include the dynamic-params bytes: distinct points never
 share an entry. ``SearchResponse`` carries provenance (epoch, cache_hit, the
-bucket that ran, θ and visit counters).
+bucket that ran, θ and visit counters, degraded/params_served).
 
-Failure semantics: a retriever exception fails exactly the futures of the batch
-that hit it and the loop keeps serving; submit() after shutdown() raises
-RuntimeError; shutdown() drains the queue and fails still-queued requests.
+SLO control (DESIGN.md §10): with ``slo=SLOConfig(...)`` the engine runs a
+feedback controller that watches queue depth and the windowed p99 of served
+requests and, under pressure, walks the effective per-request params down a
+validated degradation ladder (tighter η/μ → capped query terms riding a
+smaller nq bucket → smaller k), recovering with hysteresis. Degradation is
+resolved at admission time, so the cache key always matches the point served.
+Priority lanes: ``interactive`` requests preempt ``batch`` at every collect
+step. ``admission=AdmissionConfig(...)`` adds per-tenant token buckets
+(``AdmissionRejected`` raised synchronously) and a default deadline.
+
+Failure semantics: a retriever exception (or an injected ``chaos`` fault)
+fails exactly the futures of the batch that hit it and the loop keeps serving;
+search() after shutdown() raises ``EngineShutdown``; shutdown() drains both
+lanes and fails still-queued requests with ``EngineShutdown`` carrying each
+request's id, so clients can tell shed load from crashes.
 
 Index lifecycle: swap_index()/swap_retriever() hot-swap the retriever with zero
 downtime — the replacement is built and warmed on the calling thread while the
@@ -27,13 +41,16 @@ between batches. Cache keys carry the index epoch: in-flight batches fill the
 cache under the epoch they were served at, so results computed against a
 retired corpus can never resurface after a swap.
 
-End-to-end latency percentiles (the paper's MRT metric at serving level),
-batch/bucket counts and cache hit/miss counters live in ServeStats, all
-mutated under one lock.
+End-to-end latency percentiles (the paper's MRT metric at serving level) cover
+*served* requests only — rejections, sheds and deadline expiries have their
+own counters and never enter the latency window, so a rejection-heavy burst
+cannot make p50/p99 look better. Queue-depth and SLO-level gauges ride
+``ServeStats.summary()``.
 """
 
 from __future__ import annotations
 
+import itertools
 import os
 import queue
 import threading
@@ -49,8 +66,12 @@ import numpy as np
 from repro.api.types import SearchRequest, SearchResponse
 from repro.core.config import DynamicParams
 from repro.core.query import QueryBatch, canonical_query, make_query_batch, query_key
+from repro.serve.admission import LANE_INTERACTIVE, AdmissionConfig, AdmissionController
 from repro.serve.buckets import Bucket, BucketLadder
 from repro.serve.cache import QueryResultCache
+from repro.serve.chaos import ChaosInjector
+from repro.serve.errors import AdmissionRejected, DeadlineExceeded, EngineShutdown
+from repro.serve.slo import SLOConfig, SLOController
 
 _EMPTY_QUERY = (np.zeros(0, np.int32), np.zeros(0, np.float32))
 
@@ -60,7 +81,20 @@ class ServeStats:
     """Serving metrics. Latencies live in a bounded ring buffer (percentiles are over
     the most recent window) so a long-running engine does not grow without limit.
     Counters are mutated on the engine thread AND caller threads (cache hits resolve
-    in submit(); summary() reads from anywhere) — everything shares one lock."""
+    in search(); summary() reads from anywhere) — everything shares one lock.
+
+    Counter taxonomy (each request lands in exactly one):
+      requests          served (a result was produced; only these enter the
+                        latency window — shed/rejected traffic must not skew
+                        p50/p99 in either direction)
+      failures          futures failed by a retriever/chaos exception
+      deadline_expired  failed fast with DeadlineExceeded, never scored
+      quota_rejected    refused at admission (AdmissionRejected), never queued
+      rejected          shed at shutdown (EngineShutdown) or post-stop submit
+      degraded          subset of ``requests`` served below the requested point
+
+    Gauges (live callables registered by the engine, evaluated at summary()
+    time): ``queue_depth``, ``slo_level``."""
 
     window: int = 16384
     latencies_ms: deque = field(default=None)
@@ -70,6 +104,9 @@ class ServeStats:
     cache_misses: int = 0
     failures: int = 0
     rejected: int = 0
+    deadline_expired: int = 0
+    quota_rejected: int = 0
+    degraded: int = 0
     swaps: int = 0
     last_swap_ms: float = 0.0
     bucket_batches: dict = field(default_factory=dict)  # (batch, nq) -> count
@@ -78,13 +115,20 @@ class ServeStats:
         if self.latencies_ms is None:
             self.latencies_ms = deque(maxlen=self.window)
         self._lock = threading.Lock()
+        self._gauges: dict = {}
 
-    def record(self, latency_ms: float, cache_hit: bool = False) -> None:
+    def register_gauge(self, name: str, fn: Callable[[], float]) -> None:
+        """Expose a live reading (queue depth, SLO level, ...) in summary()."""
+        self._gauges[name] = fn
+
+    def record(self, latency_ms: float, cache_hit: bool = False, degraded: bool = False) -> None:
         with self._lock:
             self.latencies_ms.append(latency_ms)
             self.requests += 1
             if cache_hit:
                 self.cache_hits += 1
+            if degraded:
+                self.degraded += 1
 
     def record_cache_miss(self) -> None:
         with self._lock:
@@ -104,6 +148,16 @@ class ServeStats:
         with self._lock:
             self.rejected += n
 
+    def record_deadline_expired(self, n: int = 1) -> None:
+        # deliberately does NOT touch the latency window: a fast-failed request
+        # has a tiny "latency" that would drag p50/p99 down under overload
+        with self._lock:
+            self.deadline_expired += n
+
+    def record_quota_rejected(self, n: int = 1) -> None:
+        with self._lock:
+            self.quota_rejected += n
+
     def record_swap(self, latency_ms: float) -> None:
         with self._lock:
             self.swaps += 1
@@ -121,11 +175,14 @@ class ServeStats:
         with self._lock:
             lat = np.asarray(self.latencies_ms, dtype=np.float64)
             probes = self.cache_hits + self.cache_misses
-            return {
+            out = {
                 "requests": self.requests,
                 "batches": self.batches,
                 "failures": self.failures,
                 "rejected": self.rejected,
+                "deadline_expired": self.deadline_expired,
+                "quota_rejected": self.quota_rejected,
+                "degraded": self.degraded,
                 "cache_hits": self.cache_hits,
                 "cache_misses": self.cache_misses,
                 "cache_hit_rate": self.cache_hits / probes if probes else 0.0,
@@ -136,6 +193,12 @@ class ServeStats:
                 "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
                 "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0,
             }
+        for name, fn in self._gauges.items():  # outside the lock: gauges own their sync
+            try:
+                out[name] = fn()
+            except Exception:  # noqa: BLE001 — a dead gauge must not break summary()
+                out[name] = None
+        return out
 
 
 @dataclass(frozen=True)
@@ -152,6 +215,23 @@ class _Record:
     params: Optional[DynamicParams]
     bucket: tuple
     shard_candidates: Optional[np.ndarray]
+    degraded: bool = False
+
+
+@dataclass
+class _Item:
+    """One admitted request riding the queue."""
+
+    t0: float  # admission timestamp (monotonic)
+    tids: np.ndarray  # canonical, possibly nq-capped by the SLO controller
+    ws: np.ndarray
+    eff: Optional[DynamicParams]  # effective override to serve (None = defaults)
+    degraded: bool  # served below the requested/default point?
+    key: Optional[bytes]  # cache key sans epoch (None = cache off)
+    fut: Future
+    request_id: str
+    expiry: Optional[float]  # absolute monotonic deadline (None = none)
+    lane: int
 
 
 def _response_from(rec: _Record, epoch: int, cache_hit: bool) -> SearchResponse:
@@ -166,6 +246,8 @@ def _response_from(rec: _Record, epoch: int, cache_hit: bool) -> SearchResponse:
         cache_hit=cache_hit,
         bucket=rec.bucket,
         shard_candidates=None if rec.shard_candidates is None else rec.shard_candidates.copy(),
+        degraded=rec.degraded,
+        params_served=rec.params,
     )
 
 
@@ -196,12 +278,18 @@ class RetrievalEngine:
 
     ``batch_buckets=[max_batch]`` + ``cache_size=0`` reproduces the pre-bucketing
     single-shape engine (every batch padded to max_batch, no memoization) — the
-    serving benchmark's baseline arm. ``queue_depth`` bounds the batching queue;
-    a full queue blocks submit() (backpressure) instead of growing unboundedly.
+    serving benchmark's baseline arm. ``queue_depth`` bounds each lane of the
+    batching queue; a full lane blocks search() (backpressure) instead of
+    growing unboundedly, and a deadline that expires while blocked fails fast.
 
     ``retriever_factory`` (LSPIndex -> retriever) enables ``swap_index``: the
     engine can then rebuild its retriever from a freshly loaded index without a
     restart. A bare-retriever engine still supports ``swap_retriever``.
+
+    SLO layer (all optional, DESIGN.md §10): ``slo=SLOConfig(...)`` runs the
+    degradation controller, ``admission=AdmissionConfig(...)`` adds tenant
+    quotas + default deadlines, ``chaos=ChaosInjector(...)`` injects faults /
+    latency spikes inside the worker's failure-isolation boundary.
     """
 
     def __init__(
@@ -219,6 +307,9 @@ class RetrievalEngine:
         warmup: bool = False,
         retriever_factory: Callable | None = None,
         default_params: Optional[DynamicParams] = None,
+        admission: Optional[AdmissionConfig] = None,
+        slo: Optional[SLOConfig] = None,
+        chaos: Optional[ChaosInjector] = None,
     ):
         self.retriever = retriever
         self.retriever_factory = retriever_factory
@@ -233,7 +324,25 @@ class RetrievalEngine:
         self.max_wait_ms = max_wait_ms
         self.stats = ServeStats(window=stats_window)
         self.cache = QueryResultCache(cache_size) if cache_size else None
-        self._q: queue.Queue = queue.Queue(maxsize=queue_depth or 4 * self.max_batch)
+        depth = queue_depth or 4 * self.max_batch
+        self._q: queue.Queue = queue.Queue(maxsize=depth)  # interactive lane
+        self._q_batch: queue.Queue = queue.Queue(maxsize=depth)  # batch lane
+        self._seq = itertools.count()
+        self.admission = AdmissionController(admission) if admission is not None else None
+        self.chaos = chaos
+        self.slo = None
+        if slo is not None:
+            self.slo = SLOController(
+                slo,
+                queue_capacity=depth,
+                defaults=self._default_params() or DynamicParams(),
+                nq_max=self.nq_max,
+                static=getattr(retriever, "static_cfg", None),
+            )
+        self.stats.register_gauge("queue_depth", self._qsize)
+        self.stats.register_gauge(
+            "slo_level", lambda: self.slo.level if self.slo is not None else 0
+        )
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
@@ -248,18 +357,42 @@ class RetrievalEngine:
             retriever if retriever is not None else self.retriever, "defaults", None
         )
 
+    def _qsize(self) -> int:
+        return self._q.qsize() + self._q_batch.qsize()
+
+    def set_chaos(self, chaos: Optional[ChaosInjector]) -> None:
+        """Attach (or detach, with None) a fault injector on a live engine."""
+        self.chaos = chaos
+
     def search(self, request: SearchRequest) -> Future:
-        """Future of ``SearchResponse`` for one request. Raises RuntimeError once
-        the engine is shut down, ValueError for a per-request override the
-        serving retriever cannot honour. A cache hit resolves synchronously."""
+        """Future of ``SearchResponse`` for one request. Raises ``EngineShutdown``
+        once the engine is shut down, ``AdmissionRejected`` when the tenant's
+        quota is exhausted, ValueError for a per-request override the serving
+        retriever cannot honour. A cache hit resolves synchronously; a deadline
+        that expires pre-scoring resolves the future with ``DeadlineExceeded``."""
+        t0 = time.monotonic()
+        rid = request.request_id or f"req-{next(self._seq)}"
         if self._stop.is_set():
             self.stats.record_rejected()
-            raise RuntimeError("RetrievalEngine is shut down; search() rejected")
-        t0 = time.monotonic()
+            raise EngineShutdown(
+                f"RetrievalEngine is shut down; request {rid} rejected", request_id=rid
+            )
+        # 1. quota (front door: an empty bucket costs the worker nothing)
+        if self.admission is not None:
+            try:
+                self.admission.admit(request.tenant, rid)
+            except AdmissionRejected:
+                self.stats.record_quota_rejected()
+                raise
+            expiry = self.admission.expiry(request.deadline_ms, t0)
+        else:
+            expiry = None if request.deadline_ms is None else t0 + request.deadline_ms / 1e3
+        # 2. per-request override validation
         params = request.params
+        retr = self.retriever  # racy read is fine: validation only
+        dynamic_ok = getattr(retr, "supports_dynamic", False)
         if params is not None:
-            retr = self.retriever  # racy read is fine: validation only
-            if not getattr(retr, "supports_dynamic", False):
+            if not dynamic_ok:
                 raise ValueError(
                     "per-request DynamicParams need a dynamic retriever "
                     "(core.lsp.jit_search / ShardedRetriever / repro.api.Retriever); "
@@ -268,38 +401,63 @@ class RetrievalEngine:
             scfg = getattr(retr, "static_cfg", None)
             if scfg is not None:
                 params.validate_for(scfg)
-        t, w = canonical_query(request.tids, request.weights, self.nq_max)
+        # 3. SLO degradation, resolved HERE so the cache key matches the point served
+        eff, degraded, cap = params, False, 0
+        if self.slo is not None:
+            eff, degraded, cap = self.slo.resolve(params, self._default_params() or DynamicParams())
+            if not dynamic_ok:
+                # a fixed-config retriever can't take params; only the term cap applies
+                eff, degraded = params, degraded and bool(cap)
+        nq_cap = min(cap, self.nq_max) if cap else self.nq_max
+        t, w = canonical_query(request.tids, request.weights, nq_cap)
         fut: Future = Future()
         key = None
         if self.cache is not None:
             # the key carries the dynamic-params bytes: distinct points NEVER
             # share an entry (an override changes θ/pruning/k, hence the result)
-            eff = params or self._default_params()
-            qk = (eff.key_bytes() if eff is not None else b"") + query_key(t, w)
+            point = eff or self._default_params()
+            qk = (point.key_bytes() if point is not None else b"") + query_key(t, w)
             # probe under the flip lock: a swap cannot retire the epoch between the
             # epoch read and the cache lookup, so a stale hit is impossible even in
             # the submit-vs-swap race window
             with self._retriever_lock:
-                key = (self._epoch, qk)
-                hit = self.cache.get(key)
+                cache_key = (self._epoch, qk)
+                hit = self.cache.get(cache_key)
             if hit is not None:
-                self.stats.record((time.monotonic() - t0) * 1e3, cache_hit=True)
-                _try_set_result(fut, _response_from(hit, epoch=key[0], cache_hit=True))
+                self.stats.record((time.monotonic() - t0) * 1e3, cache_hit=True,
+                                  degraded=hit.degraded)
+                _try_set_result(fut, _response_from(hit, epoch=cache_key[0], cache_hit=True))
                 return fut
             self.stats.record_cache_miss()
             key = qk  # the worker re-keys with the epoch its batch is served at
-        item = (t0, t, w, params, key, fut)
+        item = _Item(
+            t0=t0, tids=t, ws=w, eff=eff, degraded=degraded, key=key, fut=fut,
+            request_id=rid, expiry=expiry, lane=AdmissionController.lane(request.priority),
+        )
+        lane_q = self._q if item.lane == LANE_INTERACTIVE else self._q_batch
         while True:
             if self._stop.is_set():
                 self.stats.record_rejected()
-                raise RuntimeError("RetrievalEngine is shut down; search() rejected")
+                raise EngineShutdown(
+                    f"RetrievalEngine is shut down; request {rid} rejected", request_id=rid
+                )
+            if item.expiry is not None and time.monotonic() > item.expiry:
+                # backpressure held the caller past its own deadline: fail fast
+                self.stats.record_deadline_expired()
+                _try_set_exception(fut, DeadlineExceeded(
+                    f"request {rid} deadline expired while blocked on backpressure",
+                    request_id=rid, deadline_ms=request.deadline_ms,
+                ))
+                return fut
             try:
-                self._q.put(item, timeout=0.05)
+                lane_q.put(item, timeout=0.05)
                 break
             except queue.Full:
                 continue  # backpressure: hold the caller until the worker drains
         if self._stop.is_set():
             self._drain()  # lost the race with shutdown's drain; fail it ourselves
+        if self.slo is not None:
+            self.slo.observe(self._qsize())  # queue growth degrades at admission speed
         return fut
 
     def submit(self, tids: np.ndarray, ws: np.ndarray) -> Future:
@@ -357,7 +515,7 @@ class RetrievalEngine:
         complete on the retriever they started with; the epoch bump retires every
         cache entry of the old index. Returns the new epoch."""
         if self._stop.is_set():
-            raise RuntimeError("RetrievalEngine is shut down; swap rejected")
+            raise EngineShutdown("RetrievalEngine is shut down; swap rejected")
         t0 = time.monotonic()
         with self._swap_lock:
             if warm:
@@ -395,16 +553,42 @@ class RetrievalEngine:
 
     # ---- engine thread ---------------------------------------------------------
 
+    def _get_any(self, timeout: float) -> _Item:
+        """Next item, interactive lane first — batch work is taken only when no
+        interactive request is waiting at that instant (lane preemption)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                return self._q.get_nowait()
+            except queue.Empty:
+                pass
+            try:
+                return self._q_batch.get_nowait()
+            except queue.Empty:
+                pass
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise queue.Empty
+            try:
+                # block briefly on the interactive lane so arrivals wake us; the
+                # batch lane is re-polled each slice
+                return self._q.get(timeout=min(remaining, 0.01))
+            except queue.Empty:
+                continue
+
     def _collect(self) -> list:
         items = []
         try:
-            items.append(self._q.get(timeout=0.1))
+            items.append(self._get_any(timeout=0.1))
         except queue.Empty:
             return items
         deadline = time.monotonic() + self.max_wait_ms / 1e3
-        while len(items) < self.max_batch and time.monotonic() < deadline:
+        while len(items) < self.max_batch:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
             try:
-                items.append(self._q.get(timeout=max(deadline - time.monotonic(), 0)))
+                items.append(self._get_any(timeout=remaining))
             except queue.Empty:
                 break
         return items
@@ -416,7 +600,27 @@ class RetrievalEngine:
                 self._serve_batch(items)
         self._drain()
 
+    def _expire(self, items: list) -> list:
+        """Fail (and drop) every item whose deadline passed while queued; these
+        are never scored and never enter the latency window."""
+        now = time.monotonic()
+        live = []
+        for it in items:
+            if it.expiry is not None and now > it.expiry:
+                self.stats.record_deadline_expired()
+                _try_set_exception(it.fut, DeadlineExceeded(
+                    f"request {it.request_id} deadline expired after "
+                    f"{(now - it.t0) * 1e3:.1f} ms in queue",
+                    request_id=it.request_id,
+                ))
+            else:
+                live.append(it)
+        return live
+
     def _serve_batch(self, items: list) -> None:
+        items = self._expire(items)
+        if not items:
+            return
         # snapshot (retriever, epoch) atomically: the whole batch scores on one index
         # and its cache fills are keyed to that same index's epoch — a swap landing
         # mid-batch neither mixes indexes nor lets old-index results into the new
@@ -425,13 +629,15 @@ class RetrievalEngine:
             retriever, epoch = self.retriever, self._epoch
         dynamic = getattr(retriever, "supports_dynamic", False)
         dflt = self._default_params(retriever) or DynamicParams()
-        bucket = self.ladder.select(len(items), max(len(t) for _, t, _, _, _, _ in items))
-        queries = [(t, w) for _, t, w, _, _, _ in items]
+        bucket = self.ladder.select(len(items), max(len(it.tids) for it in items))
+        queries = [(it.tids, it.ws) for it in items]
         while len(queries) < bucket.batch:
             queries.append(_EMPTY_QUERY)
         qb = make_query_batch(queries, self.vocab, nq_max=bucket.nq)
-        resolved = [params or dflt for _, _, _, params, _, _ in items]
+        resolved = [it.eff or dflt for it in items]
         try:
+            if self.chaos is not None:
+                self.chaos.on_batch(len(items))  # may stall or raise: same isolation
             if dynamic:
                 # mixed per-request overrides ride one program as per-row arrays
                 # (padding rows serve the defaults; their results are discarded)
@@ -451,12 +657,12 @@ class RetrievalEngine:
             nblk = None if nblk is None else np.asarray(nblk)
             shard_cand = None if shard_cand is None else np.asarray(shard_cand)
         except Exception as exc:  # noqa: BLE001 — isolate: fail this batch, keep serving
-            for *_, fut in items:
-                _try_set_exception(fut, exc)
+            for it in items:
+                _try_set_exception(it.fut, exc)
             self.stats.record_failures(len(items))
             return
         now = time.monotonic()
-        for i, (t0, _, _, params, key, fut) in enumerate(items):
+        for i, it in enumerate(items):
             k_i = min(resolved[i].k, ids.shape[1]) if dynamic else ids.shape[1]
             rec = _Record(
                 ids=ids[i, :k_i].copy(),
@@ -464,30 +670,39 @@ class RetrievalEngine:
                 theta=None if theta is None else float(theta[i]),
                 nsb=None if nsb is None else int(nsb[i]),
                 nblk=None if nblk is None else int(nblk[i]),
-                params=resolved[i] if dynamic else params,
+                params=resolved[i] if dynamic else it.eff,
                 bucket=(bucket.batch, bucket.nq),
                 shard_candidates=None if shard_cand is None else shard_cand[i].copy(),
+                degraded=it.degraded,
             )
-            if self.cache is not None and key is not None:
+            if self.cache is not None and it.key is not None:
                 # fill only while our epoch is still current (checked under the flip
                 # lock): a batch that completes after a swap must not park dead
                 # old-epoch rows in the LRU, where they would evict live entries
                 with self._retriever_lock:
                     if epoch == self._epoch:
-                        self.cache.put((epoch, key), rec)
-            self.stats.record((now - t0) * 1e3)
+                        self.cache.put((epoch, it.key), rec)
+            lat_ms = (now - it.t0) * 1e3
+            self.stats.record(lat_ms, degraded=it.degraded)
+            if self.slo is not None:
+                self.slo.record(lat_ms)
             # _response_from copies: don't pin the batch array, and don't let the
             # cached record alias the caller's result (a caller mutating
             # ids/scores in place must not corrupt what later hits are served from)
-            _try_set_result(fut, _response_from(rec, epoch=epoch, cache_hit=False))
+            _try_set_result(it.fut, _response_from(rec, epoch=epoch, cache_hit=False))
         self.stats.record_batch(bucket)
+        if self.slo is not None:
+            self.slo.observe(self._qsize())  # served-latency view: recovery happens here
 
     def _drain(self) -> None:
-        exc = RuntimeError("RetrievalEngine shut down before serving this request")
-        while True:
-            try:
-                *_, fut = self._q.get_nowait()
-            except queue.Empty:
-                return
-            _try_set_exception(fut, exc)
-            self.stats.record_rejected()
+        for lane_q in (self._q, self._q_batch):
+            while True:
+                try:
+                    it = lane_q.get_nowait()
+                except queue.Empty:
+                    break
+                _try_set_exception(it.fut, EngineShutdown(
+                    f"RetrievalEngine shut down before serving request {it.request_id}",
+                    request_id=it.request_id,
+                ))
+                self.stats.record_rejected()

@@ -1,0 +1,616 @@
+"""SLO control plane (DESIGN.md §10): degradation ladder validation, controller
+state machine, admission (quotas, deadlines, lanes), typed failure semantics,
+and chaos/backpressure property tests (every future resolves exactly once)."""
+
+import threading
+import time
+from collections import Counter
+
+import numpy as np
+import pytest
+
+import proptest as pt
+import repro.serve.engine as engine_mod
+from repro.core.config import (
+    ConfigError,
+    DegradationRung,
+    DynamicParams,
+    StaticConfig,
+    validate_degradation_ladder,
+)
+from repro.api import SearchRequest
+from repro.serve import (
+    AdmissionConfig,
+    AdmissionRejected,
+    ChaosConfig,
+    ChaosFault,
+    ChaosInjector,
+    ChaosRetriever,
+    DeadlineExceeded,
+    EngineShutdown,
+    RetrievalEngine,
+    SLOConfig,
+    SLOController,
+    TenantQuota,
+    TokenBucket,
+    default_degradation_ladder,
+)
+
+
+def _dyn_echo(tag: float = 0.0, delay_ms: float = 0.0):
+    """Dynamic-capable echo retriever: ids = first 4 canonical term ids, scores =
+    their weights + ``tag`` (distinguishes index generations)."""
+
+    def retr(qb, dyn=None):
+        if delay_ms:
+            time.sleep(delay_ms / 1e3)
+        tids = np.asarray(qb.tids)
+        ws = np.asarray(qb.ws)
+        return tids[:, :4], ws[:, :4] + tag
+
+    retr.supports_dynamic = True
+    retr.defaults = DynamicParams(k=4)
+    return retr
+
+
+def _query(rng, n=6, vocab=512):
+    tids = rng.choice(vocab, n, replace=False).astype(np.int32)
+    ws = rng.random(n).astype(np.float32) + 0.1
+    return tids, ws
+
+
+# ---- degradation ladder validation (core/config) -----------------------------------
+
+
+def test_ladder_accepts_params_and_rungs_and_validates_monotonicity():
+    lad = validate_degradation_ladder(
+        [DynamicParams(k=10), DegradationRung(DynamicParams(k=10, mu=0.3), nq_cap=32),
+         DegradationRung(DynamicParams(k=5, mu=0.2), nq_cap=16)]
+    )
+    assert all(isinstance(r, DegradationRung) for r in lad) and len(lad) == 3
+    with pytest.raises(ConfigError, match="at least one rung"):
+        validate_degradation_ladder([])
+    with pytest.raises(ConfigError, match="raises k"):
+        validate_degradation_ladder([DynamicParams(k=5), DynamicParams(k=10)])
+    with pytest.raises(ConfigError, match="relaxes nq_cap"):
+        validate_degradation_ladder(
+            [DegradationRung(DynamicParams(), nq_cap=16), DegradationRung(DynamicParams())]
+        )
+    with pytest.raises(ConfigError, match="k=20 exceeds"):
+        validate_degradation_ladder([DynamicParams(k=20)], static=StaticConfig(k_max=10))
+    with pytest.raises(ConfigError, match="nq_cap"):
+        DegradationRung(DynamicParams(), nq_cap=-1)
+    with pytest.raises(ConfigError, match="must be DynamicParams"):
+        DegradationRung("not-params")
+
+
+def test_default_ladder_is_monotone_and_ends_cheaper():
+    d = DynamicParams(k=10)
+    lad = default_degradation_ladder(d, nq_max=64)
+    assert lad[0].params == d and lad[0].nq_cap == 0
+    ks = [r.params.k for r in lad]
+    assert ks == sorted(ks, reverse=True) and ks[-1] < ks[0]
+    assert lad[-1].params.mu < d.mu and lad[-1].params.eta < d.eta
+    assert lad[-1].nq_cap and lad[-1].nq_cap <= lad[-2].nq_cap
+
+
+# ---- controller state machine ------------------------------------------------------
+
+
+def _controller(**kw):
+    now = [0.0]
+    cfg = SLOConfig(p99_ms=kw.pop("p99_ms", 100.0), interval_ms=10.0,
+                    recover_after=3, queue_high=0.5, recover_margin=0.8, **kw)
+    c = SLOController(cfg, queue_capacity=10, defaults=DynamicParams(k=10),
+                      nq_max=64, clock=lambda: now[0])
+    return c, now
+
+
+def test_controller_degrades_on_queue_pressure_and_recovers_with_hysteresis():
+    c, now = _controller()
+    assert c.level == 0
+    # queue over the high-watermark: one decision interval -> one rung down
+    now[0] += 0.02
+    assert c.observe(8) == 1
+    now[0] += 0.02
+    assert c.observe(8) == 2
+    # within the rate-limit window: no further step
+    assert c.observe(8) == 2
+    # healthy intervals: recovery needs recover_after=3 consecutive ones PER rung
+    for _ in range(2):
+        now[0] += 0.02
+        assert c.observe(0) == 2
+    now[0] += 0.02
+    assert c.observe(0) == 1  # third healthy interval: one rung up
+    for _ in range(2):
+        now[0] += 0.02
+        assert c.observe(0) == 1  # streak restarts after each recovery step
+    now[0] += 0.02
+    assert c.observe(0) == 0
+    snap = c.snapshot()
+    assert snap["degrade_steps"] == 2 and snap["recover_steps"] == 2
+
+
+def test_controller_degrades_on_p99_pressure_and_clamps_at_ladder_ends():
+    c, now = _controller(p99_ms=50.0)
+    for _ in range(20):
+        c.record(200.0)  # windowed p99 far above target
+    for i in range(10):  # more intervals than rungs: clamps at the last rung
+        now[0] += 0.02
+        c.observe(0)
+    assert c.level == len(c.ladder) - 1
+    # pressure gone but p99 window still hot: hysteresis refuses to recover
+    c._lat.clear()
+    for _ in range(20):
+        c.record(49.0)  # below target but above recover_margin * target
+    for _ in range(10):
+        now[0] += 0.02
+        c.observe(0)
+    assert c.level == len(c.ladder) - 1
+    c._lat.clear()
+    for _ in range(20):
+        c.record(10.0)  # comfortably under margin: recovery proceeds
+    for _ in range(40):
+        now[0] += 0.02
+        c.observe(0)
+    assert c.level == 0
+
+
+def test_controller_resolve_takes_cheaper_value_per_axis():
+    c, now = _controller()
+    d = DynamicParams(k=10)
+    assert c.resolve(None, d) == (None, False, 0)  # level 0: untouched
+    now[0] += 0.02
+    c.observe(10)
+    now[0] += 0.02
+    c.observe(10)  # level 2: rung with nq_cap
+    eff, degraded, cap = c.resolve(None, d)
+    assert degraded and cap > 0 and eff.mu < d.mu and eff.eta < d.eta
+    # a client already cheaper than the rung on one axis is never upgraded
+    cheap = DynamicParams(k=2, mu=0.01, eta=d.eta, beta=d.beta)
+    eff2, _, _ = c.resolve(cheap, d)
+    assert eff2.k == 2 and eff2.mu == 0.01 and eff2.eta < d.eta
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError, match="p99_ms"):
+        SLOConfig(p99_ms=0)
+    with pytest.raises(ValueError, match="queue_high"):
+        SLOConfig(queue_high=1.5)
+    with pytest.raises(ValueError, match="recover_after"):
+        SLOConfig(recover_after=0)
+
+
+# ---- admission: quotas, deadlines, lanes -------------------------------------------
+
+
+def test_token_bucket_burst_then_refill():
+    now = [0.0]
+    b = TokenBucket(TenantQuota(rate=10.0, burst=3.0), clock=lambda: now[0])
+    assert [b.try_acquire() for _ in range(4)] == [True, True, True, False]
+    now[0] += 0.1  # 10 req/s * 0.1s = 1 token back
+    assert b.try_acquire() and not b.try_acquire()
+    with pytest.raises(ValueError, match="rate"):
+        TenantQuota(rate=0.0)
+
+
+def test_per_tenant_quota_rejects_typed_and_isolates_tenants():
+    adm = AdmissionConfig(quotas={"a": TenantQuota(rate=1e-3, burst=2.0)})
+    eng = RetrievalEngine(_dyn_echo(), vocab=512, max_batch=2, nq_max=16,
+                          cache_size=0, admission=adm)
+    try:
+        rng = np.random.default_rng(0)
+        qs = [_query(rng) for _ in range(4)]
+        for t, w in qs[:2]:  # burst of 2 admitted
+            eng.search(SearchRequest(t, w, tenant="a")).result(timeout=30)
+        with pytest.raises(AdmissionRejected) as ei:
+            eng.search(SearchRequest(*qs[2], tenant="a", request_id="rq-a3"))
+        assert ei.value.tenant == "a" and ei.value.request_id == "rq-a3"
+        # tenant b (no quota configured, no default quota) is untouched
+        eng.search(SearchRequest(*qs[3], tenant="b")).result(timeout=30)
+        s = eng.stats.summary()
+        assert s["quota_rejected"] == 1 and s["requests"] == 3 and s["failures"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_default_quota_applies_to_unlisted_tenants():
+    adm = AdmissionConfig(default_quota=TenantQuota(rate=1e-3, burst=1.0))
+    eng = RetrievalEngine(_dyn_echo(), vocab=512, max_batch=2, nq_max=16,
+                          cache_size=0, admission=adm)
+    try:
+        rng = np.random.default_rng(1)
+        eng.search(SearchRequest(*_query(rng), tenant="x")).result(timeout=30)
+        with pytest.raises(AdmissionRejected):
+            eng.search(SearchRequest(*_query(rng), tenant="x"))
+        # ... but each tenant has its own bucket under the default quota
+        eng.search(SearchRequest(*_query(rng), tenant="y")).result(timeout=30)
+    finally:
+        eng.shutdown()
+
+
+def test_deadline_expired_in_queue_fails_fast_and_is_never_scored():
+    entered, release = threading.Event(), threading.Event()
+    seen_first_tids = []
+
+    def gated(qb, dyn=None):
+        seen_first_tids.extend(np.asarray(qb.tids)[:, 0].tolist())
+        entered.set()
+        release.wait(timeout=30)
+        return _dyn_echo()(qb)
+
+    gated.supports_dynamic = True
+    gated.defaults = DynamicParams(k=4)
+    eng = RetrievalEngine(gated, vocab=512, max_batch=1, nq_max=16,
+                          max_wait_ms=0.0, cache_size=0)
+    try:
+        rng = np.random.default_rng(2)
+        blocker = eng.search(SearchRequest(*_query(rng)))
+        assert entered.wait(timeout=30)
+        doomed = eng.search(SearchRequest(
+            np.array([13], np.int32), np.array([1.0], np.float32),
+            deadline_ms=30.0, request_id="doomed-1"))
+        time.sleep(0.08)  # let the deadline lapse while the worker is blocked
+        release.set()
+        blocker.result(timeout=30)
+        with pytest.raises(DeadlineExceeded) as ei:
+            doomed.result(timeout=30)
+        assert ei.value.request_id == "doomed-1"
+        assert isinstance(ei.value, TimeoutError)  # catchable as stdlib timeout too
+        assert 13 not in seen_first_tids  # expired request never reached the retriever
+        s = eng.stats.summary()
+        # satellite: expired requests are counted apart and kept OUT of the
+        # latency window — the served request alone defines p50/p99
+        assert s["deadline_expired"] == 1 and s["requests"] == 1
+        assert len(eng.stats.latencies_ms) == 1
+    finally:
+        release.set()
+        eng.shutdown()
+
+
+def test_deadline_expired_under_backpressure_fails_fast_without_blocking():
+    entered, release = threading.Event(), threading.Event()
+
+    def gated(qb, dyn=None):
+        entered.set()
+        release.wait(timeout=30)
+        return _dyn_echo()(qb)
+
+    gated.supports_dynamic = True
+    gated.defaults = DynamicParams(k=4)
+    eng = RetrievalEngine(gated, vocab=512, max_batch=1, nq_max=16,
+                          max_wait_ms=0.0, cache_size=0, queue_depth=1)
+    try:
+        rng = np.random.default_rng(3)
+        blocker = eng.search(SearchRequest(*_query(rng)))
+        assert entered.wait(timeout=30)
+        filler = eng.search(SearchRequest(*_query(rng)))  # occupies the lane slot
+        t0 = time.monotonic()
+        fut = eng.search(SearchRequest(*_query(rng), deadline_ms=60.0))
+        held_ms = (time.monotonic() - t0) * 1e3
+        assert held_ms < 5000  # returned long before any retriever progress
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=1)
+        release.set()
+        blocker.result(timeout=30)
+        filler.result(timeout=30)
+    finally:
+        release.set()
+        eng.shutdown()
+
+
+def test_interactive_lane_preempts_batch_lane():
+    entered, release = threading.Event(), threading.Event()
+    order = []
+
+    def gated(qb, dyn=None):
+        order.extend(int(v) for v in np.asarray(qb.tids)[:, 0])
+        if not entered.is_set():
+            entered.set()
+            release.wait(timeout=30)
+        return _dyn_echo()(qb)
+
+    gated.supports_dynamic = True
+    gated.defaults = DynamicParams(k=4)
+    eng = RetrievalEngine(gated, vocab=512, max_batch=1, nq_max=16,
+                          max_wait_ms=0.0, cache_size=0)
+    try:
+        q = lambda tid: SearchRequest(np.array([tid], np.int32), np.array([1.0], np.float32))
+        futs = [eng.search(q(1))]  # blocker: holds the worker inside the retriever
+        assert entered.wait(timeout=30)
+        futs += [eng.search(q(100 + i), ) for i in range(2)]  # interactive default
+        batch_reqs = [SearchRequest(np.array([200 + i], np.int32),
+                                    np.array([1.0], np.float32), priority="batch")
+                      for i in range(2)]
+        # enqueue batch work FIRST, interactive second: the worker must still
+        # drain interactive first once released
+        futs2 = [eng.search(r) for r in batch_reqs]
+        futs3 = [eng.search(q(300))]
+        release.set()
+        for f in futs + futs2 + futs3:
+            f.result(timeout=30)
+        served = [t for t in order if t != 1]
+        batch_pos = [served.index(t) for t in (200, 201)]
+        inter_pos = [served.index(t) for t in (100, 101, 300)]
+        assert max(inter_pos) < min(batch_pos), (
+            f"interactive must preempt batch: served order {served}")
+    finally:
+        release.set()
+        eng.shutdown()
+
+
+# ---- typed shutdown (satellite regression) -----------------------------------------
+
+
+def test_shutdown_fails_queued_futures_with_typed_engine_shutdown():
+    entered, release = threading.Event(), threading.Event()
+
+    def gated(qb, dyn=None):
+        entered.set()
+        release.wait(timeout=30)
+        return _dyn_echo()(qb)
+
+    gated.supports_dynamic = True
+    gated.defaults = DynamicParams(k=4)
+    eng = RetrievalEngine(gated, vocab=512, max_batch=1, nq_max=16,
+                          max_wait_ms=0.0, cache_size=0)
+    rng = np.random.default_rng(4)
+    blocker = eng.search(SearchRequest(*_query(rng)))
+    assert entered.wait(timeout=30)
+    queued = eng.search(SearchRequest(*_query(rng), request_id="q-late"))
+    shut = threading.Thread(target=eng.shutdown)
+    shut.start()
+    time.sleep(0.05)
+    release.set()
+    shut.join(timeout=30)
+    blocker.result(timeout=30)  # the in-flight batch still completes
+    exc = queued.exception(timeout=30)
+    assert isinstance(exc, EngineShutdown)  # typed: shed load, not a crash
+    assert isinstance(exc, RuntimeError)  # pre-typed catch-alls keep working
+    assert exc.request_id == "q-late"
+    # search() after shutdown raises the same type, with the request id
+    with pytest.raises(EngineShutdown) as ei:
+        eng.search(SearchRequest(*_query(rng), request_id="post-stop"))
+    assert ei.value.request_id == "post-stop"
+    assert eng.stats.summary()["rejected"] >= 2
+
+
+# ---- SLO controller end-to-end: degrade under burst, recover after -----------------
+
+
+def test_engine_degrades_under_burst_and_recovers():
+    slo = SLOConfig(p99_ms=10_000.0, queue_high=0.05, interval_ms=1.0,
+                    recover_after=2, recover_margin=1.0)
+    eng = RetrievalEngine(_dyn_echo(delay_ms=8.0), vocab=512, max_batch=4, nq_max=64,
+                          max_wait_ms=0.5, cache_size=0, queue_depth=64, slo=slo)
+    try:
+        rng = np.random.default_rng(5)
+        pool = [_query(rng, n=24) for _ in range(8)]
+        # sustained overload: arrivals outpace the ~2 ms/request service rate, so
+        # the queue backs up while later requests are still being admitted —
+        # degradation is resolved at admission, so only those see the new level
+        futs = []
+        for i in range(48):
+            futs.append(eng.search(SearchRequest(*pool[i % 8])))
+            time.sleep(0.001)
+        resps = [f.result(timeout=60) for f in futs]
+        assert eng.slo.snapshot()["degrade_steps"] >= 1
+        degraded = [r for r in resps if r.degraded]
+        assert degraded, "a backed-up queue must degrade some requests"
+        d0 = eng.slo.ladder[0].params
+        for r in degraded:
+            assert r.params_served is not None and r.params_served == r.params
+            assert (r.params_served.mu < d0.mu or r.params_served.eta < d0.eta
+                    or r.params_served.k < d0.k)
+        s = eng.stats.summary()
+        assert s["degraded"] == len(degraded) > 0
+        assert "queue_depth" in s and "slo_level" in s  # gauges ride summary()
+        # trickle: one at a time -> healthy intervals -> hysteresis walks back to 0
+        for i in range(60):
+            eng.search(SearchRequest(*pool[i % 8])).result(timeout=60)
+            if eng.slo.level == 0:
+                break
+            time.sleep(0.003)
+        assert eng.slo.level == 0, eng.slo.snapshot()
+        assert eng.slo.snapshot()["recover_steps"] >= 1
+        late = eng.search(SearchRequest(*pool[0])).result(timeout=60)
+        assert not late.degraded
+    finally:
+        eng.shutdown()
+
+
+def test_degraded_nq_cap_rides_smaller_bucket_and_distinct_cache_namespace():
+    """Force the capped rung: a 24-term query serves from the nq=16 bucket, and
+    its cache entry never answers a full-quality probe of the same query."""
+    ladder = [DegradationRung(DynamicParams(k=4)),
+              DegradationRung(DynamicParams(k=4, mu=0.3), nq_cap=16)]
+    slo = SLOConfig(p99_ms=10_000.0, queue_high=0.01, interval_ms=0.0,
+                    recover_after=10_000, ladder=ladder)
+    entered, release = threading.Event(), threading.Event()
+
+    def gated(qb, dyn=None):
+        entered.set()
+        release.wait(timeout=30)
+        return _dyn_echo()(qb)
+
+    gated.supports_dynamic = True
+    gated.defaults = DynamicParams(k=4)
+    eng = RetrievalEngine(gated, vocab=512, max_batch=1, nq_max=64,
+                          max_wait_ms=0.0, cache_size=32, slo=slo)
+    try:
+        rng = np.random.default_rng(6)
+        q = _query(rng, n=24)
+        blocker = eng.search(SearchRequest(*_query(rng)))
+        assert entered.wait(timeout=30)
+        # two queued requests push depth over the watermark -> level 1 at admission
+        probe1 = eng.search(SearchRequest(*_query(rng)))
+        probe2 = eng.search(SearchRequest(*q))
+        release.set()
+        for f in (blocker, probe1, probe2):
+            f.result(timeout=30)
+        r = probe2.result()
+        assert r.degraded and r.bucket[1] == 16  # capped: rode the small nq bucket
+        assert eng.slo.level >= 1
+        # full-quality resubmission (force level back to 0) must MISS: the key
+        # carries the effective params + capped query bytes
+        eng.slo._state.level = 0
+        r2 = eng.search(SearchRequest(*q)).result(timeout=30)
+        assert not r2.cache_hit and not r2.degraded and r2.bucket[1] == 64
+    finally:
+        release.set()
+        eng.shutdown()
+
+
+# ---- chaos -------------------------------------------------------------------------
+
+
+def test_chaos_retriever_forwards_dynamic_attrs_and_injects():
+    inner = _dyn_echo()
+    cr = ChaosRetriever(inner, ChaosConfig(fault_every=2))
+    assert cr.supports_dynamic and cr.defaults == inner.defaults
+    qb_like = __import__("repro.core.query", fromlist=["make_query_batch"]).make_query_batch(
+        [(np.array([1, 2], np.int32), np.array([1.0, 0.5], np.float32))], vocab=512)
+    cr(qb_like)  # batch 1: clean
+    with pytest.raises(ChaosFault):
+        cr(qb_like)  # batch 2: injected
+    assert cr.injector.summary()["faults_injected"] == 1
+    with pytest.raises(ValueError):
+        ChaosConfig(fault_every=-1)
+
+
+@pt.given(
+    fault_every=pt.integers(2, 5),
+    spike_every=pt.integers(0, 4),
+    tight_deadline_frac=pt.floats(0.0, 0.5),
+    n_threads=pt.integers(2, 3),
+    seed=pt.integers(0, 10_000),
+)
+def test_every_future_resolves_exactly_once_under_chaos_and_swap(
+    fault_every, spike_every, tight_deadline_frac, n_threads, seed
+):
+    """Satellite: under injected retriever faults + latency spikes + a mid-burst
+    swap + shutdown with work still queued, every future the engine handed out
+    resolves exactly once — a result or a typed error, no hangs, no double-set,
+    and no post-swap response served by the retired generation."""
+    double_sets = []
+    orig_r, orig_e = engine_mod._try_set_result, engine_mod._try_set_exception
+
+    def wr(fut, v):
+        if fut.done():
+            double_sets.append("result")
+        orig_r(fut, v)
+
+    def we(fut, e):
+        if fut.done():
+            double_sets.append("exc")
+        orig_e(fut, e)
+
+    engine_mod._try_set_result, engine_mod._try_set_exception = wr, we
+    chaos = ChaosInjector(ChaosConfig(fault_every=fault_every, spike_every=spike_every,
+                                      spike_ms=3.0, seed=seed))
+    eng = RetrievalEngine(_dyn_echo(tag=0.0, delay_ms=1.0), vocab=512, max_batch=4,
+                          nq_max=16, max_wait_ms=0.2, cache_size=16, queue_depth=8,
+                          chaos=chaos,
+                          admission=AdmissionConfig(default_deadline_ms=5_000.0))
+    futs, raised = [], []
+    resolved_counts = Counter()
+    post_swap = threading.Event()
+    lock = threading.Lock()
+    try:
+        rng = np.random.default_rng(seed)
+        pool = [_query(rng, vocab=512) for _ in range(6)]
+
+        def client(tseed):
+            crng = np.random.default_rng(tseed)
+            for i in range(10):
+                t, w = pool[int(crng.integers(0, len(pool)))]
+                dl = 1.0 if crng.random() < tight_deadline_frac else None
+                prio = "batch" if crng.random() < 0.3 else "interactive"
+                try:
+                    f = eng.search(SearchRequest(
+                        t, w, deadline_ms=dl, priority=prio,
+                        tenant=f"t{int(crng.integers(0, 2))}"))
+                except EngineShutdown:
+                    with lock:
+                        raised.append("shutdown")
+                    return
+                f.add_done_callback(lambda fu: resolved_counts.update([id(fu)]))
+                with lock:
+                    futs.append((f, post_swap.is_set()))
+
+        threads = [threading.Thread(target=client, args=(seed * 7 + s,))
+                   for s in range(n_threads)]
+        for t in threads:
+            t.start()
+        time.sleep(0.02)
+        eng.swap_retriever(_dyn_echo(tag=100.0, delay_ms=1.0), warm=False)
+        post_swap.set()
+        time.sleep(0.02)
+        eng.shutdown()  # mid-traffic: some futures are still queued
+        for t in threads:
+            t.join(timeout=30)
+            assert not t.is_alive()
+    finally:
+        eng.shutdown()
+        engine_mod._try_set_result, engine_mod._try_set_exception = orig_r, orig_e
+
+    assert not double_sets, f"double-resolved futures: {double_sets}"
+    kinds = Counter()
+    for f, was_post_swap in futs:
+        assert f.done(), "future left hanging"
+        exc = f.exception(timeout=1)
+        if exc is None:
+            kinds["served"] += 1
+            r = f.result()
+            if was_post_swap and not r.cache_hit:
+                assert r.epoch == 1 and float(r.scores[0]) > 50.0, (
+                    "post-swap request served by the retired generation")
+        else:
+            assert isinstance(exc, (ChaosFault, DeadlineExceeded, EngineShutdown)), exc
+            kinds[type(exc).__name__] += 1
+    # exactly-once: every future's done-callback fired exactly once
+    assert all(v == 1 for v in resolved_counts.values())
+    assert len(resolved_counts) == len(futs)
+    s = eng.stats.summary()
+    assert s["requests"] == kinds["served"]
+    assert s["failures"] == kinds.get("ChaosFault", 0)
+    assert s["deadline_expired"] == kinds.get("DeadlineExceeded", 0)
+    assert s["rejected"] == kinds.get("EngineShutdown", 0) + len(raised)
+
+
+def test_chaos_with_real_retriever_and_mid_burst_swap_index(tiny_index, tiny_corpus, tmp_path):
+    """swap_index (disk round-trip) while chaos faults fire: futures all resolve,
+    post-swap responses carry the new epoch, and serving continues throughout."""
+    from repro.core import jit_search
+    from repro.index.store import save_index
+
+    _, corpus, queries = tiny_corpus
+    scfg = StaticConfig(variant="lsp0", gamma=16, gamma0=4, k_max=10)
+    factory = lambda ix: jit_search(ix, scfg, impl="ref",
+                                    defaults=DynamicParams(k=10, beta=0.5))
+    eng = RetrievalEngine(factory(tiny_index), corpus.vocab, max_batch=2, nq_max=64,
+                          cache_size=8, retriever_factory=factory,
+                          chaos=ChaosInjector(ChaosConfig(fault_every=3)))
+    try:
+        path = tmp_path / "index"
+        save_index(str(path), tiny_index)
+        futs = [eng.search(SearchRequest(t, w)) for t, w in queries[:6]]
+        epoch = eng.swap_index(str(path), warm=False)
+        assert epoch == 1
+        post = [eng.search(SearchRequest(t, w)) for t, w in queries[6:12]]
+        n_ok = n_fault = 0
+        for f in futs + post:
+            exc = f.exception(timeout=120)
+            if exc is None:
+                n_ok += 1
+            else:
+                assert isinstance(exc, ChaosFault)
+                n_fault += 1
+        assert n_ok > 0
+        for f in post:
+            if f.exception(timeout=1) is None:
+                assert f.result().epoch == 1  # no stale post-swap results
+        s = eng.stats.summary()
+        assert s["requests"] == n_ok and s["failures"] == n_fault and s["swaps"] == 1
+    finally:
+        eng.shutdown()
