@@ -7,31 +7,35 @@ import jax.numpy as jnp
 
 from repro.core.query import QueryBatch, scatter_dense
 from repro.core.scoring import NEG, score_positions_fwd
+from repro.core.topk import canonical_topk
 from repro.index.layout import LSPIndex
 
 
 def retrieve_exact(index: LSPIndex, qb: QueryBatch, k: int, doc_chunk: int = 8192):
-    """Score every document; exact top-k. Chunked over docs to bound memory."""
+    """Score every document; exact canonical top-k. Chunked over docs to bound
+    memory — the chunked merge carries (score, doc-id) pairs and selects with
+    the canonical (score desc, id asc) order, which composes exactly across
+    chunks, so the oracle breaks ties the same way every pruned pipeline does."""
     qdense = scatter_dense(qb)
     n_pad = index.doc_remap.shape[0]
     n_chunks = -(-n_pad // doc_chunk)
     pad_total = n_chunks * doc_chunk
     q = qb.tids.shape[0]
+    id_bound = index.n_docs + 1  # doc_remap's padding sentinel is n_docs
 
     def body(carry, chunk_start):
-        best_s, best_p = carry
+        best_s, best_i = carry
         pos = chunk_start + jnp.arange(doc_chunk)[None, :].repeat(q, 0)
         pos = jnp.where(pos < n_pad, pos, n_pad - 1)
         s = score_positions_fwd(index, qdense, pos)
         s = jnp.where(chunk_start + jnp.arange(doc_chunk)[None, :] < n_pad, s, NEG)
+        ids = index.doc_remap[pos].astype(jnp.int32)
         cat_s = jnp.concatenate([best_s, s], axis=1)
-        cat_p = jnp.concatenate([best_p, pos], axis=1)
-        vals, idx = jax.lax.top_k(cat_s, k)
-        return (vals, jnp.take_along_axis(cat_p, idx, axis=1)), None
+        cat_i = jnp.concatenate([best_i, ids], axis=1)
+        return canonical_topk(cat_s, cat_i, k, id_bound=id_bound), None
 
-    init = (jnp.full((q, k), NEG), jnp.zeros((q, k), jnp.int32))
+    init = (jnp.full((q, k), NEG), jnp.full((q, k), index.n_docs, jnp.int32))
     starts = jnp.arange(0, pad_total, doc_chunk)
-    (vals, pos_k), _ = jax.lax.scan(body, init, starts)
-    ids = index.doc_remap[jnp.clip(pos_k, 0, n_pad - 1)]
-    ids = jnp.where(vals > NEG / 2, ids, -1)
+    (vals, ids_k), _ = jax.lax.scan(body, init, starts)
+    ids = jnp.where(vals > NEG / 2, ids_k, -1)
     return ids, vals

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import RetrievalConfig
+from repro.core.topk import canonical_topk
 from repro.index import clustering
 from repro.index.pack import SEG_WORDS, pack_rows_strided
 from repro.kernels.dequant_matmul.ref import dequant_matmul_ref
@@ -213,8 +214,10 @@ def retrieve_dense(index: DenseLSPIndex, q: jnp.ndarray, cfg: RetrievalConfig):
 
     scores = jnp.concatenate([s0, s1], axis=1)
     pos = jnp.concatenate([pos0, pos1], axis=1)
-    vals, idx = jax.lax.top_k(scores, cfg.k)
-    ids = index.remap[jnp.clip(jnp.take_along_axis(pos, idx, axis=1), 0, index.remap.shape[0] - 1)]
+    # canonical (score desc, candidate-id asc) final merge — equal-score ties must
+    # not resolve by traversal position (cluster order differs between shardings)
+    ids_all = index.remap[jnp.clip(pos, 0, index.remap.shape[0] - 1)]
+    vals, ids = canonical_topk(scores, ids_all, cfg.k, id_bound=index.n_cands + 1)
     return jnp.where(vals > NEG / 2, ids, -1), vals
 
 
@@ -273,8 +276,9 @@ def dense_local_fn(meta: DenseLSPIndex, cfg: RetrievalConfig):
         vals = jnp.where(ids >= 0, vals, NEG)
         av = jax.lax.all_gather(vals, "model", axis=1, tiled=True)
         ai = jax.lax.all_gather(ids, "model", axis=1, tiled=True)
-        v, idx = jax.lax.top_k(av, cfg.k)
-        return jnp.take_along_axis(ai, idx, axis=1), v
+        # canonical cross-shard merge: shard order must not decide ties
+        v, mi = canonical_topk(av, ai, cfg.k, id_bound=meta.n_cands + 1)
+        return jnp.where(v > NEG / 2, mi, -1), v
 
     return local_fn
 
@@ -316,5 +320,8 @@ def retrieve_dense_exact(index: DenseLSPIndex, q: jnp.ndarray, k: int):
     s = jnp.einsum("nd,bd->bn", index.cands.astype(jnp.float32), q)
     valid = index.remap < index.n_cands
     s = jnp.where(valid[None, :], s, NEG)
-    vals, idx = jax.lax.top_k(s, k)
-    return index.remap[idx], vals
+    # canonical selection so the oracle breaks ties the same way the pruned and
+    # sharded paths do (score desc, candidate-id asc), not by storage position
+    ids_all = jnp.broadcast_to(index.remap[None, :], s.shape)
+    vals, ids = canonical_topk(s, ids_all, k, id_bound=index.n_cands + 1)
+    return jnp.where(vals > NEG / 2, ids, -1), vals

@@ -25,6 +25,7 @@ from repro.core.config import RetrievalConfig
 from repro.core.lsp import search_retrieve
 from repro.core.query import QueryBatch
 from repro.core.scoring import NEG
+from repro.core.topk import canonical_topk
 from repro.index.layout import LSPIndex, PackedBounds
 from repro.index.pack import pack_rows_strided, unpack_rows_strided
 
@@ -113,8 +114,10 @@ def retrieve_distributed(
         all_scores.append(jnp.where(res.doc_ids >= 0, res.scores, NEG))
     ids = jnp.concatenate(all_ids, axis=1)
     scores = jnp.concatenate(all_scores, axis=1)
-    vals, idx = jax.lax.top_k(scores, cfg.k)
-    out_ids = jnp.take_along_axis(ids, idx, axis=1)
+    # canonical (score desc, doc-id asc) merge: equal-score ties at the k boundary
+    # must resolve by global doc id, not by shard concatenation order, or the
+    # merged result diverges from the single-device canonical selection
+    vals, out_ids = canonical_topk(scores, ids, cfg.k, id_bound=shards[0].n_docs + 1)
     return jnp.where(vals > NEG / 2, out_ids, -1), vals
 
 
@@ -165,8 +168,9 @@ def make_mesh_retriever(shards: list[LSPIndex], cfg: RetrievalConfig, mesh, impl
         scores = jnp.where(res.doc_ids >= 0, res.scores, NEG)
         av = jax.lax.all_gather(scores, "model", axis=1, tiled=True)  # [Q, P*k]
         ai = jax.lax.all_gather(res.doc_ids, "model", axis=1, tiled=True)
-        vals, idx = jax.lax.top_k(av, cfg.k)
-        ids = jnp.take_along_axis(ai, idx, axis=1)
+        # canonical final merge (see retrieve_distributed): shard order must not
+        # decide equal-score ties
+        vals, ids = canonical_topk(av, ai, cfg.k, id_bound=meta.n_docs + 1)
         return jnp.where(vals > NEG / 2, ids, -1), vals
 
     qspec = P(batch_axes, None)

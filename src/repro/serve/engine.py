@@ -75,6 +75,14 @@ from repro.serve.slo import SLOConfig, SLOController
 
 _EMPTY_QUERY = (np.zeros(0, np.int32), np.zeros(0, np.float32))
 
+# The failure boundary between "operational fault" (isolate the batch, keep
+# serving) and "programming error" (fail the futures, then escalate).
+# RuntimeError covers every typed serving error (ServeError and ChaosFault
+# subclass it) and XLA's XlaRuntimeError; TimeoutError/OSError cover transport
+# and host-level faults. TypeError/AttributeError/etc. stay outside on purpose:
+# a bug in the worker must surface, not be swallowed as a "failure" counter.
+_OPERATIONAL_ERRORS = (RuntimeError, TimeoutError, OSError)
+
 
 @dataclass
 class ServeStats:
@@ -196,8 +204,8 @@ class ServeStats:
         for name, fn in self._gauges.items():  # outside the lock: gauges own their sync
             try:
                 out[name] = fn()
-            except Exception:  # noqa: BLE001 — a dead gauge must not break summary()
-                out[name] = None
+            except _OPERATIONAL_ERRORS:  # a dead gauge must not break summary();
+                out[name] = None  # a buggy one (TypeError, ...) must still surface
         return out
 
 
@@ -594,11 +602,17 @@ class RetrievalEngine:
         return items
 
     def _loop(self) -> None:
-        while not self._stop.is_set():
-            items = self._collect()
-            if items:
-                self._serve_batch(items)
-        self._drain()
+        try:
+            while not self._stop.is_set():
+                items = self._collect()
+                if items:
+                    self._serve_batch(items)
+        finally:
+            # reached on clean shutdown AND when a programming error escapes
+            # _serve_batch: mark the engine stopped and fail everything still
+            # queued, so a dead worker can never strand blocked clients
+            self._stop.set()
+            self._drain()
 
     def _expire(self, items: list) -> list:
         """Fail (and drop) every item whose deadline passed while queued; these
@@ -656,11 +670,16 @@ class RetrievalEngine:
             nsb = None if nsb is None else np.asarray(nsb)
             nblk = None if nblk is None else np.asarray(nblk)
             shard_cand = None if shard_cand is None else np.asarray(shard_cand)
-        except Exception as exc:  # noqa: BLE001 — isolate: fail this batch, keep serving
+        except _OPERATIONAL_ERRORS as exc:  # backend fault: fail this batch, keep serving
             for it in items:
                 _try_set_exception(it.fut, exc)
             self.stats.record_failures(len(items))
             return
+        except Exception as exc:  # programming error: fail the futures, then escalate
+            for it in items:
+                _try_set_exception(it.fut, exc)
+            self.stats.record_failures(len(items))
+            raise
         now = time.monotonic()
         for i, it in enumerate(items):
             k_i = min(resolved[i].k, ids.shape[1]) if dynamic else ids.shape[1]

@@ -1,0 +1,17 @@
+"""Known-bad: raw device top-k / sort over scores outside core/topk.py."""
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_shards(scores, ids, k):
+    vals, idx = jax.lax.top_k(scores, k)  # raw-topk: positional tie-break
+    return vals, jnp.take_along_axis(ids, idx, axis=1)
+
+
+def rank_all(scores):
+    return jnp.argsort(scores)[:, ::-1]  # raw-sort: no canonical tie order
+
+
+def approx_rank(scores, k):
+    return jax.lax.approx_max_k(scores, k)  # raw-topk

@@ -1,0 +1,44 @@
+"""Known-bad: every lock-discipline rule violated once."""
+
+import threading
+import time
+from concurrent.futures import Future
+
+
+class Stats:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.requests = 0
+        self.failures = 0
+
+    def record(self):
+        self.requests += 1  # stats-unlocked: racing += from multiple threads
+
+    def record_failure(self):
+        with self._lock:
+            self.failures += 1
+        self.requests += 1  # stats-unlocked: mutation after the lock released
+
+
+class Worker:
+    def __init__(self, q):
+        self._lock = threading.Lock()
+        self._q = q
+
+    def step(self, retriever, qb):
+        with self._lock:
+            time.sleep(0.1)  # blocking-under-lock
+            item = self._q.get(timeout=1.0)  # blocking-under-lock
+            out = retriever(qb)  # blocking-under-lock: retriever dispatch
+        return item, out
+
+
+def resolve(fut: Future, value):
+    fut.set_result(value)  # raw-future-set: races a client cancel
+
+
+def serve_once(fn):
+    try:
+        return fn()
+    except Exception:  # broad-except: swallows programming errors
+        return None

@@ -1,0 +1,38 @@
+"""Known-bad: inconsistent grid spec, no divisibility assert, raw quantized
+accumulation. (Parsed, never executed — the arities are wrong on purpose.)"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TW = 128
+
+
+def _kernel(tids_ref, packed_ref, out_ref, *, bits: int):
+    row = packed_ref[0, :]
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (32 // bits, TW), 0) * bits
+    vals = (row[None, :] >> shifts) & jnp.uint32((1 << bits) - 1)
+    out_ref[0, 0] += vals  # dequant-astype: integer words hit the accumulator
+
+
+def bad_call(packed, tids, bits):
+    q, nq = tids.shape
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(q, nq),
+            in_specs=[
+                # index-map-arity: 2 args, needs len(grid) + 1 == 3
+                pl.BlockSpec((1, TW), lambda qi, i: (qi, 0)),
+            ],
+            # blockspec-rank: 3-dim block, 2-coordinate index map
+            out_specs=pl.BlockSpec((1, 1, TW), lambda qi, i, t: (qi, 0)),
+        ),
+        # out-rank: rank 2 vs out block rank 3
+        out_shape=jax.ShapeDtypeStruct((q, TW), jnp.float32),
+        # dim-semantics-arity: 1 name for a 2-dim grid
+        compiler_params=dict(dimension_semantics=("parallel",)),
+    )(tids, packed)
+    # missing-divisibility-assert: module tiles by TW, never asserts % TW == 0

@@ -1,0 +1,27 @@
+"""Known-bad: host syncs, traced branching, and mutable capture under jit."""
+
+import jax
+import jax.numpy as jnp
+
+calls = {"n": 0}
+
+
+@jax.jit
+def score(x):
+    calls["n"] += 1  # mutable-capture: runs at trace time, not per call
+    s = jnp.sum(x * x)
+    if s > 0:  # traced-branch: bakes one branch into the trace
+        s = s + 1.0
+    return float(s)  # host-sync: concretizes a traced value
+
+
+def helper(y):
+    m = jnp.max(y)
+    while m > 1.0:  # traced-branch (reachable from the jitted caller below)
+        m = m / 2.0
+    return m.item()  # host-sync
+
+
+@jax.jit
+def entry(y):
+    return helper(y)

@@ -1,0 +1,14 @@
+"""Known-good: ranking goes through the canonical helper; host-side numpy
+stable sorts (index build time) are exempt."""
+
+import numpy as np
+
+from repro.core.topk import canonical_topk
+
+
+def merge_shards(scores, ids, k, n_docs):
+    return canonical_topk(scores, ids, k, id_bound=n_docs + 1)
+
+
+def build_order(src):
+    return np.argsort(src, kind="stable")

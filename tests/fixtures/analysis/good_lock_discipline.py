@@ -1,0 +1,50 @@
+"""Known-good: counters under the lock, blocking outside it, futures through
+_try_set_*, typed excepts (and the sanctioned re-raising broad handler)."""
+
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+
+
+class Stats:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.requests = 0
+        self.meta = {}
+
+    def record(self, key):
+        with self._lock:
+            self.requests += 1
+            self.meta[key] = self.meta.get(key, 0) + 1  # dict .get is not a queue wait
+
+
+class Worker:
+    def __init__(self, q):
+        self._lock = threading.Lock()
+        self._q = q
+
+    def step(self, retriever, qb):
+        item = self._q.get(timeout=1.0)  # blocking: fine OUTSIDE the lock
+        out = retriever(qb)
+        with self._lock:
+            self.last = out  # short critical section, no blocking inside
+        time.sleep(0.0)
+        return item, out
+
+
+def _try_set_result(fut: Future, value):
+    try:
+        fut.set_result(value)  # the one sanctioned raw call site
+    except InvalidStateError:
+        pass
+
+
+def serve_once(fn, items):
+    try:
+        return fn()
+    except (RuntimeError, TimeoutError, OSError):
+        return None
+    except Exception:
+        for it in items:
+            it.cancel()
+        raise  # broad catch that re-raises: fail-futures-then-escalate shape

@@ -1,0 +1,34 @@
+"""Known-good: consistent grid spec, width assert, in-register dequant."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TW = 128
+
+
+def _kernel(tids_ref, packed_ref, out_ref, *, bits: int):
+    row = packed_ref[0, :]
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (32 // bits, TW), 0) * bits
+    vals = (row[None, :] >> shifts) & jnp.uint32((1 << bits) - 1)
+    out_ref[0, 0] += vals.astype(jnp.float32)
+
+
+def good_call(packed, tids, bits):
+    v, w_words = packed.shape
+    assert w_words % TW == 0
+    q, nq = tids.shape
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(q, nq),
+            in_specs=[
+                pl.BlockSpec((1, TW), lambda qi, i, tids_ref: (tids_ref[qi, i], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, TW), lambda qi, i, *_: (qi, i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((q, nq, TW), jnp.float32),
+        compiler_params=dict(dimension_semantics=("parallel", "arbitrary")),
+    )(tids, packed)

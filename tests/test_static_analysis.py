@@ -1,0 +1,134 @@
+"""Analyzer self-tests (ISSUE 7): every known-bad fixture is flagged with the
+expected rule codes, every known-good fixture is clean under the FULL battery,
+and a whole-tree run agrees exactly with the reviewed baseline (so CI's
+``python -m tools.analysis --check`` gates the same state these tests pin)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+sys.path.insert(0, str(REPO))
+
+from tools.analysis import Analyzer  # noqa: E402
+from tools.analysis.baseline import DEFAULT_BASELINE, Baseline, diff  # noqa: E402
+
+
+def _codes(path: Path) -> set:
+    an = Analyzer(REPO)
+    return {(f.invariant, f.code) for f in an.collect([path])}
+
+
+BAD_EXPECTATIONS = {
+    "bad_canonical_topk.py": {
+        ("canonical-topk", "raw-topk"),
+        ("canonical-topk", "raw-sort"),
+    },
+    "bad_trace_safety.py": {
+        ("trace-safety", "host-sync"),
+        ("trace-safety", "traced-branch"),
+        ("trace-safety", "mutable-capture"),
+    },
+    "bad_lock_discipline.py": {
+        ("lock-discipline", "stats-unlocked"),
+        ("lock-discipline", "blocking-under-lock"),
+        ("lock-discipline", "raw-future-set"),
+        ("lock-discipline", "broad-except"),
+    },
+    "bad_pallas_contracts.py": {
+        ("pallas-contracts", "index-map-arity"),
+        ("pallas-contracts", "blockspec-rank"),
+        ("pallas-contracts", "out-rank"),
+        ("pallas-contracts", "dim-semantics-arity"),
+        ("pallas-contracts", "missing-divisibility-assert"),
+        ("pallas-contracts", "dequant-astype"),
+    },
+}
+
+
+@pytest.mark.parametrize("name", sorted(BAD_EXPECTATIONS))
+def test_bad_fixture_flags_every_expected_rule(name):
+    got = _codes(FIXTURES / name)
+    missing = BAD_EXPECTATIONS[name] - got
+    assert not missing, f"{name}: rules not flagged: {sorted(missing)} (got {sorted(got)})"
+
+
+@pytest.mark.parametrize(
+    "name",
+    [
+        "good_canonical_topk.py",
+        "good_trace_safety.py",
+        "good_lock_discipline.py",
+        "good_pallas_contracts.py",
+    ],
+)
+def test_good_fixture_is_clean_under_all_passes(name):
+    got = _codes(FIXTURES / name)
+    assert not got, f"{name}: false positives: {sorted(got)}"
+
+
+def test_tree_findings_equal_baseline_and_all_justified():
+    an = Analyzer(REPO)
+    findings = an.fingerprinted()
+    base = Baseline.load(DEFAULT_BASELINE)
+    d = diff(findings, base, tree_scan=True)
+    assert not d.new, "unbaselined findings:\n" + "\n".join(
+        f"  {f.file}:{f.line} [{f.invariant}/{f.code}] {f.snippet}" for f in d.new.values()
+    )
+    assert not d.stale, f"stale baseline entries: {d.stale}"
+    assert not d.unjustified, f"baseline entries without justification: {d.unjustified}"
+    # every justification is a real sentence, not a mute
+    for fp, e in base.entries.items():
+        assert len(e["justification"].split()) >= 8, (fp, e["justification"])
+
+
+def test_fingerprints_survive_line_drift():
+    """The baseline must not churn when unrelated lines shift a finding."""
+    an = Analyzer(REPO)
+    src = (FIXTURES / "bad_canonical_topk.py").read_text()
+    shifted = FIXTURES / "_shifted_tmp.py"
+    try:
+        shifted.write_text("# pad\n# pad\n\n" + src)
+        orig = an.fingerprinted([FIXTURES / "bad_canonical_topk.py"])
+        moved = an.fingerprinted([shifted])
+
+        def strip(fps):  # same file content under different names -> compare codes
+            return sorted((f.invariant, f.code, f.snippet) for f in fps.values())
+
+        assert strip(orig) == strip(moved)
+        orig_lines = {f.line for f in orig.values()}
+        moved_lines = {f.line for f in moved.values()}
+        assert orig_lines != moved_lines  # the drift really happened
+    finally:
+        shifted.unlink(missing_ok=True)
+
+
+def test_cli_check_gates_tree_and_fixtures():
+    env_cmd = [sys.executable, "-m", "tools.analysis", "--check"]
+    clean = subprocess.run(env_cmd, cwd=REPO, capture_output=True, text=True)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    for bad in sorted(BAD_EXPECTATIONS):
+        seeded = subprocess.run(
+            env_cmd + [str(FIXTURES / bad)], cwd=REPO, capture_output=True, text=True
+        )
+        assert seeded.returncode != 0, f"{bad} not caught:\n{seeded.stdout}"
+
+
+def test_cli_check_fails_on_unjustified_baseline_entry(tmp_path):
+    base = json.loads(DEFAULT_BASELINE.read_text())
+    fp = sorted(base["entries"])[0]
+    base["entries"][fp]["justification"] = ""
+    stripped = tmp_path / "baseline.json"
+    stripped.write_text(json.dumps(base))
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--check", "--baseline", str(stripped)],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+    )
+    assert r.returncode != 0
+    assert "justification" in r.stdout

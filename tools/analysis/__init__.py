@@ -1,0 +1,8 @@
+"""Invariant analyzer (DESIGN.md §11): AST passes enforcing the conventions the
+system's correctness rests on — canonical top-k, trace safety, lock discipline,
+and Pallas kernel contracts. stdlib-only; run with ``python -m tools.analysis``.
+"""
+
+from tools.analysis.core import Analyzer, AnalysisPass, Finding, ModuleSource
+
+__all__ = ["Analyzer", "AnalysisPass", "Finding", "ModuleSource"]

@@ -1,0 +1,69 @@
+"""CLI: ``python -m tools.analysis [--check] [--update-baseline] [paths...]``.
+
+Modes
+  (default)          report every finding (baselined ones marked); exit 0
+  --check            exit 1 on any unbaselined finding, any baseline entry
+                     without a justification, or (tree scans) any stale entry
+  --update-baseline  rewrite the baseline from a full tree scan, preserving
+                     existing justifications; new entries start unjustified
+                     (and therefore fail --check until written up)
+
+Positional paths restrict the scan to those files (fixture tests, the CI
+mutation smoke); with paths given, stale-entry detection is skipped.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.analysis import baseline as bl
+from tools.analysis.core import Analyzer
+from tools.analysis.passes import default_passes, passes_by_name
+from tools.analysis.report import render_json, render_text
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.analysis", description=__doc__)
+    ap.add_argument("paths", nargs="*", help="restrict to these files (default: src/repro tree)")
+    ap.add_argument("--root", default=".", help="repo root (default: cwd)")
+    ap.add_argument("--baseline", default=None, help="baseline JSON path")
+    ap.add_argument("--check", action="store_true", help="gate: nonzero exit on violations")
+    ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument("--json", action="store_true", help="machine-readable output")
+    ap.add_argument("--pass", dest="passes", action="append", metavar="NAME",
+                    help="run only this pass (repeatable)")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root)
+    passes = passes_by_name(args.passes) if args.passes else default_passes()
+    analyzer = Analyzer(root, passes=passes)
+    tree_scan = not args.paths
+    findings = analyzer.fingerprinted(args.paths or None)
+
+    bpath = Path(args.baseline) if args.baseline else bl.DEFAULT_BASELINE
+    base = bl.Baseline.load(bpath)
+
+    if args.update_baseline:
+        if not tree_scan:
+            print("--update-baseline requires a full tree scan (no paths)", file=sys.stderr)
+            return 2
+        updated = bl.update(findings, base)
+        updated.save()
+        fresh = [fp for fp in updated.entries if fp not in base.entries]
+        print(f"baseline written: {len(updated.entries)} entr(ies), {len(fresh)} new")
+        missing = updated.unjustified()
+        if missing:
+            print(f"{len(missing)} entr(ies) need a justification before --check passes")
+        return 0
+
+    d = bl.diff(findings, base, tree_scan)
+    print(render_json(d, base) if args.json else render_text(d, base, args.check, tree_scan))
+    if args.check:
+        return 0 if d.clean(tree_scan) else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

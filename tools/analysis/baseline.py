@@ -1,0 +1,95 @@
+"""Reviewed baseline: the only sanctioned way to keep a flagged site.
+
+Every entry is keyed by the finding's content fingerprint and MUST carry a
+non-empty human-written ``justification`` — ``--check`` fails on entries
+without one, so "baseline it" is never a silent mute; it is a written parity/
+safety argument that survives in review. Entries whose finding disappeared
+(fixed or deleted code) are *stale* and also fail ``--check``: a baseline that
+over-approximates the tree would hide the next regression behind a dead entry.
+
+``--update-baseline`` refreshes line hints and snippets, preserves existing
+justifications, drops stale entries, and adds new findings with an empty
+justification (which then fails ``--check`` until someone writes one).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+
+@dataclass
+class Baseline:
+    path: Path
+    entries: dict = field(default_factory=dict)  # fingerprint -> entry dict
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not Path(path).exists():
+            return cls(path=Path(path))
+        data = json.loads(Path(path).read_text())
+        return cls(path=Path(path), entries=data.get("entries", {}))
+
+    def save(self) -> None:
+        payload = {
+            "version": 1,
+            "entries": {k: self.entries[k] for k in sorted(self.entries)},
+        }
+        self.path.write_text(json.dumps(payload, indent=2) + "\n")
+
+    def unjustified(self) -> list:
+        return [
+            fp
+            for fp, e in sorted(self.entries.items())
+            if not str(e.get("justification", "")).strip()
+        ]
+
+
+@dataclass
+class Diff:
+    """The comparison ``--check`` acts on."""
+
+    new: dict = field(default_factory=dict)  # fingerprint -> Finding (unbaselined)
+    matched: dict = field(default_factory=dict)  # fingerprint -> Finding (baselined)
+    stale: list = field(default_factory=list)  # fingerprints in baseline, not in tree
+    unjustified: list = field(default_factory=list)
+
+    def clean(self, tree_scan: bool) -> bool:
+        if self.new or self.unjustified:
+            return False
+        if tree_scan and self.stale:
+            return False
+        return True
+
+
+def diff(findings: dict, baseline: Baseline, tree_scan: bool) -> Diff:
+    """``findings`` is fingerprint -> Finding. Stale detection only makes sense
+    for a full tree scan — a partial file list trivially misses entries."""
+    d = Diff(unjustified=baseline.unjustified())
+    for fp, f in findings.items():
+        if fp in baseline.entries:
+            d.matched[fp] = f
+        else:
+            d.new[fp] = f
+    if tree_scan:
+        d.stale = [fp for fp in sorted(baseline.entries) if fp not in findings]
+    return d
+
+
+def update(findings: dict, baseline: Baseline) -> Baseline:
+    """New baseline content from a full tree scan (see module docstring)."""
+    entries = {}
+    for fp, f in findings.items():
+        old = baseline.entries.get(fp, {})
+        entries[fp] = {
+            "invariant": f.invariant,
+            "code": f.code,
+            "file": f.file,
+            "line": f.line,
+            "snippet": f.snippet,
+            "justification": old.get("justification", ""),
+        }
+    return Baseline(path=baseline.path, entries=entries)

@@ -1,0 +1,157 @@
+"""Analyzer core: source model, findings, pass protocol, tree walker.
+
+A ``Finding`` is identified by a *fingerprint* that hashes the invariant, the
+rule code, the file, and the stripped source line — NOT the line number — so a
+reviewed baseline survives unrelated edits that shift code up or down. Two
+identical violations on identical lines in one file are disambiguated with an
+occurrence suffix (``#1``, ``#2``, ...).
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, Optional
+
+SRC_PREFIX = "src/repro"
+
+
+@dataclass
+class ModuleSource:
+    """One parsed Python file handed to every applicable pass."""
+
+    path: Path  # absolute
+    relpath: str  # posix, relative to the analysis root when inside it
+    text: str
+    tree: ast.AST
+    lines: list = field(default_factory=list)
+
+    @classmethod
+    def load(cls, path: Path, root: Path) -> "ModuleSource":
+        text = path.read_text()
+        try:
+            rel = path.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = path.as_posix()  # outside the root (fixtures, temp copies)
+        return cls(
+            path=path,
+            relpath=rel,
+            text=text,
+            tree=ast.parse(text, filename=str(path)),
+            lines=text.splitlines(),
+        )
+
+    def snippet(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violation of one invariant at one site."""
+
+    invariant: str  # pass name, e.g. "canonical-topk"
+    code: str  # rule id within the pass, e.g. "raw-topk"
+    file: str  # relpath of the module
+    line: int
+    col: int
+    message: str
+    snippet: str
+
+    def base_key(self) -> str:
+        return f"{self.invariant}:{self.code}:{self.file}:{self.snippet}"
+
+    def fingerprint(self, occurrence: int = 0) -> str:
+        h = hashlib.sha1(self.base_key().encode()).hexdigest()[:16]
+        return h if occurrence == 0 else f"{h}#{occurrence}"
+
+
+def fingerprint_findings(findings: Iterable[Finding]) -> dict:
+    """Map fingerprint -> Finding, assigning occurrence suffixes to findings
+    whose (invariant, code, file, snippet) collide (identical lines)."""
+    seen: dict = {}
+    out: dict = {}
+    for f in sorted(findings, key=lambda f: (f.file, f.line, f.col, f.code)):
+        k = f.base_key()
+        occ = seen.get(k, 0)
+        seen[k] = occ + 1
+        out[f.fingerprint(occ)] = f
+    return out
+
+
+class AnalysisPass:
+    """One invariant. Subclasses set ``name``/``description``, narrow the file
+    set with ``applies`` (consulted only for tree scans — explicitly listed
+    files outside ``src/`` always run every pass, which is how fixture tests
+    and the CI mutation smoke drive the analyzer), and emit via ``run``."""
+
+    name: str = ""
+    description: str = ""
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(SRC_PREFIX)
+
+    def run(self, mod: ModuleSource) -> list:
+        raise NotImplementedError
+
+    # -- shared AST helpers ----------------------------------------------------
+
+    @staticmethod
+    def dotted(node: ast.AST) -> str:
+        """'jax.lax.top_k' for an Attribute/Name chain; '' when not a chain."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+            return ".".join(reversed(parts))
+        return ""
+
+    def finding(self, mod: ModuleSource, node: ast.AST, code: str, message: str) -> Finding:
+        line = getattr(node, "lineno", 0)
+        return Finding(
+            invariant=self.name,
+            code=code,
+            file=mod.relpath,
+            line=line,
+            col=getattr(node, "col_offset", 0),
+            message=message,
+            snippet=mod.snippet(line),
+        )
+
+
+class Analyzer:
+    """Runs every registered pass over a file set and fingerprints the result."""
+
+    def __init__(self, root: Path, passes: Optional[list] = None):
+        self.root = Path(root)
+        if passes is None:
+            from tools.analysis.passes import default_passes
+
+            passes = default_passes()
+        self.passes = passes
+
+    def tree_files(self) -> list:
+        return sorted((self.root / SRC_PREFIX).rglob("*.py"))
+
+    def collect(self, paths: Optional[list] = None) -> list:
+        explicit = paths is not None
+        files = [Path(p) for p in paths] if explicit else self.tree_files()
+        findings: list = []
+        for path in files:
+            mod = ModuleSource.load(path, self.root)
+            in_src = mod.relpath.startswith(SRC_PREFIX)
+            for p in self.passes:
+                # tree scope rules govern src/ files; anything else listed
+                # explicitly (fixtures, temp copies) gets the full battery
+                if in_src and not p.applies(mod.relpath):
+                    continue
+                findings.extend(p.run(mod))
+        return findings
+
+    def fingerprinted(self, paths: Optional[list] = None) -> dict:
+        return fingerprint_findings(self.collect(paths))

@@ -1,0 +1,20 @@
+"""Pass registry. Order is the report order."""
+
+from tools.analysis.passes.canonical_topk import CanonicalTopkPass
+from tools.analysis.passes.trace_safety import TraceSafetyPass
+from tools.analysis.passes.lock_discipline import LockDisciplinePass
+from tools.analysis.passes.pallas_contracts import PallasContractsPass
+
+ALL_PASSES = [CanonicalTopkPass, TraceSafetyPass, LockDisciplinePass, PallasContractsPass]
+
+
+def default_passes():
+    return [cls() for cls in ALL_PASSES]
+
+
+def passes_by_name(names):
+    by = {cls.name: cls for cls in ALL_PASSES}
+    unknown = [n for n in names if n not in by]
+    if unknown:
+        raise SystemExit(f"unknown pass(es): {', '.join(unknown)}; have {sorted(by)}")
+    return [by[n]() for n in names]

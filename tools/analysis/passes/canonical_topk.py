@@ -1,0 +1,79 @@
+"""canonical-topk: every ranking of scores must go through core/topk.py.
+
+The bit-identity contract (DESIGN.md §7, §11) — sharded retrieval equals
+single-device retrieval bit-for-bit — only holds if equal-score ties are broken
+by the canonical (score desc, id asc) order everywhere. ``jax.lax.top_k`` and
+``jnp.argsort``/``jnp.sort`` break ties *positionally*: whichever shard,
+traversal, or concatenation order produced a tied value first wins, so a single
+raw call on a score-like array silently forks parity. Host-side ``np.*`` sorts
+are exempt (index build time, stable kinds, no traced ties).
+
+Sites where the selection feeds only a θ threshold (the k-th *value* is
+tie-invariant even when the positional *indices* are not) are legitimate — they
+get a baseline entry with that justification, not an exemption in code.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.analysis.core import AnalysisPass, ModuleSource
+
+# The only modules allowed to touch device sort/top-k primitives directly.
+ALLOWED_FILES = (
+    "src/repro/core/topk.py",
+    "src/repro/distributed/topk.py",
+)
+
+# dotted-suffix -> rule code
+_TOPK = {"jax.lax.top_k", "lax.top_k", "jax.lax.approx_max_k", "lax.approx_max_k"}
+_SORT = {
+    "jnp.argsort",
+    "jnp.sort",
+    "jax.numpy.argsort",
+    "jax.numpy.sort",
+    "jax.lax.sort",
+    "lax.sort",
+    "jax.lax.sort_key_val",
+    "lax.sort_key_val",
+}
+
+
+class CanonicalTopkPass(AnalysisPass):
+    name = "canonical-topk"
+    description = (
+        "device top-k/sort primitives outside core/topk.py break the canonical "
+        "(score desc, id asc) tie-break behind sharded bit-parity"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return super().applies(relpath) and relpath not in ALLOWED_FILES
+
+    def run(self, mod: ModuleSource) -> list:
+        out = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = self.dotted(node.func)
+            if name in _TOPK:
+                out.append(
+                    self.finding(
+                        mod,
+                        node,
+                        "raw-topk",
+                        f"{name} breaks ties positionally; rank through "
+                        "core.topk.canonical_topk (or baseline with a parity "
+                        "justification if only the k-th value is consumed)",
+                    )
+                )
+            elif name in _SORT:
+                out.append(
+                    self.finding(
+                        mod,
+                        node,
+                        "raw-sort",
+                        f"{name} on device arrays has no canonical tie order; "
+                        "use core.topk (or baseline with justification)",
+                    )
+                )
+        return out

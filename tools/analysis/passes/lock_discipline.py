@@ -1,0 +1,266 @@
+"""lock-discipline: the serving layer's unwritten concurrency rules, written.
+
+The engine's exactly-once future resolution and torn-read-free stats
+(DESIGN.md §6, §10, §11) rest on four conventions:
+
+* ``stats-unlocked`` — a class that owns ``self._lock`` (ServeStats and kin)
+  mutates its public counters only inside ``with self._lock``; counters are
+  written from the worker thread AND caller threads, so an unlocked ``+=`` is
+  a lost update. Construction (``__init__``/``__post_init__``) and private
+  ``_``-prefixed plumbing are exempt.
+* ``blocking-under-lock`` — no sleeping, queue waiting, joining, or retriever
+  dispatch while holding any lock: the worker and callers share these locks,
+  so blocking under one turns a micro-critical-section into a stall for every
+  thread (the one deliberate case — warmup under ``_swap_lock`` — is
+  baselined: serializing whole swaps is the point, and the worker never takes
+  ``_swap_lock``).
+* ``raw-future-set`` — futures are resolved only through the ``_try_set_*``
+  wrappers; a raw ``set_result``/``set_exception`` races a client cancel and
+  dies with ``InvalidStateError`` exactly once a year, in production.
+* ``broad-except`` — ``except Exception``/bare ``except`` that does not
+  re-raise swallows programming errors as "failures"; handlers must catch the
+  typed operational family and let bugs escape (an ``except Exception`` whose
+  body ends by re-raising is the sanctioned fail-futures-then-escalate shape).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.analysis.core import SRC_PREFIX, AnalysisPass, ModuleSource
+
+_LOCK_NAME = re.compile(r"lock", re.IGNORECASE)
+_QUEUE_NAME = re.compile(r"(^|[._])q($|[_\d])|queue", re.IGNORECASE)
+
+# attribute calls that block the calling thread
+_BLOCKING_ATTRS = {"join", "result", "wait", "acquire"}
+# dispatch into the retriever (arbitrary device work) — never under a lock
+_DISPATCH = {"self._warm", "self.retriever", "self.warmup", "retriever"}
+
+_EXEMPT_METHODS = {"__init__", "__post_init__"}
+
+
+def _is_lock_expr(expr: ast.AST) -> bool:
+    d = AnalysisPass.dotted(expr)
+    return bool(d) and bool(_LOCK_NAME.search(d.rsplit(".", 1)[-1]))
+
+
+class LockDisciplinePass(AnalysisPass):
+    name = "lock-discipline"
+    description = (
+        "serving-layer concurrency conventions: counters under the stats lock, "
+        "no blocking calls while holding locks, futures via _try_set_*, no "
+        "swallowed broad excepts"
+    )
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(SRC_PREFIX + "/serve/")
+
+    def run(self, mod: ModuleSource) -> list:
+        out = []
+        out.extend(self._check_stats_classes(mod))
+        out.extend(self._check_blocking_under_lock(mod))
+        out.extend(self._check_future_resolution(mod))
+        out.extend(self._check_broad_except(mod))
+        return out
+
+    # -- stats counters under the stats lock -----------------------------------
+
+    def _check_stats_classes(self, mod: ModuleSource) -> list:
+        out = []
+        for cls in ast.walk(mod.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            if not self._owns_stats_lock(cls):
+                continue
+            for meth in cls.body:
+                if not isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if meth.name in _EXEMPT_METHODS:
+                    continue
+                out.extend(self._unlocked_mutations(mod, meth))
+        return out
+
+    @staticmethod
+    def _owns_stats_lock(cls: ast.ClassDef) -> bool:
+        for n in ast.walk(cls):
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    if (
+                        isinstance(t, ast.Attribute)
+                        and t.attr == "_lock"
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                    ):
+                        return True
+        return False
+
+    def _unlocked_mutations(self, mod: ModuleSource, meth: ast.AST) -> list:
+        """Walk the method tracking whether we're inside `with self._lock`."""
+        out = []
+
+        def self_attr(expr: ast.AST):
+            # self.X -> "X"; self.X[...] -> "X"; else None
+            if isinstance(expr, ast.Subscript):
+                expr = expr.value
+            if (
+                isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id == "self"
+            ):
+                return expr.attr
+            return None
+
+        def visit(node: ast.AST, locked: bool) -> None:
+            if isinstance(node, ast.With):
+                holds = locked or any(_is_lock_expr(i.context_expr) for i in node.items)
+                for stmt in node.body:
+                    visit(stmt, holds)
+                return
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                return
+            if not locked:
+                if isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                    for t in targets:
+                        attr = self_attr(t)
+                        if attr and not attr.startswith("_"):
+                            out.append(
+                                self.finding(
+                                    mod,
+                                    node,
+                                    "stats-unlocked",
+                                    f"`self.{attr}` mutated outside `with self._lock`"
+                                    " — counters are written from multiple threads",
+                                )
+                            )
+                elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                    if node.func.attr in ("append", "extend", "update", "clear", "pop"):
+                        attr = self_attr(node.func.value)
+                        if attr and not attr.startswith("_"):
+                            out.append(
+                                self.finding(
+                                    mod,
+                                    node,
+                                    "stats-unlocked",
+                                    f"`self.{attr}.{node.func.attr}(...)` outside "
+                                    "`with self._lock`",
+                                )
+                            )
+            for child in ast.iter_child_nodes(node):
+                visit(child, locked)
+
+        for stmt in meth.body:
+            visit(stmt, False)
+        return out
+
+    # -- blocking calls while holding any lock ---------------------------------
+
+    def _check_blocking_under_lock(self, mod: ModuleSource) -> list:
+        out = []
+
+        def blocking_reason(call: ast.Call):
+            d = self.dotted(call.func)
+            if d in ("time.sleep", "sleep"):
+                return "sleeps"
+            if d in _DISPATCH or d.startswith("self.retriever"):
+                return "dispatches into the retriever"
+            if isinstance(call.func, ast.Attribute):
+                attr = call.func.attr
+                recv = self.dotted(call.func.value)
+                if attr in _BLOCKING_ATTRS:
+                    return f"blocks on .{attr}()"
+                if attr in ("get", "put"):
+                    has_kw = any(k.arg in ("timeout", "block") for k in call.keywords)
+                    queue_recv = bool(recv) and bool(_QUEUE_NAME.search(recv))
+                    dict_get = attr == "get" and len(call.args) == 2 and not call.keywords
+                    if (has_kw or queue_recv) and not dict_get:
+                        return f"blocks on .{attr}()"
+            return None
+
+        def visit(node: ast.AST, locked: bool) -> None:
+            if isinstance(node, ast.With):
+                holds = locked or any(_is_lock_expr(i.context_expr) for i in node.items)
+                for stmt in node.body:
+                    visit(stmt, holds)
+                return
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                # a nested def under a lock runs later, not under the lock
+                if not locked:
+                    for child in ast.iter_child_nodes(node):
+                        visit(child, False)
+                return
+            if locked and isinstance(node, ast.Call):
+                reason = blocking_reason(node)
+                if reason:
+                    out.append(
+                        self.finding(
+                            mod,
+                            node,
+                            "blocking-under-lock",
+                            f"`{mod.snippet(node.lineno)}` {reason} while holding a "
+                            "lock — every other thread on that lock stalls with it",
+                        )
+                    )
+            for child in ast.iter_child_nodes(node):
+                visit(child, locked)
+
+        visit(mod.tree, False)
+        return out
+
+    # -- exactly-once future resolution ----------------------------------------
+
+    def _check_future_resolution(self, mod: ModuleSource) -> list:
+        out = []
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name in ("_try_set_result", "_try_set_exception"):
+                continue
+            for n in ast.walk(fn):
+                if (
+                    isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr in ("set_result", "set_exception")
+                ):
+                    out.append(
+                        self.finding(
+                            mod,
+                            n,
+                            "raw-future-set",
+                            f"raw .{n.func.attr}() races a client cancel "
+                            "(InvalidStateError); route through _try_set_result/"
+                            "_try_set_exception",
+                        )
+                    )
+        return out
+
+    # -- broad excepts that swallow ---------------------------------------------
+
+    def _check_broad_except(self, mod: ModuleSource) -> list:
+        out = []
+        for n in ast.walk(mod.tree):
+            if not isinstance(n, ast.ExceptHandler):
+                continue
+            broad = n.type is None or self.dotted(n.type) in ("Exception", "BaseException")
+            if not broad:
+                continue
+            reraises = any(
+                isinstance(x, ast.Raise) and x.exc is None
+                for s in n.body
+                for x in ast.walk(s)
+            )
+            if not reraises:
+                label = "bare except" if n.type is None else f"except {self.dotted(n.type)}"
+                out.append(
+                    self.finding(
+                        mod,
+                        n,
+                        "broad-except",
+                        f"`{label}` without re-raise swallows programming errors; "
+                        "catch the typed operational family (ServeError/RuntimeError/"
+                        "TimeoutError/OSError) and let bugs escalate",
+                    )
+                )
+        return out

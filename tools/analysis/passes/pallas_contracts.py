@@ -1,0 +1,352 @@
+"""pallas-contracts: statically checkable kernel-boundary invariants.
+
+Pallas TPU kernels fail at trace time (or worse, mis-index silently under
+``interpret=False``) when the grid spec is internally inconsistent. These are
+all decidable from the AST of a kernel module (see /opt/skills guides and the
+house kernels under ``src/repro/kernels/``):
+
+* ``index-map-arity`` — with ``PrefetchScalarGridSpec(num_scalar_prefetch=N,
+  grid=G)`` every BlockSpec index map takes ``len(G) + N`` arguments (the
+  scalar-prefetch refs ride after the grid indices); with a plain ``grid=``
+  kwarg it takes ``len(G)``.
+* ``blockspec-rank`` — the index map returns one coordinate per block-shape
+  dimension.
+* ``out-rank`` — ``out_shape`` rank matches the out BlockSpec's block rank.
+* ``dim-semantics-arity`` — ``dimension_semantics`` names every grid dim.
+* ``tile-geometry`` — a kernel module's ``TW`` word-tile literal must equal
+  ``pack.SEG_WORDS`` (the lane-strided segment granule the index layout packs
+  with); a silent divergence re-tiles every packed row wrong.
+* ``missing-divisibility-assert`` — a module that tiles by ``TW`` must assert
+  ``% TW == 0`` on its operand widths before launching.
+* ``dequant-astype`` — quantized operands (packed u32 words, u8/u16 weights)
+  must be widened with ``.astype`` before arithmetic/accumulation; feeding raw
+  integer words to the MXU/VPU accumulates garbage without an error.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from tools.analysis.core import SRC_PREFIX, AnalysisPass, ModuleSource
+
+# refs holding quantized payloads, beyond the packed-name heuristic; keyed by
+# relpath suffix (doc_score's ws_ref is u8/u16 weights, sbmax's ws_ref is f32
+# query weights — same name, different contract, hence per-module config)
+QUANTIZED_REFS = {
+    "kernels/doc_score/kernel.py": {"ws_ref"},
+}
+
+_PACKED_NAME = ("packed_ref", "w_ref", "words_ref", "pk_ref")
+
+_ARITH = (ast.Mult, ast.Add, ast.Sub, ast.MatMult, ast.Div)
+
+
+def _tuple_len(node: ast.AST):
+    return len(node.elts) if isinstance(node, ast.Tuple) else None
+
+
+def _lambda_arity(node: ast.AST):
+    """(n_positional, has_vararg) for a lambda/def; None when not a function."""
+    if isinstance(node, (ast.Lambda, ast.FunctionDef)):
+        a = node.args
+        return len(a.posonlyargs) + len(a.args), a.vararg is not None
+    return None
+
+
+class PallasContractsPass(AnalysisPass):
+    name = "pallas-contracts"
+    description = (
+        "kernel grid/BlockSpec consistency, tile geometry vs the pack layout, "
+        "and dequant dtype discipline at kernel boundaries"
+    )
+
+    def __init__(self, seg_words: int = None):
+        self._seg_words = seg_words
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith(SRC_PREFIX + "/kernels/")
+
+    def seg_words(self, mod: ModuleSource):
+        """pack.SEG_WORDS, parsed from the tree under analysis when present."""
+        if self._seg_words is not None:
+            return self._seg_words
+        pack = None
+        p = mod.path.resolve()
+        for parent in p.parents:
+            cand = parent / "index" / "pack.py"
+            if cand.exists():
+                pack = cand
+                break
+        if pack is None:
+            return None
+        for n in ast.walk(ast.parse(pack.read_text())):
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    if isinstance(t, ast.Name) and t.id == "SEG_WORDS":
+                        if isinstance(n.value, ast.Constant) and isinstance(n.value.value, int):
+                            self._seg_words = n.value.value
+                            return self._seg_words
+        return None
+
+    def run(self, mod: ModuleSource) -> list:
+        out = []
+        out.extend(self._check_tile_geometry(mod))
+        for fn in ast.walk(mod.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.extend(self._check_gridspecs(mod, fn))
+                out.extend(self._check_dequant(mod, fn))
+        return out
+
+    # -- TW vs pack.SEG_WORDS + divisibility asserts ---------------------------
+
+    def _check_tile_geometry(self, mod: ModuleSource) -> list:
+        out = []
+        tw_node = None
+        for n in mod.tree.body:
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    if isinstance(t, ast.Name) and t.id == "TW":
+                        tw_node = n
+        if tw_node is None:
+            return out
+        has_pallas = any(
+            isinstance(n, ast.Call) and self.dotted(n.func).endswith("pallas_call")
+            for n in ast.walk(mod.tree)
+        )
+        if not has_pallas:
+            return out
+        sw = self.seg_words(mod)
+        if (
+            sw is not None
+            and isinstance(tw_node.value, ast.Constant)
+            and tw_node.value.value != sw
+        ):
+            out.append(
+                self.finding(
+                    mod,
+                    tw_node,
+                    "tile-geometry",
+                    f"TW == {tw_node.value.value} but pack.SEG_WORDS == {sw}: the "
+                    "word-tile width must match the lane-strided segment granule",
+                )
+            )
+        has_div_assert = any(
+            isinstance(n, ast.Assert)
+            and any(
+                isinstance(x, ast.BinOp)
+                and isinstance(x.op, ast.Mod)
+                and isinstance(x.right, ast.Name)
+                and x.right.id == "TW"
+                for x in ast.walk(n.test)
+            )
+            for n in ast.walk(mod.tree)
+        )
+        if not has_div_assert:
+            out.append(
+                self.finding(
+                    mod,
+                    tw_node,
+                    "missing-divisibility-assert",
+                    "module tiles by TW but never asserts `% TW == 0` on operand "
+                    "widths; a ragged width mis-tiles silently",
+                )
+            )
+        return out
+
+    # -- grid spec consistency -------------------------------------------------
+
+    def _check_gridspecs(self, mod: ModuleSource, fn: ast.AST) -> list:
+        out = []
+        assigns = {}
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Assign) and len(n.targets) == 1:
+                t = n.targets[0]
+                if isinstance(t, ast.Name):
+                    assigns[t.id] = n.value
+
+        def resolve(node: ast.AST) -> ast.AST:
+            if isinstance(node, ast.Name) and node.id in assigns:
+                return assigns[node.id]
+            return node
+
+        for call in ast.walk(fn):
+            if not (isinstance(call, ast.Call) and self.dotted(call.func).endswith("pallas_call")):
+                continue
+            kw = {k.arg: k.value for k in call.keywords if k.arg}
+            n_prefetch = 0
+            grid = kw.get("grid")
+            in_specs = kw.get("in_specs")
+            out_specs = kw.get("out_specs")
+            if "grid_spec" in kw:
+                gs = resolve(kw["grid_spec"])
+                if isinstance(gs, ast.Call) and self.dotted(gs.func).endswith(
+                    "PrefetchScalarGridSpec"
+                ):
+                    gkw = {k.arg: k.value for k in gs.keywords if k.arg}
+                    grid = gkw.get("grid", grid)
+                    in_specs = gkw.get("in_specs", in_specs)
+                    out_specs = gkw.get("out_specs", out_specs)
+                    nsp = gkw.get("num_scalar_prefetch")
+                    if isinstance(nsp, ast.Constant) and isinstance(nsp.value, int):
+                        n_prefetch = nsp.value
+            grid = resolve(grid) if grid is not None else None
+            n_grid = _tuple_len(grid)
+            if n_grid is None:
+                continue  # grid not statically a tuple: nothing to check
+
+            specs = []
+            in_specs = resolve(in_specs) if in_specs is not None else None
+            if isinstance(in_specs, (ast.List, ast.Tuple)):
+                specs.extend(in_specs.elts)
+            out_block_rank = None
+            if out_specs is not None:
+                out_specs_r = resolve(out_specs)
+                specs.append(out_specs_r)
+                if isinstance(out_specs_r, ast.Call):
+                    shp = out_specs_r.args[0] if out_specs_r.args else None
+                    out_block_rank = _tuple_len(shp)
+
+            want = n_grid + n_prefetch
+            for spec in specs:
+                spec = resolve(spec)
+                if not (isinstance(spec, ast.Call) and self.dotted(spec.func).endswith("BlockSpec")):
+                    continue
+                shape = spec.args[0] if spec.args else None
+                imap = spec.args[1] if len(spec.args) > 1 else None
+                arity = _lambda_arity(imap) if imap is not None else None
+                if arity is not None:
+                    n_pos, vararg = arity
+                    ok = n_pos == want or (vararg and n_pos <= want)
+                    if not ok:
+                        out.append(
+                            self.finding(
+                                mod,
+                                imap,
+                                "index-map-arity",
+                                f"index map takes {n_pos} args but the spec needs "
+                                f"len(grid)={n_grid} + num_scalar_prefetch="
+                                f"{n_prefetch} = {want}",
+                            )
+                        )
+                rank = _tuple_len(shape)
+                if rank is not None and isinstance(imap, ast.Lambda):
+                    ret = imap.body
+                    nret = _tuple_len(ret)
+                    if nret is not None and nret != rank:
+                        out.append(
+                            self.finding(
+                                mod,
+                                imap,
+                                "blockspec-rank",
+                                f"block shape has {rank} dims but the index map "
+                                f"returns {nret} coordinates",
+                            )
+                        )
+
+            oshape = resolve(kw["out_shape"]) if "out_shape" in kw else None
+            if (
+                out_block_rank is not None
+                and isinstance(oshape, ast.Call)
+                and self.dotted(oshape.func).endswith("ShapeDtypeStruct")
+                and oshape.args
+            ):
+                orank = _tuple_len(resolve(oshape.args[0]))
+                if orank is not None and orank != out_block_rank:
+                    out.append(
+                        self.finding(
+                            mod,
+                            oshape,
+                            "out-rank",
+                            f"out_shape rank {orank} != out BlockSpec block rank "
+                            f"{out_block_rank}",
+                        )
+                    )
+
+            cp = kw.get("compiler_params")
+            if isinstance(cp, ast.Call):
+                for k in cp.keywords:
+                    if k.arg == "dimension_semantics":
+                        nsem = _tuple_len(resolve(k.value))
+                        if nsem is not None and nsem != n_grid:
+                            out.append(
+                                self.finding(
+                                    mod,
+                                    k.value,
+                                    "dim-semantics-arity",
+                                    f"dimension_semantics names {nsem} dims but the "
+                                    f"grid has {n_grid}",
+                                )
+                            )
+        return out
+
+    # -- quantized operand dtype discipline ------------------------------------
+
+    def _quantized_params(self, mod: ModuleSource, fn: ast.AST) -> set:
+        params = {p.arg for p in fn.args.args}
+        q = {p for p in params if p in _PACKED_NAME or p.startswith("packed")}
+        for suffix, extra in QUANTIZED_REFS.items():
+            if mod.relpath.endswith(suffix) or mod.path.as_posix().endswith(suffix):
+                q |= extra & params
+        return q
+
+    def _check_dequant(self, mod: ModuleSource, fn: ast.AST) -> list:
+        refs = [p.arg for p in fn.args.args if p.arg.endswith("_ref")]
+        if len(refs) < 2:
+            return []  # not a kernel body
+        qrefs = self._quantized_params(mod, fn)
+        if not qrefs:
+            return []
+        out = []
+        tainted: set = set()
+
+        def expr_tainted(e: ast.AST) -> bool:
+            if isinstance(e, ast.Call):
+                if isinstance(e.func, ast.Attribute) and e.func.attr == "astype":
+                    return False  # widened here: clean from this point on
+                return any(expr_tainted(a) for a in e.args)
+            if isinstance(e, ast.Name):
+                return e.id in tainted or e.id in qrefs
+            if isinstance(e, ast.Subscript):
+                return expr_tainted(e.value)
+            if isinstance(e, ast.BinOp):
+                return expr_tainted(e.left) or expr_tainted(e.right)
+            if isinstance(e, (ast.Tuple, ast.List)):
+                return any(expr_tainted(x) for x in e.elts)
+            if isinstance(e, ast.UnaryOp):
+                return expr_tainted(e.operand)
+            if isinstance(e, ast.Attribute):
+                return expr_tainted(e.value)
+            return False
+
+        for _ in range(3):
+            before = len(tainted)
+            for n in ast.walk(fn):
+                if isinstance(n, ast.Assign) and expr_tainted(n.value):
+                    for t in n.targets:
+                        if isinstance(t, ast.Name):
+                            tainted.add(t.id)
+            if len(tainted) == before:
+                break
+
+        for n in ast.walk(fn):
+            if isinstance(n, (ast.Assign, ast.AugAssign)):
+                targets = n.targets if isinstance(n, ast.Assign) else [n.target]
+                stores_ref = any(
+                    isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id.endswith("_ref")
+                    for t in targets
+                )
+                if stores_ref and expr_tainted(n.value):
+                    out.append(
+                        self.finding(
+                            mod,
+                            n,
+                            "dequant-astype",
+                            "quantized words reach the output accumulation without "
+                            ".astype — integer payloads must be widened in-register "
+                            "before arithmetic",
+                        )
+                    )
+        return out

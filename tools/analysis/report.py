@@ -1,0 +1,76 @@
+"""Finding/diff rendering: human text and machine JSON."""
+
+from __future__ import annotations
+
+import json
+
+from tools.analysis.baseline import Baseline, Diff
+
+
+def _fmt(fp: str, f, mark: str) -> str:
+    return (
+        f"{mark} {f.file}:{f.line}:{f.col}  [{f.invariant}/{f.code}]  ({fp})\n"
+        f"    {f.snippet}\n"
+        f"    {f.message}"
+    )
+
+
+def render_text(d: Diff, baseline: Baseline, check: bool, tree_scan: bool) -> str:
+    lines = []
+    for fp, f in sorted(d.new.items(), key=lambda kv: (kv[1].file, kv[1].line)):
+        lines.append(_fmt(fp, f, "FAIL"))
+    if not check:
+        for fp, f in sorted(d.matched.items(), key=lambda kv: (kv[1].file, kv[1].line)):
+            lines.append(_fmt(fp, f, "base"))
+    for fp in d.unjustified:
+        e = baseline.entries[fp]
+        lines.append(
+            f"FAIL baseline entry {fp} ({e['file']}:{e.get('line', '?')} "
+            f"[{e['invariant']}/{e['code']}]) has no justification — write why "
+            "this site is exempt or fix it"
+        )
+    if tree_scan:
+        for fp in d.stale:
+            e = baseline.entries[fp]
+            lines.append(
+                f"FAIL stale baseline entry {fp} ({e['file']} [{e['invariant']}/"
+                f"{e['code']}]) matches nothing — the site was fixed or moved; "
+                "run --update-baseline"
+            )
+    n_new, n_base = len(d.new), len(d.matched)
+    summary = f"{n_new} unbaselined finding(s), {n_base} baselined"
+    if d.unjustified:
+        summary += f", {len(d.unjustified)} unjustified baseline entr(ies)"
+    if tree_scan and d.stale:
+        summary += f", {len(d.stale)} stale"
+    lines.append(summary)
+    if n_new:
+        lines.append(
+            "fix each site or add a baseline entry WITH a justification "
+            "(--update-baseline adds skeleton entries; justifications are "
+            "written by hand, reviewed like code)"
+        )
+    return "\n".join(lines)
+
+
+def render_json(d: Diff, baseline: Baseline) -> str:
+    def row(fp, f, baselined):
+        return {
+            "fingerprint": fp,
+            "invariant": f.invariant,
+            "code": f.code,
+            "file": f.file,
+            "line": f.line,
+            "col": f.col,
+            "message": f.message,
+            "snippet": f.snippet,
+            "baselined": baselined,
+        }
+
+    payload = {
+        "findings": [row(fp, f, False) for fp, f in sorted(d.new.items())]
+        + [row(fp, f, True) for fp, f in sorted(d.matched.items())],
+        "unjustified": d.unjustified,
+        "stale": d.stale,
+    }
+    return json.dumps(payload, indent=2)
