@@ -1,0 +1,261 @@
+"""Freshness benchmark for the live mutable index (DESIGN.md §12). Emits
+``BENCH_freshness.json`` next to the other BENCH artifacts.
+
+Arms:
+  visibility   add_docs -> first serving: each added doc is built to dominate
+               a probe query; the lag is measured from the moment add_docs
+               returns to the completion of the first search that surfaces the
+               doc. The §12 contract is "visible to every search admitted
+               after add_docs returns", so the very next search must contain
+               it (``always_next_search``) and the lag is pure serving
+               latency, not an indexing pipeline delay.
+  mixed_9010   90/10 read/write traffic through the engine with background
+               compaction enabled: read p99 under mutation pressure vs the
+               read-only p99 on the same engine before any writes.
+  flip_audit   sustained mutation traffic forced across >= 1 background
+               compaction flip; every response is audited against the op log
+               by its delta_seq provenance: 0 stale (tombstoned doc served at
+               or past its delete seq), 0 lost (dominating added doc missing
+               at or past its add seq), 0 failures.
+
+  PYTHONPATH=src python -m benchmarks.freshness_suite          # full settings
+  PYTHONPATH=src python -m benchmarks.freshness_suite --smoke  # CI settings
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.api import DynamicParams, Retriever, SearchRequest
+from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
+from repro.index.builder import IndexBuildConfig
+
+BENCH_JSON = os.environ.get("BENCH_FRESHNESS_JSON", "BENCH_freshness.json")
+K = 10
+
+
+def _setup(smoke: bool):
+    ccfg = CorpusConfig(
+        n_docs=512 if smoke else 4096,
+        vocab=256 if smoke else 512,
+        n_topics=8,
+        doc_len_mean=16,
+        query_len_mean=8,
+        seed=42,
+    )
+    corpus = make_corpus(ccfg)
+    queries = make_queries(ccfg, corpus, 16, seed=4)
+    bcfg = IndexBuildConfig(b=8, c=8, kmeans_iters=2, build_avg=False)
+    retr = Retriever.build(corpus, build_cfg=bcfg, params=DynamicParams(k=K))
+    retr.mutable()
+    return ccfg, corpus, queries, retr
+
+
+def _pct(vals, q):
+    return float(np.percentile(np.asarray(vals), q)) if vals else 0.0
+
+
+def _search(engine, qt, qw):
+    return engine.search(SearchRequest(qt, qw, params=DynamicParams(k=K))).result(
+        timeout=600
+    )
+
+
+def run() -> list[Row]:
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
+    n_vis = 8 if smoke else 32
+    n_mixed = 100 if smoke else 600
+    ccfg, corpus, queries, retr = _setup(smoke)
+    engine = retr.serve(
+        max_batch=8,
+        cache_size=256,
+        compaction=dict(
+            max_delta_docs=8 if smoke else 48,
+            max_tombstones=4 if smoke else 24,
+            interval_s=0.05,
+        ),
+    )
+    arms: dict[str, dict] = {}
+
+    # ---- visibility: add -> first serving ----------------------------------------
+    lags_ms, always_next = [], True
+    for i in range(n_vis):
+        qt, qw = queries[i % len(queries)]
+        doc = (qt, np.full(qt.shape, 100.0, np.float32))
+        t0 = time.perf_counter()
+        (doc_id,), _ = engine.add_docs([doc])
+        resp = _search(engine, qt, qw)
+        lag_ms = (time.perf_counter() - t0) * 1e3
+        visible = int(resp.doc_ids[0]) == doc_id
+        always_next &= visible
+        # poll until visible so the lag is still defined if the gate fails
+        deadline = time.monotonic() + 60
+        while not visible and time.monotonic() < deadline:
+            resp = _search(engine, qt, qw)
+            lag_ms = (time.perf_counter() - t0) * 1e3
+            visible = doc_id in set(int(d) for d in resp.doc_ids)
+        lags_ms.append(lag_ms)
+        engine.delete_docs([doc_id])  # restore the baseline ranking
+    arms["visibility"] = {
+        "n": n_vis,
+        "always_next_search": bool(always_next),
+        "lag_ms_mean": float(np.mean(lags_ms)),
+        "lag_ms_p50": _pct(lags_ms, 50),
+        "lag_ms_p99": _pct(lags_ms, 99),
+    }
+
+    # ---- mixed 90/10 read/write --------------------------------------------------
+    rng = np.random.default_rng(7)
+    read_only_ms = []
+    for i in range(n_mixed // 4):
+        qt, qw = queries[int(rng.integers(0, len(queries)))]
+        t0 = time.perf_counter()
+        _search(engine, qt, qw)
+        read_only_ms.append((time.perf_counter() - t0) * 1e3)
+    mixed_read_ms, writes = [], 0
+    added_pool: list[int] = []
+    for i in range(n_mixed):
+        if rng.random() < 0.10:
+            writes += 1
+            if added_pool and rng.random() < 0.4:
+                engine.delete_docs([added_pool.pop()])
+            else:
+                n = int(rng.integers(3, 9))
+                tids = rng.choice(ccfg.vocab, size=n, replace=False).astype(np.int32)
+                ws = rng.uniform(0.1, 2.0, size=n).astype(np.float32)
+                ids, _ = engine.add_docs([(tids, ws)])
+                added_pool.extend(ids)
+        else:
+            qt, qw = queries[int(rng.integers(0, len(queries)))]
+            t0 = time.perf_counter()
+            _search(engine, qt, qw)
+            mixed_read_ms.append((time.perf_counter() - t0) * 1e3)
+    arms["mixed_9010"] = {
+        "reads": len(mixed_read_ms),
+        "writes": writes,
+        "read_p50_ms": _pct(mixed_read_ms, 50),
+        "read_p99_ms": _pct(mixed_read_ms, 99),
+        "read_only_p99_ms": _pct(read_only_ms, 99),
+    }
+
+    # ---- compaction-flip audit ---------------------------------------------------
+    qt, qw = queries[1]
+    dominating = (qt, np.full(qt.shape, 100.0, np.float32))
+    added_at, deleted_at = {}, {}
+    responses = []
+    flips_before = engine.stats.summary()["compactions"]
+    rounds = 12 if smoke else 40
+    for r in range(rounds):
+        n = int(rng.integers(3, 9))
+        filler = (
+            rng.choice(ccfg.vocab, size=n, replace=False).astype(np.int32),
+            rng.uniform(0.1, 2.0, size=n).astype(np.float32),
+        )
+        ids, seq = engine.add_docs([dominating, filler])
+        added_at[ids[0]] = seq
+        responses.append(_search(engine, qt, qw))
+        if r % 2 == 0:
+            deleted_at[ids[0]] = engine.delete_docs([ids[0]])
+            responses.append(_search(engine, qt, qw))
+    # wait for at least one background flip under this traffic
+    deadline = time.monotonic() + 300
+    while (
+        engine.stats.summary()["compactions"] <= flips_before
+        and time.monotonic() < deadline
+    ):
+        time.sleep(0.05)
+    responses.append(_search(engine, qt, qw))
+    stale = lost = 0
+    for resp in responses:
+        got = set(int(d) for d in resp.doc_ids if d >= 0)
+        for doc, seq in deleted_at.items():
+            if resp.delta_seq >= seq and doc in got:
+                stale += 1
+        live = [
+            d
+            for d, s in added_at.items()
+            if resp.delta_seq >= s
+            and (d not in deleted_at or resp.delta_seq < deleted_at[d])
+        ]
+        if live and not (set(live) & got):
+            lost += 1
+    s = engine.stats.summary()
+    engine.shutdown()
+    arms["flip_audit"] = {
+        "responses": len(responses),
+        "stale": stale,
+        "lost": lost,
+        "compactions": s["compactions"],
+        "compaction_failures": s["compaction_failures"],
+        "last_compaction_ms": s["last_compaction_ms"],
+        "adds": s["adds"],
+        "deletes": s["deletes"],
+    }
+
+    payload = {
+        "backend": "cpu",
+        "smoke": smoke,
+        "n_docs": ccfg.n_docs,
+        "arms": arms,
+        "gates": {
+            "adds_visible_next_search": arms["visibility"]["always_next_search"],
+            "flip_audit_zero_stale": arms["flip_audit"]["stale"] == 0,
+            "flip_audit_zero_lost": arms["flip_audit"]["lost"] == 0,
+            "compaction_flipped": arms["flip_audit"]["compactions"] >= 1,
+            "compaction_clean": arms["flip_audit"]["compaction_failures"] == 0,
+        },
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    return [
+        Row(
+            "freshness/visibility",
+            arms["visibility"]["lag_ms_p99"] * 1e3,
+            f"lag_p50_ms={arms['visibility']['lag_ms_p50']:.2f};"
+            f"lag_p99_ms={arms['visibility']['lag_ms_p99']:.2f};"
+            f"always_next={arms['visibility']['always_next_search']}",
+        ),
+        Row(
+            "freshness/mixed_9010",
+            arms["mixed_9010"]["read_p99_ms"] * 1e3,
+            f"read_p99_ms={arms['mixed_9010']['read_p99_ms']:.2f};"
+            f"read_only_p99_ms={arms['mixed_9010']['read_only_p99_ms']:.2f};"
+            f"writes={arms['mixed_9010']['writes']}",
+        ),
+        Row(
+            "freshness/flip_audit",
+            arms["flip_audit"]["last_compaction_ms"] * 1e3,
+            f"stale={stale};lost={lost};compactions={arms['flip_audit']['compactions']};"
+            f"failures={arms['flip_audit']['compaction_failures']}",
+        ),
+        Row(
+            "freshness/gates",
+            0.0,
+            ";".join(f"{k}={v}" for k, v in payload["gates"].items())
+            + f";json={BENCH_JSON}",
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI settings: small corpus")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ.setdefault("BENCH_SMOKE", "1")
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for row in run():
+        print(row.csv(), flush=True)
+    print(f"# suite freshness done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

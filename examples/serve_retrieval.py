@@ -1,8 +1,11 @@
 """Serving example: the unified ``repro.api`` surface end to end — build, persist,
 mmap-load, serve through the bucketed engine (shape-bucket ladder + query-result
 cache + resilient batching pipeline, DESIGN.md §6), hot-swap with traffic in
-flight (DESIGN.md §7), and per-request ``DynamicParams`` overrides served with
-zero recompiles through one bucket ladder (DESIGN.md §9).
+flight (DESIGN.md §7), per-request ``DynamicParams`` overrides served with
+zero recompiles through one bucket ladder (DESIGN.md §9), and live mutation —
+delta-segment adds visible to the very next search, tombstoned deletes that
+never surface again, synchronous compaction, and a mutable-format save
+(DESIGN.md §12).
 
 ``--shards N`` serves through the sharded backend (DESIGN.md §8): the index is
 persisted as an atomically-committed N-shard set, every shard mmap-loads, results
@@ -28,6 +31,7 @@ import tempfile
 import time
 
 import jax
+import numpy as np
 
 from repro.api import DynamicParams, Retriever, SearchRequest, StaticConfig
 from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
@@ -119,6 +123,39 @@ def main() -> None:
     print(f"cache: hit_rate={stats['cache_hit_rate']:.2f} "
           f"({stats['cache_hits']} hits / {stats['cache_misses']} misses)")
     print("sample result ids:", results[0].doc_ids[:5].tolist())
+
+    # ---- live mutation (DESIGN.md §12): delta adds, tombstones, compaction ---------
+    # Promote the loaded retriever in place: adds land in an exactly-scored
+    # delta segment, deletes become tombstones, and the engine's cache key
+    # grows a delta-seq component so every mutation retires stale entries —
+    # with zero recompiles (the compiled buckets never change). A sharded
+    # save cannot be promoted in place, so the demo runs single-device.
+    if not n_shards:
+        retr.mutable()
+        eng = retr.serve(max_batch=8, nq_max=64, cache_size=256, compaction=False)
+        qt, qw = base[0]
+        warm = eng.search(SearchRequest(qt, qw)).result(timeout=300)
+        traces_before = retr.n_traces()
+        (new_id,), seq = eng.add_docs([(qt, np.full(qt.shape, 100.0, np.float32))])
+        r = eng.search(SearchRequest(qt, qw)).result(timeout=300)
+        assert int(r.doc_ids[0]) == new_id, "added doc must win the very next search"
+        assert r.delta_seq == seq and not r.cache_hit
+        seq2 = eng.delete_docs([new_id])
+        r2 = eng.search(SearchRequest(qt, qw)).result(timeout=300)
+        assert new_id not in {int(d) for d in r2.doc_ids}, "tombstoned doc surfaced"
+        assert r2.delta_seq == seq2
+        assert r2.doc_ids[: len(warm.doc_ids)].tolist() == warm.doc_ids.tolist()
+        s = eng.stats.summary()
+        eng.shutdown()
+        print(f"\nlive mutation: doc {new_id} rank-1 on the next search after "
+              f"add (seq {seq}), gone after delete (seq {seq2}) | "
+              f"adds={s['adds']} deletes={s['deletes']} "
+              f"recompiles={retr.n_traces() - traces_before}")
+        t0 = time.perf_counter()
+        retr.compact()  # fold delta + tombstones into a fresh generation
+        fp = retr.save(index_dir + "_live")  # mutable format: load resumes mid-mutation
+        print(f"compacted into a fresh superblock generation in "
+              f"{time.perf_counter() - t0:.1f}s | mutable save {fp[:12]}…")
 
     # ---- SLO control plane (DESIGN.md §10): overload -> degrade/shed -> recover ----
     # An engine with an SLO target and per-request deadlines: a burst beyond

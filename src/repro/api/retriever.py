@@ -6,6 +6,7 @@
     resp = retr.search(SearchRequest(tids, ws))          # one query, typed
     resp = retr.search(SearchRequest(tids, ws, params=DynamicParams(k=100, beta=0.5)))
     eng  = retr.serve(max_batch=8, cache_size=1024)      # async bucketed engine
+    retr.add([(tids, ws), ...]); retr.delete([doc_id])   # live mutation (§12)
 
 The facade owns the static/dynamic boundary: ``StaticConfig`` picks the
 compiled program (backend registry: local / sharded / shard_map / exact), the
@@ -68,6 +69,9 @@ class Retriever:
         self.defaults = defaults
         self.backend_name = backend_name
         self.vocab = vocab
+        self._corpus = None  # (doc_ptr, tids, ws) retained by build() for promotion
+        self._build_cfg = None
+        self._adapter = None  # serve.mutable.MutableRetrieverAdapter once promoted
 
     # ---- construction ----------------------------------------------------------
 
@@ -151,11 +155,17 @@ class Retriever:
         from repro.index.builder import IndexBuildConfig, build_index
 
         doc_ptr, tids, ws, vocab = _corpus_arrays(corpus)
-        index = build_index(doc_ptr, tids, ws, vocab, build_cfg or IndexBuildConfig())
-        return cls.from_index(
+        bcfg = build_cfg or IndexBuildConfig()
+        index = build_index(doc_ptr, tids, ws, vocab, bcfg)
+        retr = cls.from_index(
             index, static_cfg, params=params, backend=backend, shards=shards,
             mesh=mesh, impl=impl, **backend_kw,
         )
+        # retain the source corpus: mutable() promotion then starts from the
+        # exact floats instead of the dequantized forward-index reconstruction
+        retr._corpus = (np.asarray(doc_ptr), np.asarray(tids), np.asarray(ws))
+        retr._build_cfg = bcfg
+        return retr
 
     @classmethod
     def load(
@@ -171,11 +181,41 @@ class Retriever:
         mmap: bool = True,
         **backend_kw,
     ) -> "Retriever":
-        """Open a persisted index (``repro.index.store`` format, single or
-        sharded — auto-detected) mmap-backed and wrap it in a backend. A
-        sharded directory yields the sharded backend at its stored shard
-        count; ``shards=`` re-shards a *single*-index directory in memory."""
-        from repro.index.store import load_index_auto
+        """Open a persisted index (``repro.index.store`` format — single,
+        sharded or mutable, auto-detected) mmap-backed and wrap it in a
+        backend. A sharded directory yields the sharded backend at its stored
+        shard count; ``shards=`` re-shards a *single*-index directory in
+        memory. A mutable directory (``save_mutable_index``) comes back
+        already promoted: its delta segment, tombstones and id counters are
+        restored, so ``add``/``delete``/``compact`` resume where the save
+        left off."""
+        from repro.index.store import (
+            MUTABLE_MANIFEST_FORMAT,
+            load_index_auto,
+            load_mutable_index,
+            manifest_format,
+        )
+
+        if manifest_format(directory) == MUTABLE_MANIFEST_FORMAT:
+            if shards or mesh is not None:
+                raise ValueError(
+                    f"{directory} is a mutable-index save; it serves single-device "
+                    f"(delta merge is host-side) — drop shards=/mesh=, or compact "
+                    f"and re-save with save_sharded_index for sharded serving"
+                )
+            mi = load_mutable_index(directory, mmap=mmap, device=True)
+            retr = cls.from_index(
+                mi.state().main, static_cfg, params=params,
+                backend=backend or "local", impl=impl, **backend_kw,
+            )
+            from repro.serve.mutable import MutableRetrieverAdapter
+
+            retr._build_cfg = mi.build_cfg
+            mi.set_runtime(retr._backend)
+            retr._adapter = MutableRetrieverAdapter(mi, retr._factory)
+            retr._backend = retr._adapter
+            retr.index = mi
+            return retr
 
         index = load_index_auto(directory, mmap=mmap, device=True)
         stored = len(index.shards) if hasattr(index, "shards") else 0
@@ -217,6 +257,7 @@ class Retriever:
         nblk = np.asarray(out.n_blocks_scored)
         shard_cand = getattr(out, "shard_candidates", None)
         shard_cand = None if shard_cand is None else np.asarray(shard_cand)
+        served_seq = int(getattr(out, "delta_seq", 0) or 0)
         bucket = (len(requests), nq)
         return [
             SearchResponse(
@@ -230,25 +271,121 @@ class Retriever:
                 cache_hit=False,
                 bucket=bucket,
                 shard_candidates=None if shard_cand is None else shard_cand[i].copy(),
+                delta_seq=served_seq,
             )
             for i in range(len(requests))
         ]
 
+    # ---- live mutation (DESIGN.md §12) ------------------------------------------
+
+    def mutable(self) -> "Retriever":
+        """Promote this retriever to a live-mutable one (idempotent, in place).
+
+        The backend is wrapped in a ``serve.mutable.MutableRetrieverAdapter``
+        over a ``MutableIndex``: adds land in an exactly-scored delta segment,
+        deletes become tombstones, and ``compact()`` folds both back into
+        superblocks. Searches keep flowing through the same facade/engine
+        contract. ``build()`` retains the source corpus, so promotion is exact;
+        a retriever over a loaded single index reconstructs its corpus from the
+        forward index (dequantized — see ``index.mutable.corpus_from_index``).
+        A persisted *sharded* set cannot be promoted in place: its source
+        corpus is not recoverable shard-wise — load the single-index directory
+        or rebuild from the corpus."""
+        if self._adapter is not None:
+            return self
+        from repro.index.builder import IndexBuildConfig
+        from repro.index.layout import LSPIndex
+        from repro.index.mutable import MutableIndex, corpus_from_index
+        from repro.serve.mutable import MutableRetrieverAdapter
+
+        main = self.index if isinstance(self.index, LSPIndex) else None
+        if self._corpus is not None:
+            doc_ptr, tids, ws = self._corpus
+        elif main is not None:
+            doc_ptr, tids, ws = corpus_from_index(main)
+        else:
+            raise ValueError(
+                "cannot promote a persisted sharded index set to mutable: the source "
+                "corpus is not recoverable shard-wise — load the single-index "
+                "directory (Retriever.load on the unsharded save) or Retriever.build "
+                "from the corpus, then serve backend='sharded'"
+            )
+        mi = MutableIndex(
+            main, doc_ptr, tids, ws, self.vocab,
+            self._build_cfg or IndexBuildConfig(),
+            runtime=self._backend,
+        )
+        self._adapter = MutableRetrieverAdapter(mi, self._factory)
+        self._backend = self._adapter
+        self.index = mi
+        return self
+
+    def add(self, docs) -> list[int]:
+        """Add docs (each a ``(tids, weights)`` pair) to the live corpus;
+        returns their assigned external ids. Promotes to mutable on first use.
+        New docs are visible to every subsequent search (exactly scored from
+        the delta segment until the next compaction)."""
+        self.mutable()
+        ids, _ = self._adapter.add_docs(docs)
+        return ids
+
+    def delete(self, ids) -> None:
+        """Tombstone external doc ids — they never appear in results again.
+        Raises KeyError on unknown/already-deleted ids."""
+        self.mutable()
+        self._adapter.delete_docs(ids)
+
+    def compact(self) -> None:
+        """Fold main + delta − tombstones into a fresh superblock generation
+        (synchronous; serving engines attach a background CompactionManager
+        instead — see ``serve()``)."""
+        self.mutable()
+        self._adapter.compact()
+
+    def save(self, directory: str) -> str:
+        """Persist the current state to ``directory`` (atomic commit). A
+        promoted retriever writes the mutable format — main generation plus
+        live delta/tombstone state, so ``Retriever.load`` resumes mutation
+        exactly where this save left off; an unpromoted one writes the plain
+        single-index format. Returns the content fingerprint."""
+        from repro.index.layout import LSPIndex
+        from repro.index.store import save_index, save_mutable_index
+
+        if self._adapter is not None:
+            return save_mutable_index(directory, self.index, self._build_cfg)
+        if not isinstance(self.index, LSPIndex):
+            raise ValueError(
+                "Retriever.save handles single LSPIndex retrievers; persist "
+                "sharded sets with index.store.save_sharded_index"
+            )
+        return save_index(directory, self.index, self._build_cfg)
+
     # ---- serving ----------------------------------------------------------------
 
-    def serve(self, **engine_knobs):
+    def serve(self, *, compaction=None, **engine_knobs):
         """Wrap this retriever in the async bucketed serving engine (DESIGN.md
         §6): batching, shape buckets, result cache (keyed on the dynamic-params
-        bytes), failure isolation and ``swap_index`` hot-swaps all compose."""
+        bytes), failure isolation and ``swap_index`` hot-swaps all compose.
+
+        When the retriever has been promoted with ``mutable()``, a background
+        ``CompactionManager`` is attached (thresholds via
+        ``compaction=dict(max_delta_docs=..., max_tombstones=..., interval_s=...)``;
+        ``compaction=False`` serves without one) and the engine exposes
+        ``add_docs``/``delete_docs``."""
         from repro.serve.engine import RetrievalEngine
 
-        return RetrievalEngine(
+        engine = RetrievalEngine(
             self._backend,
             self.vocab,
             default_params=self.defaults,
             retriever_factory=self._factory,
             **engine_knobs,
         )
+        if self._adapter is not None and compaction is not False:
+            from repro.serve.mutable import CompactionManager
+
+            CompactionManager(engine, self._adapter, **(compaction or {}))
+        return engine
 
     # ---- introspection -----------------------------------------------------------
 

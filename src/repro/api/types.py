@@ -88,6 +88,7 @@ class SearchResponse:
     shard_candidates: Optional[np.ndarray] = field(default=None, repr=False)  # int32 [P] top-γ share per shard
     degraded: bool = False  # served below the requested/default quality point?
     params_served: Optional[DynamicParams] = None  # the point actually scored
+    delta_seq: int = 0  # mutation sequence served (0 for an immutable index)
 
     @property
     def k(self) -> int:

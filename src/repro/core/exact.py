@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.query import QueryBatch, scatter_dense
 from repro.core.scoring import NEG, score_positions_fwd
@@ -39,3 +40,32 @@ def retrieve_exact(index: LSPIndex, qb: QueryBatch, k: int, doc_chunk: int = 819
     (vals, ids_k), _ = jax.lax.scan(body, init, starts)
     ids = jnp.where(vals > NEG / 2, ids_k, -1)
     return ids, vals
+
+
+def score_delta_docs(
+    q_tids: np.ndarray,
+    q_ws: np.ndarray,
+    d_tids: np.ndarray,
+    d_ws: np.ndarray,
+    vocab: int,
+) -> np.ndarray:
+    """Exact host-side scores of delta-segment docs against a query batch.
+
+    The delta segment has no superblock structure, quantization, or pruning —
+    every delta doc is scored exactly, in float32, on the host. Inputs mirror
+    the padded batch convention everywhere else: queries [Q, nq] and docs
+    [D, nd] padded with sentinel tid == ``vocab`` / weight 0; the sentinel
+    column of the dense scatter is zeroed (same as ``scatter_dense``), so
+    padding contributes exactly 0 to every dot product. The scatter uses
+    ``np.add.at`` and the reduction a fixed-axis float32 sum — deterministic
+    summation order, which the replay-parity property test relies on.
+    Returns float32 [Q, D].
+    """
+    q = q_tids.shape[0]
+    qdense = np.zeros((q, vocab + 1), np.float32)
+    np.add.at(qdense, (np.arange(q)[:, None], np.asarray(q_tids, np.int64)), np.asarray(q_ws, np.float32))
+    qdense[:, vocab] = 0.0
+    if d_tids.size == 0:
+        return np.zeros((q, d_tids.shape[0]), np.float32)
+    gathered = qdense[:, np.asarray(d_tids, np.int64)]  # [Q, D, nd]
+    return (gathered * np.asarray(d_ws, np.float32)[None, :, :]).sum(axis=2, dtype=np.float32)

@@ -38,10 +38,14 @@ config AND to the single-device program at the same point.
 
 Exactness requires the competitive *block* budget to be non-binding: a global
 block cut would need one more cross-shard bounds merge (an O(P·block_budget)
-collective — see the ROADMAP open item), which is not implemented; a
-``block_budget`` below the full ``budget·c`` raises ``NotImplementedError``
-pointing at the single-device fallback. BMP (no superblock level) and the
-legacy scoring path are likewise rejected.
+collective — see the ROADMAP open item), which is not implemented. A
+``block_budget`` below the full ``budget·c`` raises ``NotImplementedError``;
+the supported fallback contract is the unified API's single-device 'local'
+backend — ``repro.api.Retriever.from_index(index, backend="local")``, i.e.
+``core.lsp.jit_search`` — which serves the identical StaticConfig/DynamicParams
+surface and honours competitive block budgets (at full-index memory on one
+device). BMP (no superblock level) and the legacy scoring path are likewise
+rejected.
 
 Two transports share all of the per-shard math above:
   * host-loop (``mesh=None``): shards traversed in one jitted program on any
@@ -281,8 +285,11 @@ def _validate(scfg: StaticConfig, impl: str, c: int, ns_true: int) -> None:
             f"budget*c={budget * c} needs the cross-shard bounds merge (one more "
             "O(P*block_budget) collective to cut the globally top-bounded blocks; "
             "see the ROADMAP open item) which is not implemented. Use "
-            "block_budget=0 (θ/η pruning only) or fall back to the single-device "
-            "retriever (core.lsp.jit_search), which honours competitive budgets."
+            "block_budget=0 (θ/η pruning only), or serve this config on the "
+            "single-device fallback: the 'local' backend of the unified API — "
+            "repro.api.Retriever.from_index(index, backend='local') (= "
+            "core.lsp.jit_search) — honours competitive budgets behind the same "
+            "StaticConfig/DynamicParams contract."
         )
 
 

@@ -54,6 +54,7 @@ from repro.index.layout import (
 MANIFEST_NAME = "manifest.msgpack"
 MANIFEST_FORMAT = "lsp-index"
 SHARDED_MANIFEST_FORMAT = "lsp-sharded-index"
+MUTABLE_MANIFEST_FORMAT = "lsp-mutable-index"
 
 # Every NamedTuple node that may appear in an LSPIndex, by manifest type tag. The
 # manifest spells out the full tree, so a load can only ever construct these types.
@@ -144,6 +145,13 @@ def _read_raw_manifest(directory: str) -> dict:
         raise FileNotFoundError(f"{directory} is not a committed index (missing marker)")
     with open(os.path.join(directory, MANIFEST_NAME), "rb") as f:
         return msgpack.unpackb(f.read(), strict_map_key=False)
+
+
+def manifest_format(directory: str) -> str:
+    """The ``format`` tag of a committed index dir ("lsp-index",
+    "lsp-sharded-index" or "lsp-mutable-index") — lets callers branch on the
+    persisted flavor before picking a loader."""
+    return str(_read_raw_manifest(directory).get("format"))
 
 
 def read_manifest(directory: str) -> dict:
@@ -289,14 +297,119 @@ def load_sharded_index(
     ]
 
 
+# ------------------------------------------------------------- mutable indexes
+
+
+def save_mutable_index(directory: str, mutable, cfg: Optional[IndexBuildConfig] = None) -> str:
+    """Persist a ``MutableIndex`` generation — compacted main tree + source corpus
+    CSR + the live delta segment, tombstone set and mutation counters — under one
+    atomically-committed directory. The delta/tombstone state rides in the same
+    manifest as the main tree (array leaves under ``state.*``), and the content
+    fingerprint covers *all* leaves, so two saves of the same logical corpus at
+    different mutation points hash differently. Requires a compacted generation
+    (``MutableIndex.persistable_state`` raises if the main index is absent).
+    Returns the content fingerprint."""
+    state = mutable.persistable_state()
+    arrays: dict[str, np.ndarray] = {}
+    tree = _encode(state["main"], "main", arrays)
+    state_specs = {
+        name: _encode(np.ascontiguousarray(arr), f"state.{name}", arrays)
+        for name, arr in state["arrays"].items()
+    }
+    fingerprint = _fingerprint(arrays)
+    bcfg = cfg if cfg is not None else getattr(mutable, "build_cfg", None)
+    manifest = {
+        "format": MUTABLE_MANIFEST_FORMAT,
+        "layout_version": LAYOUT_VERSION,
+        "fingerprint": fingerprint,
+        "build_config": dataclasses.asdict(bcfg) if bcfg is not None else None,
+        "meta": {k: int(v) for k, v in state["meta"].items()},
+        "tree": tree,
+        "state": state_specs,
+    }
+    parent = os.path.dirname(os.path.abspath(directory))
+    os.makedirs(parent, exist_ok=True)
+    with dir_lock(parent):
+        with atomic_commit_dir(os.path.abspath(directory)) as tmp:
+            for key, arr in arrays.items():
+                buf = io.BytesIO()
+                np.save(buf, arr)
+                fsync_write(os.path.join(tmp, key + ".npy"), buf.getvalue())
+            fsync_write(os.path.join(tmp, MANIFEST_NAME), msgpack.packb(manifest))
+    return fingerprint
+
+
+def read_mutable_manifest(directory: str) -> dict:
+    manifest = _read_raw_manifest(directory)
+    if manifest.get("format") != MUTABLE_MANIFEST_FORMAT:
+        raise IndexStoreError(
+            f"{directory}: not a mutable index manifest ({manifest.get('format')!r})"
+        )
+    return manifest
+
+
+def load_mutable_index(
+    directory: str,
+    mmap: bool = True,
+    device: bool = False,
+    verify: bool = False,
+    runtime=None,
+):
+    """Reconstruct a persisted ``MutableIndex``: main tree (optionally realized on
+    device), corpus CSR, delta segment replay, tombstones and counters. ``mmap``
+    applies to the main tree only — delta/tombstone state arrays are materialized
+    (they are small and the segment buffers are mutable). ``runtime`` optionally
+    attaches a compiled backend to the restored generation."""
+    manifest = read_mutable_manifest(directory)
+    if manifest["layout_version"] != LAYOUT_VERSION:
+        raise IndexStoreError(
+            f"{directory}: layout version {manifest['layout_version']} != "
+            f"code version {LAYOUT_VERSION}; rebuild the index"
+        )
+    main = _decode(manifest["tree"], directory, mmap)
+    state_arrays = {
+        name: np.array(_decode(spec, directory, False))
+        for name, spec in manifest["state"].items()
+    }
+    if verify:
+        arrays: dict[str, np.ndarray] = {}
+        _encode(main, "main", arrays)
+        for name, arr in state_arrays.items():
+            _encode(np.ascontiguousarray(arr), f"state.{name}", arrays)
+        actual = _fingerprint(arrays)
+        if actual != manifest["fingerprint"]:
+            raise IndexStoreError(
+                f"{directory}: content hash {actual} != manifest fingerprint "
+                f"{manifest['fingerprint']} (corrupted or tampered leaves)"
+            )
+    bcfg = manifest.get("build_config")
+    from repro.index.mutable import MutableIndex
+
+    return MutableIndex.restore(
+        to_device(main) if device else main,
+        state_arrays,
+        manifest["meta"],
+        IndexBuildConfig(**bcfg) if bcfg is not None else None,
+        runtime=runtime,
+    )
+
+
 def load_index_auto(
     directory: str, mmap: bool = True, device: bool = False, verify: bool = False
 ):
-    """Load a committed index dir of either format: an ``LSPIndex`` for the
-    single-device format, a ``ShardedIndex`` for the sharded one. This is what
+    """Load a committed index dir of either immutable format: an ``LSPIndex`` for
+    the single-device format, a ``ShardedIndex`` for the sharded one. This is what
     ``RetrievalEngine.swap_index`` feeds the retriever factory, so one engine
-    can hot-swap between single-device and sharded corpus generations."""
+    can hot-swap between single-device and sharded corpus generations. Mutable
+    dirs are rejected here — their delta/tombstone state needs the stateful
+    ``MutableIndex`` wrapper, not a bare index tree — load those via
+    ``load_mutable_index`` (or ``Retriever.load``, which re-promotes them)."""
     fmt = _read_raw_manifest(directory).get("format")
+    if fmt == MUTABLE_MANIFEST_FORMAT:
+        raise IndexStoreError(
+            f"{directory}: mutable-index dir; use load_mutable_index() or "
+            f"Retriever.load() — swap_index cannot serve delta/tombstone state"
+        )
     if fmt == SHARDED_MANIFEST_FORMAT:
         manifest = read_sharded_manifest(directory)
         shards = load_sharded_index(directory, mmap=mmap, device=device, verify=verify)

@@ -1,6 +1,8 @@
 """Scale-out serving layer: bucketed batching, result caching, resilient pipeline
-(DESIGN.md §6), and the SLO control plane — admission control, deadlines,
-priority lanes, adaptive degradation, fault injection (DESIGN.md §10)."""
+(DESIGN.md §6), the SLO control plane — admission control, deadlines,
+priority lanes, adaptive degradation, fault injection (DESIGN.md §10) — and
+live index mutation: delta-segment adapter + background compaction
+(DESIGN.md §12)."""
 
 from repro.serve.admission import (
     AdmissionConfig,
@@ -18,6 +20,11 @@ from repro.serve.errors import (
     EngineShutdown,
     ServeError,
 )
+from repro.serve.mutable import (
+    CompactionManager,
+    MutableRetrievalResult,
+    MutableRetrieverAdapter,
+)
 from repro.serve.slo import SLOConfig, SLOController, default_degradation_ladder
 
 __all__ = [
@@ -30,8 +37,11 @@ __all__ = [
     "ChaosFault",
     "ChaosInjector",
     "ChaosRetriever",
+    "CompactionManager",
     "DeadlineExceeded",
     "EngineShutdown",
+    "MutableRetrievalResult",
+    "MutableRetrieverAdapter",
     "QueryResultCache",
     "RetrievalEngine",
     "SLOConfig",

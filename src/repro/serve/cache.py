@@ -5,11 +5,15 @@ heavy mass on a small head of distinct queries, so memoizing the final
 (ids, scores) of each canonical pruned query is a first-order throughput lever:
 a hit skips batching, padding and the whole traversal/scoring pipeline. Keys
 are the byte image of the canonical pruned (tids, ws) vectors
-(``repro.core.query.query_key``), *prefixed with the engine's index epoch*: a
-hot-swap bumps the epoch, so results computed against a retired corpus can
-never be served again (see ``RetrievalEngine.swap_index``). Hit/miss counters
-live in ``ServeStats`` (the engine owns the probe); the cache itself only
-tracks evictions.
+(``repro.core.query.query_key``), *prefixed with the engine's
+``(index epoch, delta sequence)``*: a hot-swap bumps the epoch and every live
+mutation (``add_docs``/``delete_docs``, DESIGN.md §12) bumps the delta
+sequence, so results computed against a retired corpus state — whole index or
+single mutation — can never be served again (see ``RetrievalEngine.swap_index``
+/ ``RetrievalEngine.add_docs``). Immutable retrievers carry a constant 0 seq,
+collapsing the key back to the pre-mutation layout. Hit/miss counters live in
+``ServeStats`` (the engine owns the probe); the cache itself only tracks
+evictions.
 """
 
 from __future__ import annotations

@@ -37,9 +37,19 @@ request's id, so clients can tell shed load from crashes.
 Index lifecycle: swap_index()/swap_retriever() hot-swap the retriever with zero
 downtime — the replacement is built and warmed on the calling thread while the
 worker keeps serving on the old one, then (retriever, epoch) flip atomically
-between batches. Cache keys carry the index epoch: in-flight batches fill the
-cache under the epoch they were served at, so results computed against a
-retired corpus can never resurface after a swap.
+between batches. Cache keys are ``(epoch, delta_seq, query-bytes)``: the epoch
+retires every entry of a swapped-out index, and the delta sequence (bumped by
+every live mutation against a mutable retriever; constant 0 otherwise) retires
+entries the moment an add or delete lands. Fills are keyed on the seq the
+batch was *actually served at* (stamped on the result by the mutable adapter),
+so a result computed against a retired corpus state can never resurface.
+
+Live mutation (DESIGN.md §12): when the retriever is a
+``serve.mutable.MutableRetrieverAdapter``, ``add_docs``/``delete_docs``
+ingest directly through the engine — the mutation bumps the adapter's delta
+seq, purges stale cache entries, pokes the background ``CompactionManager``
+(if attached), and lands in the ``adds``/``deletes`` counters plus the
+``delta_docs``/``tombstones``/``delta_seq`` gauges.
 
 End-to-end latency percentiles (the paper's MRT metric at serving level) cover
 *served* requests only — rejections, sheds and deadline expiries have their
@@ -117,6 +127,11 @@ class ServeStats:
     degraded: int = 0
     swaps: int = 0
     last_swap_ms: float = 0.0
+    adds: int = 0  # docs ingested via add_docs
+    deletes: int = 0  # docs tombstoned via delete_docs
+    compactions: int = 0  # background generation folds completed
+    compaction_failures: int = 0  # operational compaction faults (loop kept alive)
+    last_compaction_ms: float = 0.0
     bucket_batches: dict = field(default_factory=dict)  # (batch, nq) -> count
 
     def __post_init__(self):
@@ -171,6 +186,23 @@ class ServeStats:
             self.swaps += 1
             self.last_swap_ms = latency_ms
 
+    def record_adds(self, n: int) -> None:
+        with self._lock:
+            self.adds += n
+
+    def record_deletes(self, n: int) -> None:
+        with self._lock:
+            self.deletes += n
+
+    def record_compaction(self, latency_ms: float) -> None:
+        with self._lock:
+            self.compactions += 1
+            self.last_compaction_ms = latency_ms
+
+    def record_compaction_failed(self) -> None:
+        with self._lock:
+            self.compaction_failures += 1
+
     def _snapshot(self) -> np.ndarray:
         with self._lock:
             return np.asarray(self.latencies_ms, dtype=np.float64)
@@ -196,6 +228,11 @@ class ServeStats:
                 "cache_hit_rate": self.cache_hits / probes if probes else 0.0,
                 "swaps": self.swaps,
                 "last_swap_ms": self.last_swap_ms,
+                "adds": self.adds,
+                "deletes": self.deletes,
+                "compactions": self.compactions,
+                "compaction_failures": self.compaction_failures,
+                "last_compaction_ms": self.last_compaction_ms,
                 "bucket_batches": {f"{b}x{q}": n for (b, q), n in sorted(self.bucket_batches.items())},
                 "mean_ms": float(lat.mean()) if lat.size else 0.0,
                 "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
@@ -242,7 +279,7 @@ class _Item:
     lane: int
 
 
-def _response_from(rec: _Record, epoch: int, cache_hit: bool) -> SearchResponse:
+def _response_from(rec: _Record, epoch: int, cache_hit: bool, delta_seq: int = 0) -> SearchResponse:
     return SearchResponse(
         doc_ids=rec.ids.copy(),
         scores=rec.scores.copy(),
@@ -256,6 +293,7 @@ def _response_from(rec: _Record, epoch: int, cache_hit: bool) -> SearchResponse:
         shard_candidates=None if rec.shard_candidates is None else rec.shard_candidates.copy(),
         degraded=rec.degraded,
         params_served=rec.params,
+        delta_seq=delta_seq,
     )
 
 
@@ -351,6 +389,10 @@ class RetrievalEngine:
         self.stats.register_gauge(
             "slo_level", lambda: self.slo.level if self.slo is not None else 0
         )
+        self._compactor = None  # serve.mutable.CompactionManager attaches here
+        self.stats.register_gauge("delta_docs", lambda: self._mut_gauge("delta_docs"))
+        self.stats.register_gauge("tombstones", lambda: self._mut_gauge("tombstones"))
+        self.stats.register_gauge("delta_seq", lambda: self._mut_gauge("delta_seq"))
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
@@ -364,6 +406,17 @@ class RetrievalEngine:
         return self.default_params or getattr(
             retriever if retriever is not None else self.retriever, "defaults", None
         )
+
+    def _cur_delta_seq(self) -> int:
+        """Current delta sequence of the serving retriever (0 when immutable).
+        Callers needing an un-torn (epoch, seq) pair read it under
+        ``_retriever_lock``."""
+        fn = getattr(self.retriever, "delta_seq", None)
+        return int(fn()) if callable(fn) else 0
+
+    def _mut_gauge(self, name: str) -> int:
+        fn = getattr(self.retriever, "pressure", None)
+        return int(fn().get(name, 0)) if callable(fn) else 0
 
     def _qsize(self) -> int:
         return self._q.qsize() + self._q_batch.qsize()
@@ -425,16 +478,18 @@ class RetrievalEngine:
             # share an entry (an override changes θ/pruning/k, hence the result)
             point = eff or self._default_params()
             qk = (point.key_bytes() if point is not None else b"") + query_key(t, w)
-            # probe under the flip lock: a swap cannot retire the epoch between the
-            # epoch read and the cache lookup, so a stale hit is impossible even in
-            # the submit-vs-swap race window
+            # probe under the flip lock: a swap cannot retire the epoch (nor a
+            # mutation the delta seq) between the reads and the cache lookup, so
+            # a stale hit is impossible even in the submit-vs-swap race window
             with self._retriever_lock:
-                cache_key = (self._epoch, qk)
+                cache_key = (self._epoch, self._cur_delta_seq(), qk)
                 hit = self.cache.get(cache_key)
             if hit is not None:
                 self.stats.record((time.monotonic() - t0) * 1e3, cache_hit=True,
                                   degraded=hit.degraded)
-                _try_set_result(fut, _response_from(hit, epoch=cache_key[0], cache_hit=True))
+                _try_set_result(fut, _response_from(
+                    hit, epoch=cache_key[0], cache_hit=True, delta_seq=cache_key[1]
+                ))
                 return fut
             self.stats.record_cache_miss()
             key = qk  # the worker re-keys with the epoch its batch is served at
@@ -516,6 +571,49 @@ class RetrievalEngine:
         """Current index epoch (0 at start, +1 per completed swap)."""
         return self._epoch
 
+    def _mutable_retriever(self, op: str):
+        r = self.retriever
+        if not callable(getattr(r, "add_docs", None)):
+            raise RuntimeError(
+                f"{op} needs a mutable retriever (serve.mutable.MutableRetrieverAdapter, "
+                "e.g. via repro.api.Retriever.mutable().serve()); this engine serves an "
+                "immutable one — use swap_index for whole-index replacement"
+            )
+        return r
+
+    def add_docs(self, docs) -> tuple[list[int], int]:
+        """Ingest docs (each a ``(tids, weights)`` pair) into the live index.
+
+        Returns (assigned external doc ids, new delta seq). The new docs are
+        visible to every search admitted after this returns: the seq bump
+        retires the cache namespace (probe keys carry the current seq) and
+        stale entries are purged. Raises RuntimeError when the serving
+        retriever is immutable."""
+        r = self._mutable_retriever("add_docs")
+        ids, seq = r.add_docs(docs)
+        if self.cache is not None:
+            self.cache.purge(lambda k: k[1] != seq)
+        self.stats.record_adds(len(ids))
+        comp = self._compactor
+        if comp is not None:
+            comp.notify()
+        return ids, seq
+
+    def delete_docs(self, ids) -> int:
+        """Tombstone external doc ids in the live index; returns the new delta
+        seq. A deleted doc never appears in any search admitted after this
+        returns. KeyError (unknown/already-deleted id) propagates to the
+        caller before any state changes."""
+        r = self._mutable_retriever("delete_docs")
+        seq = r.delete_docs(ids)
+        if self.cache is not None:
+            self.cache.purge(lambda k: k[1] != seq)
+        self.stats.record_deletes(len(list(ids)))
+        comp = self._compactor
+        if comp is not None:
+            comp.notify()
+        return seq
+
     def swap_retriever(self, retriever: Callable[[QueryBatch], tuple], warm: bool = True) -> int:
         """Zero-downtime hot-swap to ``retriever``. Warmup (every ladder bucket)
         runs on the calling thread while the worker keeps serving on the old
@@ -554,7 +652,11 @@ class RetrievalEngine:
         return self.swap_retriever(self.retriever_factory(path_or_index), warm=warm)
 
     def shutdown(self) -> None:
-        """Idempotent. Stops the worker, then fails anything still queued."""
+        """Idempotent. Stops the compactor (if attached) and worker, then fails
+        anything still queued."""
+        comp = self._compactor
+        if comp is not None:
+            comp.stop()
         self._stop.set()
         self._thread.join(timeout=10)
         self._drain()  # submits that raced the worker's own exit drain
@@ -670,6 +772,11 @@ class RetrievalEngine:
             nsb = None if nsb is None else np.asarray(nsb)
             nblk = None if nblk is None else np.asarray(nblk)
             shard_cand = None if shard_cand is None else np.asarray(shard_cand)
+            # the delta seq this batch was ACTUALLY served at (stamped on the
+            # result from the adapter's atomic snapshot; 0 for immutable
+            # retrievers) — fills key on it, so keys are always truthful even
+            # when a mutation lands mid-batch
+            served_seq = int(getattr(out, "delta_seq", 0) or 0)
         except _OPERATIONAL_ERRORS as exc:  # backend fault: fail this batch, keep serving
             for it in items:
                 _try_set_exception(it.fut, exc)
@@ -697,10 +804,13 @@ class RetrievalEngine:
             if self.cache is not None and it.key is not None:
                 # fill only while our epoch is still current (checked under the flip
                 # lock): a batch that completes after a swap must not park dead
-                # old-epoch rows in the LRU, where they would evict live entries
+                # old-epoch rows in the LRU, where they would evict live entries.
+                # The seq component is the one the batch was served at, so a
+                # mutation landing mid-batch cannot make this fill lie — probes
+                # after the mutation carry the newer seq and simply miss it
                 with self._retriever_lock:
                     if epoch == self._epoch:
-                        self.cache.put((epoch, it.key), rec)
+                        self.cache.put((epoch, served_seq, it.key), rec)
             lat_ms = (now - it.t0) * 1e3
             self.stats.record(lat_ms, degraded=it.degraded)
             if self.slo is not None:
@@ -708,7 +818,9 @@ class RetrievalEngine:
             # _response_from copies: don't pin the batch array, and don't let the
             # cached record alias the caller's result (a caller mutating
             # ids/scores in place must not corrupt what later hits are served from)
-            _try_set_result(it.fut, _response_from(rec, epoch=epoch, cache_hit=False))
+            _try_set_result(it.fut, _response_from(
+                rec, epoch=epoch, cache_hit=False, delta_seq=served_seq
+            ))
         self.stats.record_batch(bucket)
         if self.slo is not None:
             self.slo.observe(self._qsize())  # served-latency view: recovery happens here

@@ -1,0 +1,152 @@
+"""QueryResultCache key composition (DESIGN.md §6, §12).
+
+The engine's cache key is the tuple ``(epoch, delta_seq, qk)`` where
+``qk = DynamicParams.key_bytes() + query_key(tids, ws)``. Correctness rests on
+two properties pinned here:
+
+* **byte-wise non-collision** — two logically different
+  (epoch, delta-sequence, params, query) tuples never produce equal keys:
+  epoch/seq are separate tuple components, ``key_bytes`` is a fixed-width
+  prefix (so params bytes can never bleed into query bytes), and
+  ``query_key`` is injective over canonical pruned queries;
+* **mutation bumps the namespace** — ``add_docs``/``delete_docs`` advance the
+  seq component even when the compiled shape bucket is unchanged, so a
+  mutation retires every cached result without recompiling anything (trace
+  count stays flat) and the next identical request misses, recomputes, and
+  re-seeds the cache at the new seq.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.config import DynamicParams
+from repro.core.query import query_key
+from repro.serve.cache import QueryResultCache
+
+
+def _qk(params: DynamicParams, tids, ws) -> bytes:
+    """The engine's query-side key bytes (engine.search builds exactly this)."""
+    return params.key_bytes() + query_key(np.asarray(tids), np.asarray(ws))
+
+
+# ---- unit: byte-wise non-collision across the key tuple ----------------------------
+
+
+def test_key_bytes_fixed_width():
+    """``key_bytes`` is a fixed-width prefix: params bytes can never shift the
+    query-byte suffix, so (params, query) splits are unambiguous."""
+    widths = {
+        len(DynamicParams(k=k, mu=mu, eta=eta, beta=beta).key_bytes())
+        for k in (1, 7, 100, 2**20)
+        for mu, eta, beta in [(0.1, 0.5, 1.0), (1.5, 0.9, 0.25)]
+    }
+    assert widths == {16}  # int32 k + 3×float32
+
+
+def test_distinct_tuples_never_collide_bytewise():
+    """Every pairwise-distinct (epoch, seq, params, query) combination yields a
+    distinct cache key — byte-wise, not just by hash."""
+    rng = np.random.default_rng(7)
+    queries = [
+        (np.array([3, 9, 41], np.int32), np.array([2.0, 1.0, 0.5], np.float32)),
+        (np.array([3, 9, 41], np.int32), np.array([2.0, 1.0, 0.25], np.float32)),
+        (np.array([3, 9], np.int32), np.array([2.0, 1.0], np.float32)),
+        (np.array([9, 3, 41], np.int32), np.array([1.0, 2.0, 0.5], np.float32)),  # = q0 permuted
+        (rng.integers(0, 500, 8).astype(np.int32), rng.random(8).astype(np.float32)),
+    ]
+    params = [
+        DynamicParams(k=10),
+        DynamicParams(k=11),
+        DynamicParams(k=10, mu=0.75),
+        DynamicParams(k=10, beta=0.5),
+    ]
+    keys = {}
+    for epoch in (0, 1):
+        for seq in (0, 1, 2):
+            for pi, p in enumerate(params):
+                for qi, (t, w) in enumerate(queries):
+                    key = (epoch, seq, _qk(p, t, w))
+                    logical = (epoch, seq, pi, 0 if qi == 3 else qi)  # q3 ≡ q0
+                    prev = keys.setdefault(key, logical)
+                    assert prev == logical, (
+                        f"collision: {prev} and {logical} share key {key!r}"
+                    )
+    # the permuted-duplicate query MUST collapse onto its canonical twin
+    assert _qk(params[0], *queries[3]) == _qk(params[0], *queries[0])
+
+
+def test_cache_isolates_namespaces():
+    """The LRU treats each (epoch, seq, qk) tuple as opaque: same query bytes
+    under different epoch/seq namespaces are independent entries, and purge
+    predicates can retire one namespace component without touching others."""
+    cache = QueryResultCache(capacity=16)
+    t, w = np.array([1, 2], np.int32), np.array([1.0, 0.5], np.float32)
+    qk = _qk(DynamicParams(k=5), t, w)
+    for epoch in (0, 1):
+        for seq in (0, 1):
+            cache.put((epoch, seq, qk), f"e{epoch}s{seq}")
+    assert len(cache) == 4
+    assert cache.get((0, 1, qk)) == "e0s1"
+    # mutation purge: retire every entry not at the new seq (what add_docs does)
+    dropped = cache.purge(lambda k: k[1] != 1)
+    assert dropped == 2
+    assert cache.get((0, 0, qk)) is None and cache.get((1, 1, qk)) == "e1s1"
+
+
+# ---- engine: a mutation bumps the seq with the compiled bucket unchanged -----------
+
+
+@pytest.fixture(scope="module")
+def mutable_engine():
+    from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
+    from repro.index.builder import IndexBuildConfig
+    from repro.api import Retriever
+
+    cfg = CorpusConfig(
+        n_docs=192, vocab=128, n_topics=6, doc_len_mean=12, query_len_mean=6, seed=11
+    )
+    corpus = make_corpus(cfg)
+    queries = make_queries(cfg, corpus, 4, seed=5)
+    retr = Retriever.build(
+        corpus, build_cfg=IndexBuildConfig(b=4, c=8, kmeans_iters=2, build_avg=False)
+    )
+    retr.mutable()
+    engine = retr.serve(max_batch=4, cache_size=64, compaction=False)
+    yield engine, queries
+    engine.shutdown()
+
+
+def test_mutation_bumps_seq_same_bucket(mutable_engine):
+    from repro.api import SearchRequest
+
+    engine, queries = mutable_engine
+    t, w = queries[0]
+    req = SearchRequest(t, w, params=DynamicParams(k=5))
+
+    r0 = engine.search(req).result(timeout=60)
+    r1 = engine.search(req).result(timeout=60)
+    assert not r0.cache_hit and r1.cache_hit
+    assert r1.delta_seq == r0.delta_seq
+
+    traces_before = engine.retriever.n_traces()
+    ids, seq = engine.add_docs([(t[:3], np.ones(3, np.float32))])
+    assert seq == r0.delta_seq + 1
+
+    # the same request now probes the new seq namespace: miss + recompute,
+    # in the SAME compiled bucket — zero new traces
+    r2 = engine.search(req).result(timeout=60)
+    assert not r2.cache_hit
+    assert r2.delta_seq == seq
+    assert r2.bucket == r1.bucket
+    assert engine.retriever.n_traces() == traces_before
+
+    # and the recomputed result re-seeds the cache at the new seq
+    r3 = engine.search(req).result(timeout=60)
+    assert r3.cache_hit and r3.delta_seq == seq
+
+    # a delete bumps it again, even with no delta geometry change
+    seq2 = engine.delete_docs([ids[0]])
+    assert seq2 == seq + 1
+    r4 = engine.search(req).result(timeout=60)
+    assert not r4.cache_hit and r4.delta_seq == seq2
+    assert engine.retriever.n_traces() == traces_before

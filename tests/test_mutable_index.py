@@ -1,0 +1,370 @@
+"""Mutable index correctness (DESIGN.md §12): bit-parity across replicas and
+backends, post-compaction parity against a from-scratch rebuild, tombstone /
+visibility invariants, persistence round-trip, and zero-staleness under
+concurrent mutation + serving traffic.
+
+The load-bearing properties:
+
+* **replay parity** — two MutableIndex replicas replaying the same op log
+  (adds/deletes/compactions) return bitwise-identical (ids, scores, θ) at
+  every search, with a local backend on one side and the sharded backend on
+  the other (the sharded transport is bit-identical per the §8 suites, so any
+  divergence is the mutable layer's fault);
+* **post-compaction parity** — after a compaction folds the delta and
+  tombstones away, the mutable search is bitwise the plain immutable pipeline
+  over ``build_index(logical_corpus)`` modulo external-id translation;
+* **freshness** — an added doc is visible to the very next search; a deleted
+  doc never surfaces again, across any number of compaction flips;
+* **zero staleness** — under concurrent writer + reader traffic through the
+  engine (background compaction flipping generations), every response's
+  ``delta_seq`` provenance is consistent with the op log: no response at or
+  past a delete's seq contains the deleted doc, none at or past an add's seq
+  misses a dominating added doc.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Retriever, SearchRequest
+from repro.core.config import DynamicParams
+from repro.core.query import make_query_batch
+from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
+from repro.index.builder import IndexBuildConfig, build_index
+
+K = 5
+BCFG = IndexBuildConfig(b=4, c=8, kmeans_iters=2, build_avg=False)
+CCFG = CorpusConfig(
+    n_docs=160, vocab=128, n_topics=6, doc_len_mean=12, query_len_mean=6, seed=21
+)
+
+
+@pytest.fixture(scope="module")
+def mut_corpus():
+    corpus = make_corpus(CCFG)
+    queries = make_queries(CCFG, corpus, 6, seed=9)
+    qb = make_query_batch(queries, corpus.vocab)
+    return corpus, queries, qb
+
+
+def _rand_doc(rng, vocab):
+    n = int(rng.integers(3, 9))
+    tids = rng.choice(vocab, size=n, replace=False).astype(np.int32)
+    ws = rng.uniform(0.1, 3.0, size=n).astype(np.float32)
+    return tids, ws
+
+
+def _schedule(rng, vocab, n_ops=10, max_deletes=10):
+    """A reproducible interleaving of add/delete/compact/search ops. Delete ops
+    name the j-th live doc, not a concrete id, so the same schedule replays
+    identically on any replica (both assign the same monotonic ids)."""
+    ops, deletes = [("search",)], 0
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.4:
+            docs = [_rand_doc(rng, vocab) for _ in range(int(rng.integers(1, 4)))]
+            ops.append(("add", docs))
+        elif r < 0.6 and deletes < max_deletes:
+            ops.append(("delete_nth", int(rng.integers(0, 10**6))))
+            deletes += 1
+        elif r < 0.75:
+            ops.append(("compact",))
+        ops.append(("search",))
+    ops.append(("compact",))
+    ops.append(("search",))
+    return ops
+
+
+class _Replica:
+    """One promoted retriever + the live-id mirror the schedule indexes into."""
+
+    def __init__(self, corpus, backend, shards=0, static_cfg=None):
+        self.retr = Retriever.build(
+            corpus, static_cfg, build_cfg=BCFG, backend=backend, shards=shards,
+            params=DynamicParams(k=K),
+        )
+        self.retr.mutable()
+        self.adapter = self.retr._adapter
+        self.live = list(range(CCFG.n_docs))
+
+    def apply(self, op):
+        kind = op[0]
+        if kind == "add":
+            ids, _ = self.adapter.add_docs(op[1])
+            self.live.extend(ids)
+        elif kind == "delete_nth":
+            victim = self.live.pop(op[1] % len(self.live))
+            self.adapter.delete_docs([victim])
+        elif kind == "compact":
+            self.adapter.compact()
+
+    def search(self, qb):
+        out = self.adapter(qb, [DynamicParams(k=K)] * int(qb.tids.shape[0]))
+        return (
+            np.asarray(out.doc_ids),
+            np.asarray(out.scores),
+            np.asarray(out.theta),
+        )
+
+
+# ---- P1: replay parity, local vs sharded backends ----------------------------------
+
+
+def test_replay_parity_local_vs_sharded(mut_corpus):
+    corpus, _, qb = mut_corpus
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(1000 + seed)
+        ops = _schedule(rng, corpus.vocab)
+        local = _Replica(corpus, "local")
+        sharded = _Replica(
+            corpus, "sharded", shards=2, static_cfg=local.retr.static_cfg
+        )
+        for step, op in enumerate(ops):
+            local.apply(op)
+            sharded.apply(op)
+            if op[0] == "search":
+                li, ls, lt = local.search(qb)
+                si, ss, st = sharded.search(qb)
+                ctx = f"schedule {seed} step {step} op {op[0]}"
+                np.testing.assert_array_equal(li, si, err_msg=ctx)
+                np.testing.assert_array_equal(ls, ss, err_msg=ctx)
+                np.testing.assert_array_equal(lt, st, err_msg=ctx)
+        assert local.live == sharded.live
+
+
+# ---- P2: post-compaction bitwise parity vs from-scratch rebuild --------------------
+
+
+def test_post_compaction_parity_vs_rebuild(mut_corpus):
+    corpus, _, qb = mut_corpus
+    rng = np.random.default_rng(77)
+    rep = _Replica(corpus, "local")
+    for op in _schedule(rng, corpus.vocab, n_ops=8):
+        rep.apply(op)
+    rep.adapter.compact()
+
+    ptr, tids, ws, ext_ids = rep.retr.index.logical_corpus()
+    assert sorted(rep.live) == ext_ids.tolist()
+    plain = Retriever.from_index(
+        build_index(ptr, tids, ws, corpus.vocab, BCFG),
+        rep.retr.static_cfg,
+        params=DynamicParams(k=K),
+    )
+    mi_ids, mi_scores, mi_theta = rep.search(qb)
+    out = plain._backend(qb, [DynamicParams(k=K)] * int(qb.tids.shape[0]))
+    p_ids = np.asarray(out.doc_ids)
+    translated = np.where(p_ids >= 0, ext_ids[np.clip(p_ids, 0, None)], -1)
+    np.testing.assert_array_equal(mi_ids, translated)
+    np.testing.assert_array_equal(mi_scores, np.asarray(out.scores))
+    np.testing.assert_array_equal(mi_theta, np.asarray(out.theta))
+
+
+# ---- P3: freshness + tombstone invariants ------------------------------------------
+
+
+def test_adds_visible_deletes_never_surface(mut_corpus):
+    corpus, queries, qb = mut_corpus
+    rep = _Replica(corpus, "local")
+    qt, qw = queries[0]
+
+    # a doc built from the query's own terms dominates: visible immediately
+    [doc_id], _ = rep.adapter.add_docs([(qt, np.full(qt.shape, 10.0, np.float32))])
+    ids, scores, _ = rep.search(qb)
+    assert int(ids[0, 0]) == doc_id
+    expected = float(np.float32(10.0) * np.sum(qw.astype(np.float32), dtype=np.float32))
+    assert float(scores[0, 0]) == pytest.approx(expected, rel=1e-6)
+
+    # delete it: gone from the very next search, and still gone after each of
+    # two compaction flips (fold while tombstoned / fold after GC)
+    rep.adapter.delete_docs([doc_id])
+    deleted_main = [0, 7]  # main-resident docs tombstoned alongside
+    rep.adapter.delete_docs(deleted_main)
+    gone = {doc_id, *deleted_main}
+    for flip in range(3):
+        ids, _, _ = rep.search(qb)
+        assert not (set(ids.ravel().tolist()) & gone), f"flip {flip}"
+        rep.adapter.compact()
+
+    with pytest.raises(KeyError):
+        rep.adapter.delete_docs([doc_id])  # double delete
+    with pytest.raises(KeyError):
+        rep.adapter.delete_docs([10**9])  # never existed
+
+
+def test_pressure_and_compaction_trigger(mut_corpus):
+    corpus, _, _ = mut_corpus
+    rep = _Replica(corpus, "local")
+    rng = np.random.default_rng(3)
+    assert not rep.adapter.needs_compaction(2, 2)
+    rep.adapter.add_docs([_rand_doc(rng, corpus.vocab) for _ in range(2)])
+    assert rep.adapter.needs_compaction(2, 2)
+    p = rep.adapter.pressure()
+    assert p["delta_docs"] == 2 and p["tombstones"] == 0 and p["delta_seq"] == 1
+    rep.adapter.compact()
+    p = rep.adapter.pressure()
+    assert p["delta_docs"] == 0 and p["generation"] == 1
+    assert p["live_docs"] == CCFG.n_docs + 2
+
+
+def test_sharded_set_promotion_refused(mut_corpus):
+    """A persisted sharded set has no recoverable per-shard corpus; the facade
+    must refuse promotion with an actionable error, not corrupt state."""
+    corpus, _, _ = mut_corpus
+    from repro.distributed.retrieval import shard_index
+
+    index = build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab, BCFG)
+    retr = Retriever.from_index(list(shard_index(index, 2)), params=DynamicParams(k=K))
+    with pytest.raises(ValueError, match="sharded"):
+        retr.add([(np.array([1, 2], np.int32), np.ones(2, np.float32))])
+
+
+# ---- persistence -------------------------------------------------------------------
+
+
+def test_mutable_store_roundtrip(mut_corpus, tmp_path):
+    corpus, queries, qb = mut_corpus
+    rng = np.random.default_rng(5)
+    rep = _Replica(corpus, "local")
+    rep.adapter.compact()  # materialize generation 1
+    rep.adapter.add_docs([_rand_doc(rng, corpus.vocab) for _ in range(3)])
+    rep.adapter.delete_docs([rep.live[4]])
+    before = rep.search(qb)
+
+    path = os.path.join(tmp_path, "mut")
+    fp = rep.retr.save(path)
+    loaded = Retriever.load(path, params=DynamicParams(k=K))
+    out = loaded._backend(qb, [DynamicParams(k=K)] * int(qb.tids.shape[0]))
+    after = (np.asarray(out.doc_ids), np.asarray(out.scores), np.asarray(out.theta))
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+
+    # mutation resumes where the save left off: monotonic ids, live tombstones
+    p0 = rep.adapter.pressure()
+    p1 = loaded._adapter.pressure()
+    assert p0 == p1
+    new_ids = loaded.add([_rand_doc(rng, corpus.vocab)])
+    assert new_ids[0] == CCFG.n_docs + 3  # 3 delta ids assigned pre-save
+    with pytest.raises(KeyError):
+        loaded.delete([rep.live[4]])  # still tombstoned after the round-trip
+
+    # a second save at a different mutation point must fingerprint differently
+    path2 = os.path.join(tmp_path, "mut2")
+    assert loaded.save(path2) != fp
+
+    # swap_index must reject the mutable dir with an actionable error
+    from repro.index.store import IndexStoreError, load_index_auto
+
+    with pytest.raises(IndexStoreError, match="load_mutable_index"):
+        load_index_auto(path)
+
+
+def test_save_requires_materialized_main(mut_corpus):
+    corpus, _, _ = mut_corpus
+    from repro.index.mutable import MutableIndex
+
+    mi = MutableIndex.from_corpus(
+        corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab, BCFG, build_main=False
+    )
+    with pytest.raises(ValueError, match="compact"):
+        mi.persistable_state()
+
+
+# ---- concurrent traffic through the engine -----------------------------------------
+
+
+def test_engine_concurrent_mutation_zero_stale(mut_corpus):
+    """Writer mutates while readers search through the engine with background
+    compaction flipping generations. Every response is audited against the op
+    log via its delta_seq provenance: 0 stale results, 0 lost docs, 0 failures."""
+    corpus, queries, _ = mut_corpus
+    retr = Retriever.build(corpus, build_cfg=BCFG, params=DynamicParams(k=K))
+    retr.mutable()
+    engine = retr.serve(
+        max_batch=4,
+        cache_size=64,
+        compaction=dict(max_delta_docs=6, max_tombstones=3, interval_s=0.05),
+    )
+    qt, qw = queries[1]
+    dominating = (qt, np.full(qt.shape, 50.0, np.float32))
+    deleted_at = {}  # doc id -> seq after its delete
+    added_at = {}  # dominating doc id -> seq after its add
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        rng = np.random.default_rng(13)
+        try:
+            for round_ in range(8):
+                ids, seq = engine.add_docs(
+                    [dominating, _rand_doc(rng, corpus.vocab)]
+                )
+                added_at[ids[0]] = seq
+                if round_ % 2 == 0:
+                    seq = engine.delete_docs([ids[0]])
+                    deleted_at[ids[0]] = seq
+                stop.wait(0.03)
+        except Exception as e:  # pragma: no cover - surfaced via errors list
+            errors.append(e)
+        finally:
+            stop.set()
+
+    responses = []
+
+    def reader():
+        req = SearchRequest(qt, qw, params=DynamicParams(k=K))
+        try:
+            while not stop.is_set():
+                responses.append(engine.search(req).result(timeout=120))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer)] + [
+        threading.Thread(target=reader) for _ in range(2)
+    ]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+        assert not errors, errors
+        assert responses
+
+        # pressure crossed the thresholds many times over; wait for the
+        # background loop to land at least one generation flip
+        deadline = time.monotonic() + 120
+        while (
+            time.monotonic() < deadline
+            and engine.stats.summary()["compactions"] < 1
+        ):
+            stop.wait(0.1)
+
+        final = engine.search(
+            SearchRequest(qt, qw, params=DynamicParams(k=K))
+        ).result(timeout=120)
+        responses.append(final)
+        stale = lost = 0
+        for r in responses:
+            got = set(int(i) for i in r.doc_ids if i >= 0)
+            for doc, seq in deleted_at.items():
+                if r.delta_seq >= seq and doc in got:
+                    stale += 1
+            live_dominating = [
+                d for d, s in added_at.items()
+                if r.delta_seq >= s
+                and (d not in deleted_at or r.delta_seq < deleted_at[d])
+            ]
+            if live_dominating and not (set(live_dominating) & got):
+                lost += 1
+        assert stale == 0, f"{stale} stale (tombstoned) docs served"
+        assert lost == 0, f"{lost} responses missing a visible dominating doc"
+
+        s = engine.stats.summary()
+        assert s["compaction_failures"] == 0
+        assert s["compactions"] >= 1  # traffic crossed the thresholds
+        assert s["adds"] == 16 and s["deletes"] == 4
+    finally:
+        stop.set()
+        engine.shutdown()

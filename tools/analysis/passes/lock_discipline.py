@@ -1,5 +1,11 @@
 """lock-discipline: the serving layer's unwritten concurrency rules, written.
 
+Covers ``serve/`` and ``index/``: the mutable index (DESIGN.md §12) shares the
+engine's conventions — the delta-segment append lock and the compaction swap
+lock are gated by the same blocking-under-lock and unlocked-counter rules as
+the engine's ``_retriever_lock``/``_swap_lock`` (in particular, a compaction
+build or a backend warmup must never run inside ``MutableIndex._lock``).
+
 The engine's exactly-once future resolution and torn-read-free stats
 (DESIGN.md §6, §10, §11) rest on four conventions:
 
@@ -55,7 +61,9 @@ class LockDisciplinePass(AnalysisPass):
     )
 
     def applies(self, relpath: str) -> bool:
-        return relpath.startswith(SRC_PREFIX + "/serve/")
+        return relpath.startswith(SRC_PREFIX + "/serve/") or relpath.startswith(
+            SRC_PREFIX + "/index/"
+        )
 
     def run(self, mod: ModuleSource) -> list:
         out = []
