@@ -17,6 +17,14 @@ Arms:
                by its delta_seq provenance: 0 stale (tombstoned doc served at
                or past its delete seq), 0 lost (dominating added doc missing
                at or past its add seq), 0 failures.
+  saturation   the tombstone-overfetch hazard, both directions: the serving
+               engine above is provisioned with k_max headroom (k_eff = k + T
+               never clips) and must report ``overfetch_saturated == 0``
+               across every arm; a second zero-headroom engine (k_max == k,
+               compaction off) is then driven into saturation by tombstoning
+               its own top-k, and the audit demands the counter catches every
+               short result row — short rows without a saturation report are
+               the silent-truncation bug this arm exists to fail.
 
   PYTHONPATH=src python -m benchmarks.freshness_suite          # full settings
   PYTHONPATH=src python -m benchmarks.freshness_suite --smoke  # CI settings
@@ -33,11 +41,18 @@ import numpy as np
 
 from benchmarks.common import Row
 from repro.api import DynamicParams, Retriever, SearchRequest
+from repro.core.config import recommended_static
 from repro.data.synthetic import CorpusConfig, make_corpus, make_queries
-from repro.index.builder import IndexBuildConfig
+from repro.index.builder import IndexBuildConfig, build_index
 
 BENCH_JSON = os.environ.get("BENCH_FRESHNESS_JSON", "BENCH_freshness.json")
 K = 10
+# Overfetch headroom for the serving engine: the adapter widens each row to
+# k_eff = k + tombstones, clipping at the compiled k_max. Clipped rows can come
+# up short of k (counted in ServeStats.overfetch_saturated, gated to 0 below),
+# so k_max must cover k plus the worst tombstone window the compaction
+# thresholds allow (max_tombstones, plus slack for the rebuild in flight).
+K_MAX_OVER = 64
 
 
 def _setup(smoke: bool):
@@ -52,7 +67,17 @@ def _setup(smoke: bool):
     corpus = make_corpus(ccfg)
     queries = make_queries(ccfg, corpus, 16, seed=4)
     bcfg = IndexBuildConfig(b=8, c=8, kmeans_iters=2, build_avg=False)
-    retr = Retriever.build(corpus, build_cfg=bcfg, params=DynamicParams(k=K))
+    idx = build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab, bcfg)
+    scfg = recommended_static(K_MAX_OVER, n_superblocks=idx.n_superblocks)
+    retr = Retriever.from_index(idx, scfg, params=DynamicParams(k=K))
+    # retain the float corpus so mutable() compacts from exact weights, the
+    # same provenance Retriever.build records
+    retr._corpus = (
+        np.asarray(corpus.doc_ptr),
+        np.asarray(corpus.tids),
+        np.asarray(corpus.ws),
+    )
+    retr._build_cfg = bcfg
     retr.mutable()
     return ccfg, corpus, queries, retr
 
@@ -198,6 +223,36 @@ def run() -> list[Row]:
         "deletes": s["deletes"],
     }
 
+    # ---- overfetch saturation audit ----------------------------------------------
+    # Direction 1: the provisioned engine above (k_max headroom over every
+    # tombstone window its compaction thresholds allow) must have served every
+    # arm saturation-free — a nonzero counter means masked rows could come up
+    # short of k, which fails the audit.
+    serving_saturated = int(s.get("overfetch_saturated", 0))
+    # Direction 2: a zero-headroom engine (k_max == k, no compaction) driven
+    # into saturation must REPORT it on every short row — short results
+    # without a saturation report are the silent-truncation bug.
+    tight = Retriever.build(corpus, build_cfg=IndexBuildConfig(
+        b=8, c=8, kmeans_iters=2, build_avg=False
+    ), params=DynamicParams(k=K))
+    tight.mutable()
+    tight_eng = tight.serve(max_batch=8, cache_size=0, compaction=False)
+    qt, qw = queries[0]
+    victims = [int(d) for d in _search(tight_eng, qt, qw).doc_ids if int(d) >= 0]
+    tight_eng.delete_docs(victims)  # the whole former top-k: k_eff clips at k_max
+    short_rows = 0
+    for _ in range(4):
+        resp = _search(tight_eng, qt, qw)
+        if sum(1 for d in resp.doc_ids if int(d) >= 0) < K:
+            short_rows += 1
+    tight_sat = int(tight_eng.stats.summary()["overfetch_saturated"])
+    tight_eng.shutdown()
+    arms["saturation"] = {
+        "serving_overfetch_saturated": serving_saturated,
+        "forced_short_rows": short_rows,
+        "forced_overfetch_saturated": tight_sat,
+    }
+
     payload = {
         "backend": "cpu",
         "smoke": smoke,
@@ -209,6 +264,10 @@ def run() -> list[Row]:
             "flip_audit_zero_lost": arms["flip_audit"]["lost"] == 0,
             "compaction_flipped": arms["flip_audit"]["compactions"] >= 1,
             "compaction_clean": arms["flip_audit"]["compaction_failures"] == 0,
+            # masked rows can never come up short of k on the provisioned engine
+            "serving_saturation_free": serving_saturated == 0,
+            # and when rows CAN come up short, the counter must say so
+            "saturation_reported_when_forced": short_rows > 0 and tight_sat >= short_rows,
         },
     }
     with open(BENCH_JSON, "w") as f:
@@ -234,6 +293,12 @@ def run() -> list[Row]:
             arms["flip_audit"]["last_compaction_ms"] * 1e3,
             f"stale={stale};lost={lost};compactions={arms['flip_audit']['compactions']};"
             f"failures={arms['flip_audit']['compaction_failures']}",
+        ),
+        Row(
+            "freshness/saturation",
+            0.0,
+            f"serving_saturated={serving_saturated};forced_short_rows={short_rows};"
+            f"forced_saturated={tight_sat}",
         ),
         Row(
             "freshness/gates",

@@ -2,9 +2,13 @@
 
 Serves one query stream through ``RetrievalEngine`` + ``ShardedRetriever`` at
 1/2/4/8 shards under three serving arms (padded single-shape, bucketed ladder,
-Zipf-repeat with the result cache) and audits EVERY response against the
-single-device engine's answer for the same submission — the parity count is the
-gate (``parity_mismatches == 0`` in CI), latency/throughput are the trajectory.
+Zipf-repeat with the result cache) plus a competitive-``block_budget`` arm
+(the cross-shard bounds merge, DESIGN.md §8), and audits EVERY response
+against the single-device engine's answer for the same submission — the
+parity count is the gate (``parity_mismatches == 0`` in CI, competitive arm
+included), latency/throughput are the trajectory. The competitive arm also
+checks the bounded-cost claim: per-query phase-3 blocks never exceed the
+budget on any shard count.
 
 On a CPU host the shard transports share one machine, so wall-clock does not
 drop with shard count — per-shard *index bytes* do (reported per arm), which is
@@ -161,6 +165,57 @@ def run() -> list[Row]:
             "load_balance": _load_balance(retr) if p > 1 else None,
         }
 
+    # ---- competitive block-budget arm (cross-shard bounds merge) -------------------
+    # Serves a binding block_budget (budget·c / 4) through the engine on every
+    # shard count, audits each response against a single-device reference for
+    # the SAME config, and checks the paper's bounded-cost claim directly:
+    # phase-3 blocks per query (n_blocks_scored − γ0·c) never exceed the budget.
+    budget = min(scfg.resolved_sb_budget(), idx.n_superblocks)
+    bb = max(1, (budget * idx.c) // 4)
+    scfg_bb = StaticConfig(
+        "lsp0", gamma=gamma, gamma0=min(8, gamma), k_max=K_DEFAULT, block_budget=bb
+    )
+    ref_eng = RetrievalEngine(
+        jit_search(idx, scfg_bb, impl="ref"), CORPUS_CFG.vocab,
+        max_batch=MAX_BATCH, nq_max=NQ_MAX, max_wait_ms=1.0, cache_size=0, warmup=True,
+    )
+    reference_bb = []
+    for t, w in qs:
+        r = ref_eng.search(SearchRequest(t, w)).result(timeout=600)
+        reference_bb.append((r.doc_ids, r.scores))
+    ref_eng.shutdown()
+    competitive: dict[str, dict] = {}
+    for p in shard_counts:
+        mesh = None
+        transport = "host-loop"
+        if 1 < p <= n_devices and n_devices % p == 0:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(model=p, data=1)
+            transport = "shard_map"
+        retr = (
+            jit_search(idx, scfg_bb, impl="ref")
+            if p == 1
+            else ShardedRetriever(idx, scfg_bb, n_shards=p, mesh=mesh, impl="ref")
+        )
+        eng = RetrievalEngine(
+            retr, CORPUS_CFG.vocab, max_batch=MAX_BATCH, nq_max=NQ_MAX,
+            max_wait_ms=1.0, cache_size=0, warmup=True,
+        )
+        wall, mism = _run_stream(eng, qs, range(n), reference_bb)
+        eng.shutdown()
+        total_mismatches += mism
+        res = retr(query_batch())
+        phase3 = np.asarray(res.n_blocks_scored) - scfg_bb.gamma0 * idx.c
+        competitive[str(p)] = {
+            "transport": transport,
+            "wall_s": wall,
+            "throughput_qps": n / wall if wall else 0.0,
+            "parity_mismatches": mism,
+            "max_phase3_blocks": int(phase3.max()),
+            "blocks_within_budget": bool((phase3 <= bb).all()),
+        }
+
     payload = {
         "backend": jax.default_backend(),
         "n_devices": n_devices,
@@ -168,8 +223,9 @@ def run() -> list[Row]:
         "shard_counts": list(shard_counts),
         "zipf_a": ZIPF_A,
         "shards": results,
+        "competitive": {"block_budget": bb, "cut_width": budget * idx.c, "shards": competitive},
         "parity_mismatches": total_mismatches,
-        "audited_responses": n * len(shard_counts) * len(arms),
+        "audited_responses": n * len(shard_counts) * (len(arms) + 1),
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=2)
@@ -186,12 +242,25 @@ def run() -> list[Row]:
                     f"mismatches={s['parity_mismatches']}",
                 )
             )
+    for p, s in competitive.items():
+        rows.append(
+            Row(
+                f"sharded/{p}x/competitive",
+                0.0,
+                f"qps={s['throughput_qps']:.1f};transport={s['transport']};"
+                f"bb={bb};max_phase3={s['max_phase3_blocks']};"
+                f"within_budget={s['blocks_within_budget']};"
+                f"mismatches={s['parity_mismatches']}",
+            )
+        )
     rows.append(
         Row(
             "sharded/claims",
             0.0,
             f"parity_mismatches={total_mismatches};"
-            f"audited={payload['audited_responses']};json={BENCH_JSON}",
+            f"audited={payload['audited_responses']};"
+            f"blocks_within_budget={all(s['blocks_within_budget'] for s in competitive.values())};"
+            f"json={BENCH_JSON}",
         )
     )
     return rows

@@ -304,11 +304,14 @@ class Retriever:
         elif main is not None:
             doc_ptr, tids, ws = corpus_from_index(main)
         else:
-            raise ValueError(
-                "cannot promote a persisted sharded index set to mutable: the source "
-                "corpus is not recoverable shard-wise — load the single-index "
-                "directory (Retriever.load on the unsharded save) or Retriever.build "
-                "from the corpus, then serve backend='sharded'"
+            from repro.index.store import ShardedPromotionError
+
+            raise ShardedPromotionError(
+                "mutable() promotion of a sharded retriever",
+                "the source corpus is not recoverable shard-wise; Retriever.load "
+                "the single-index directory (the unsharded save) or "
+                "Retriever.build from the corpus, promote THAT, and serve it "
+                "with backend='sharded'",
             )
         mi = MutableIndex(
             main, doc_ptr, tids, ws, self.vocab,
@@ -349,14 +352,21 @@ class Retriever:
         exactly where this save left off; an unpromoted one writes the plain
         single-index format. Returns the content fingerprint."""
         from repro.index.layout import LSPIndex
-        from repro.index.store import save_index, save_mutable_index
+        from repro.index.store import (
+            ShardedPromotionError,
+            save_index,
+            save_mutable_index,
+        )
 
         if self._adapter is not None:
             return save_mutable_index(directory, self.index, self._build_cfg)
         if not isinstance(self.index, LSPIndex):
-            raise ValueError(
-                "Retriever.save handles single LSPIndex retrievers; persist "
-                "sharded sets with index.store.save_sharded_index"
+            raise ShardedPromotionError(
+                "Retriever.save of a sharded retriever",
+                "persist the shard set with "
+                "repro.index.store.save_sharded_index(directory, index, n_shards) "
+                "from the original single LSPIndex, or save() a retriever loaded "
+                "from the unsharded directory",
             )
         return save_index(directory, self.index, self._build_cfg)
 

@@ -122,6 +122,37 @@ def _expand_superblocks(sb_idx: jnp.ndarray, c: int) -> jnp.ndarray:
     return blk.reshape(blk.shape[0], -1)
 
 
+def resolve_block_budget(scfg, cand_blocks: int, default: int = 0) -> int:
+    """The one clamp rule for the phase-3 block cap, shared by every variant
+    and every topology: an explicit ``block_budget`` (or the variant's default
+    when unset) can never exceed the candidate width in blocks. The lsp path
+    (cand_blocks = budget·c), the bmp path (cand_blocks = n_blocks, default =
+    4·γ·c), the dense mirror and the sharded plan (distributed/sharded.py)
+    all derive their cut width HERE, so an oversized budget clamps identically
+    everywhere and a competitive one means the same thing on every path."""
+    bb = scfg.block_budget or (default or cand_blocks)
+    return min(bb, cand_blocks)
+
+
+def competitive_block_topk(
+    flat_bounds: jnp.ndarray, flat_gids: jnp.ndarray, block_budget: int, id_bound: int
+):
+    """THE competitive block cut: top-``block_budget`` of the flattened
+    (bound, block-id) candidates under the canonical (bound desc, id asc)
+    order. ``lax.top_k`` would tie-break equal bounds by candidate-list rank —
+    an artifact of traversal order a sharded pipeline cannot reproduce — so
+    a binding budget cuts on the same total order the document merges use.
+    Returns (bounds, block_ids, mask); masked slots (fewer survivors than the
+    budget) get id 0, inert under the mask for every downstream gather.
+    The single-device traversal applies this directly over [Q, budget·c]; each
+    shard applies it to its owned slots to produce its contribution to the
+    cross-shard bounds merge (distributed/sharded.py) — one implementation,
+    so the local and sharded cuts cannot drift apart."""
+    bvals, gids = canonical_topk(flat_bounds, flat_gids, block_budget, id_bound=id_bound)
+    mask = bvals > NEG / 2
+    return bvals, jnp.where(mask, gids, 0), mask
+
+
 def _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, scfg, impl):
     """Layout + impl routing for both scoring rounds, including the legacy baseline."""
     if impl == "legacy":
@@ -218,12 +249,20 @@ def search_retrieve(
     blk_keep = blk_bounds > th[:, :, None] / eta[:, :, None]
 
     flat_bounds = jnp.where(blk_keep, blk_bounds, NEG).reshape(blk_bounds.shape[0], -1)
-    block_budget = scfg.block_budget or budget * c
-    block_budget = min(block_budget, budget * c)
-    bvals, bidx = jax.lax.top_k(flat_bounds, block_budget)  # over [Q, budget*c]
-    sel_sb = jnp.take_along_axis(top_idx, bidx // c, axis=1)
-    blk_ids = sel_sb * c + bidx % c
-    blk_mask = bvals > NEG / 2
+    block_budget = resolve_block_budget(scfg, budget * c)
+    if block_budget < budget * c:
+        # binding budget: canonical cut on (bound desc, global block-id asc) —
+        # the order the cross-shard bounds merge reproduces bit-identically
+        bvals, blk_ids, blk_mask = competitive_block_topk(
+            flat_bounds, _expand_superblocks(top_idx, c), block_budget, index.n_blocks + 1
+        )
+    else:
+        # full width: the θ/η cut is the only block filter, every survivor is
+        # selected and the positional tie-break is immaterial (set-identical)
+        bvals, bidx = jax.lax.top_k(flat_bounds, block_budget)  # over [Q, budget*c]
+        sel_sb = jnp.take_along_axis(top_idx, bidx // c, axis=1)
+        blk_ids = sel_sb * c + bidx % c
+        blk_mask = bvals > NEG / 2
 
     # ---- phase 3: document scoring
     scores1, pos1 = _score_blocks_dispatch(index, qdense, blk_ids, blk_mask, scfg, impl)
@@ -279,7 +318,7 @@ def _retrieve_bmp(
     scores0, pos0 = _score_blocks_dispatch(index, qdense, i0, jnp.ones_like(i0, bool), scfg, impl)
     theta = _kth_threshold(scores0, d.k, scfg.k_max, legacy=impl == "legacy")
 
-    budget = min(scfg.block_budget or 4 * scfg.gamma * index.c, nb)
+    budget = resolve_block_budget(scfg, nb, default=4 * scfg.gamma * index.c)
     vals, idx = jax.lax.top_k(boundsum, budget)
     rank = jnp.arange(budget)[None, :]
     eligible = (vals > theta[:, None] / d.eta[:, None]) & (rank >= b0)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import RetrievalConfig
+from repro.core.lsp import resolve_block_budget
 from repro.core.topk import canonical_topk
 from repro.index import clustering
 from repro.index.pack import SEG_WORDS, pack_rows_strided
@@ -204,7 +205,7 @@ def retrieve_dense(index: DenseLSPIndex, q: jnp.ndarray, cfg: RetrievalConfig):
     blk_bound = jnp.where(eligible[:, :, None], blk_bound, NEG)
     keep = blk_bound > theta[:, None, None] / cfg.eta
     flat = jnp.where(keep, blk_bound, NEG).reshape(bq, -1)
-    bb = min(cfg.block_budget or budget * c, budget * c)
+    bb = resolve_block_budget(cfg, budget * c)
     bvals, bidx = jax.lax.top_k(flat, bb)
     sel_sb = jnp.take_along_axis(top_idx, bidx // c, axis=1)
     blk_ids = sel_sb * c + bidx % c

@@ -29,6 +29,11 @@ three TopK passes plus one tiny 2k-wide sort, all exact:
 The per-shard/merge structure composes exactly: the canonical top-k of a union
 of sets equals the canonical top-k of the union of each set's canonical top-k,
 which is what makes the O(k·P) distributed merge (distributed/topk.py) exact.
+``canonical_keep_mask`` is the membership half of that contract: given the
+k-th (score, id) pair of a canonical top-k over a union, it reconstructs that
+top-k's member set on any partition of the union without moving the members —
+the cross-shard bounds merge (distributed/sharded.py) cuts each shard's block
+keep-set with it.
 """
 
 from __future__ import annotations
@@ -106,3 +111,20 @@ def canonical_topk(
         jnp.concatenate([gt_ids, tie_ids], axis=-1),
         k,
     )
+
+
+def canonical_keep_mask(
+    scores: jnp.ndarray, ids: jnp.ndarray, cut_vals: jnp.ndarray, cut_ids: jnp.ndarray
+) -> jnp.ndarray:
+    """Membership against a canonical cutoff: True where (score, id) orders
+    at-or-before (cut_val, cut_id) under (score desc, id asc).
+
+    scores/ids [..., N]; cut_vals/cut_ids [...] (one cutoff pair per row).
+    When the cutoff is the k-th entry of ``canonical_topk`` over a union of
+    sets with globally unique ids, the order is total, so exactly the union's
+    canonical top-k entries pass — on whichever partition of the union each
+    caller holds. This is how a shard decides which of its local blocks made
+    the *global* competitive cut without ever being sent the member list."""
+    cv = cut_vals[..., None]
+    ci = cut_ids[..., None]
+    return (scores > cv) | ((scores == cv) & (ids <= ci))

@@ -12,6 +12,14 @@ rather than collective-bound (§Roofline).
 Shards are produced host-side by `shard_index` (slice + repack — production builds
 per-shard indexes directly from corpus shards; this utility reshards a global build,
 e.g. after an elastic mesh change).
+
+``block_budget`` note: this path runs the FULL pipeline per shard, so a
+competitive budget is applied *per shard* — each shard keeps its own locally
+top-bounded blocks (up to P·block_budget scored globally). That is rank-safe
+(a superset of the single-device keep-set) but not bit-identical in visit
+counters. The bit-identical competitive cut — one global keep-set via the
+cross-shard bounds merge — is `distributed/sharded.py`'s contract; use
+`ShardedRetriever` when parity with `core.lsp` matters.
 """
 
 from __future__ import annotations

@@ -19,33 +19,37 @@ to the single-device engine — so this module splits the traversal differently:
               k-th value ``_kth_threshold`` computes, because the k largest of a
               union are contained in the union of per-shard k-largest.
     stage 3   the variant eligibility rule runs against the global (rank, value,
-              θ) triple masked to owned superblocks; block BoundSums, θ/η block
-              pruning and document scoring read only local index memory; local
-              canonical top-k -> all_gather [Q, P·k] -> canonical final top-k.
+              θ) triple masked to owned superblocks; block BoundSums and the
+              θ/η block cut read only local index memory. With a *competitive*
+              ``block_budget`` (< budget·c) one more collective runs: each
+              shard's canonical top-``block_budget`` (bound desc, global
+              block-id asc) bound list merges into the global cutoff pair —
+              the budget-th (bound, id) of the union — and every shard masks
+              its keep-set at that cutoff (``core.topk.canonical_keep_mask``),
+              which reconstructs the single-device competitive cut exactly,
+              including duplicated-bound blocks straddling shard boundaries.
+              Document scoring then reads only local memory; local canonical
+              top-k -> all_gather [Q, P·k] -> canonical final top-k.
 
 Per-query collective volume: O(P·B) for the candidate merge + O(P·k) for θ and
-the final merge — independent of corpus size (index reads stay local). Compute
-per shard keeps the single-device *shapes* (the worst case where one shard owns
-every global candidate is real), while index memory is 1/P per device: sharding
-buys capacity and bandwidth, not FLOP count (DESIGN.md §8).
+the final merge + O(P·block_budget) for the bounds merge when the budget binds
+— independent of corpus size (index reads stay local). Compute per shard keeps
+the single-device *shapes* (the worst case where one shard owns every global
+candidate is real) except phase-3 scoring, which a binding budget caps at
+``block_budget`` blocks per shard instead of budget·c: the paper's bounded
+phase-3 cost survives sharding. Index memory is 1/P per device: sharding buys
+capacity and bandwidth, not FLOP count (DESIGN.md §8).
 
 Static/dynamic split (DESIGN.md §9): all shapes — candidate widths, per-shard
-θ-list widths (k_max), merge widths — come from ``StaticConfig``; the dynamic
-(k, μ, η, β) thread through every stage as traced [Q] arrays exactly as in
-``core.lsp.search_retrieve``, so one compiled sharded program serves any
-``DynamicParams`` point (mixed per row) bit-identically to a re-jitted static
-config AND to the single-device program at the same point.
-
-Exactness requires the competitive *block* budget to be non-binding: a global
-block cut would need one more cross-shard bounds merge (an O(P·block_budget)
-collective — see the ROADMAP open item), which is not implemented. A
-``block_budget`` below the full ``budget·c`` raises ``NotImplementedError``;
-the supported fallback contract is the unified API's single-device 'local'
-backend — ``repro.api.Retriever.from_index(index, backend="local")``, i.e.
-``core.lsp.jit_search`` — which serves the identical StaticConfig/DynamicParams
-surface and honours competitive block budgets (at full-index memory on one
-device). BMP (no superblock level) and the legacy scoring path are likewise
-rejected.
+θ-list widths (k_max), merge widths, the block-budget cut — come from
+``StaticConfig``; the dynamic (k, μ, η, β) thread through every stage as
+traced [Q] arrays exactly as in ``core.lsp.search_retrieve``, so one compiled
+sharded program serves any ``DynamicParams`` point (mixed per row)
+bit-identically to a re-jitted static config AND to the single-device program
+at the same point. The budget itself resolves through
+``core.lsp.resolve_block_budget`` — the same clamp the single-device paths
+use — so a competitive budget means the same cut on every topology. BMP (no
+superblock level to shard on) and the legacy scoring path are rejected.
 
 Two transports share all of the per-shard math above:
   * host-loop (``mesh=None``): shards traversed in one jitted program on any
@@ -73,13 +77,15 @@ from repro.core.config import (
 )
 from repro.core.lsp import (
     _expand_superblocks,
+    competitive_block_topk,
     make_dynamic_runner,
     mask_beyond_k,
     masked_kth_min,
+    resolve_block_budget,
 )
 from repro.core.query import QueryBatch, prune_terms, scatter_dense
 from repro.core.scoring import NEG, score_blocks
-from repro.core.topk import canonical_topk
+from repro.core.topk import canonical_keep_mask, canonical_topk
 from repro.index.layout import LSPIndex
 from repro.distributed.retrieval import StackedShards, shard_index
 
@@ -117,6 +123,9 @@ class _Plan(NamedTuple):
     k_l: int  # per-shard θ contribution min(k_max, width0)
     ns_l: int  # per-shard (padded) superblock count
     n_shards: int
+    block_budget: int  # phase-3 block cap (resolve_block_budget; == budget*c when unset)
+    n_blocks_pad: int  # global PADDED block-id bound ns_l*P*c (bounds-merge id_bound)
+    competitive: bool  # block_budget < budget*c: the cross-shard bounds merge runs
 
 
 def make_plan(scfg: StaticConfig, ns_true: int, ns_l: int, c: int, b: int, n_shards: int) -> _Plan:
@@ -124,6 +133,9 @@ def make_plan(scfg: StaticConfig, ns_true: int, ns_l: int, c: int, b: int, n_sha
     budget = min(scfg.resolved_sb_budget(), ns_true)
     g0 = min(scfg.gamma0, gamma, budget)
     width0 = g0 * c * b
+    # the SAME resolution the single-device traversal applies over its
+    # [Q, budget*c] flat candidate width — one clamp rule, every topology
+    block_budget = resolve_block_budget(scfg, budget * c)
     return _Plan(
         gamma=gamma,
         g0=g0,
@@ -134,6 +146,9 @@ def make_plan(scfg: StaticConfig, ns_true: int, ns_l: int, c: int, b: int, n_sha
         k_l=min(scfg.k_max, width0),
         ns_l=ns_l,
         n_shards=n_shards,
+        block_budget=block_budget,
+        n_blocks_pad=ns_l * n_shards * c,
+        competitive=block_budget < budget * c,
     )
 
 
@@ -178,25 +193,36 @@ def merge_theta(theta_lists: jnp.ndarray, plan: _Plan, k) -> jnp.ndarray:
     return masked_kth_min(vals, jnp.minimum(k, plan.width0))
 
 
-def _phase23_local(
+class _Phase2(NamedTuple):
+    """Per-shard phase-2 output: the η-cut block-bound candidates (flattened,
+    with their GLOBAL block ids) plus what the accounting needs downstream."""
+
+    loc_idx: jnp.ndarray  # int32 [Q, budget] clipped local candidate superblock ids
+    eligible: jnp.ndarray  # bool [Q, budget] ownership-masked eligibility
+    owned: jnp.ndarray  # bool [Q, budget] candidate-ownership (load balance)
+    flat_bounds: jnp.ndarray  # f32 [Q, budget*c] η-cut bounds, NEG elsewhere
+    flat_gids: jnp.ndarray  # int32 [Q, budget*c] GLOBAL block ids of the flat slots
+
+
+def _phase2_local(
     local: LSPIndex,
     lo,
     qb_pr: QueryBatch,
-    qdense,
     g_vals,
     g_ids,
     theta,
-    owned0,
-    loc0,
-    scores0,
-    pos0,
     scfg: StaticConfig,
     d: DynamicArgs,
     impl: str,
     plan: _Plan,
-):
-    """Eligibility at the global (rank, value, θ), local block pruning + scoring,
-    local canonical top-k_max and distinct-visit + load-balance accounting."""
+) -> _Phase2:
+    """Eligibility at the global (rank, value, θ) + block BoundSums + θ/η cut.
+
+    ``flat_gids`` expands the GLOBAL candidate ids (``g_ids`` — bit-identical
+    to the single-device ``top_idx`` by stage-1 parity), so the per-shard
+    (bound, gid) candidates are exactly the single-device flat candidates
+    partitioned by ownership: non-owned and η-cut slots are NEG-bounded and
+    inert under every downstream mask."""
     c, ns_l = local.c, plan.ns_l
     rank = jnp.arange(plan.budget)[None, :]
     th = theta[:, None]
@@ -217,11 +243,8 @@ def _phase23_local(
         eligible = (in_gamma | sp_rule) if scfg.variant == "lsp2" else sp_rule
     else:
         raise ValueError(f"unknown variant {scfg.variant!r}")
-    if scfg.variant == "sp":
-        # faithful SP: round 0 only seeds θ; its documents are not returned
-        scores0 = jnp.full_like(scores0, NEG)
-    else:
-        eligible = eligible & (rank >= plan.g0)
+    if scfg.variant != "sp":
+        eligible = eligible & (rank >= plan.g0)  # round 0 already scored these
     eligible = eligible & owned  # each shard prunes/scores only what it owns
 
     blk_bounds = ops.gathered_block_bounds(
@@ -230,11 +253,74 @@ def _phase23_local(
     blk_bounds = jnp.where(eligible[:, :, None], blk_bounds, NEG)
     blk_keep = blk_bounds > th[:, :, None] / eta[:, :, None]
     flat_bounds = jnp.where(blk_keep, blk_bounds, NEG).reshape(blk_bounds.shape[0], -1)
-    block_budget = plan.budget * c  # full width: the θ/η cut is the only block filter
-    bvals, bidx = jax.lax.top_k(flat_bounds, block_budget)
-    sel_sb = jnp.take_along_axis(loc_idx, bidx // c, axis=1)
-    blk_ids = sel_sb * c + bidx % c
-    blk_mask = bvals > NEG / 2
+    flat_gids = _expand_superblocks(g_ids, c)  # == the single-device flat gids
+    return _Phase2(loc_idx, eligible, owned, flat_bounds, flat_gids)
+
+
+def _local_block_candidates(p2: _Phase2, plan: _Plan):
+    """This shard's contribution to the cross-shard bounds merge: its canonical
+    top-``block_budget`` (bound desc, global block-id asc) — a block outside
+    the local top-budget is outside the global top-budget a fortiori, so the
+    list covers everything this shard could contribute to the global cut.
+    Same ``competitive_block_topk`` the single-device cut runs."""
+    return competitive_block_topk(
+        p2.flat_bounds, p2.flat_gids, plan.block_budget, plan.n_blocks_pad + 1
+    )
+
+
+def merge_block_cutoff(cat_vals, cat_gids, plan: _Plan):
+    """Global block cutoff from the concatenated per-shard bound lists
+    [Q, P·block_budget]: the budget-th (bound, id) pair of their canonical
+    top-``block_budget``. By the composition property (core/topk.py) that
+    top-k equals the canonical top-k over ALL blocks that survived the η-cut,
+    so the cutoff is exactly the single-device cut boundary — block ids are
+    globally unique, the order is total, and masking each shard at this pair
+    (``canonical_keep_mask``) keeps exactly the single-device selection, ties
+    straddling shard boundaries included. O(P·block_budget) per query."""
+    gv, gg = canonical_topk(
+        cat_vals, cat_gids, plan.block_budget, id_bound=plan.n_blocks_pad + 1
+    )
+    return gv[:, -1], gg[:, -1]
+
+
+def _phase3_local(
+    local: LSPIndex,
+    lo,
+    qdense,
+    p2: _Phase2,
+    owned0,
+    loc0,
+    scores0,
+    pos0,
+    block_cut,
+    scfg: StaticConfig,
+    d: DynamicArgs,
+    impl: str,
+    plan: _Plan,
+):
+    """Block selection (full-width or cutoff-masked competitive), local doc
+    scoring, local canonical top-k_max and distinct-visit + load-balance
+    accounting. ``block_cut`` is None (non-binding budget: the θ/η cut is the
+    only block filter) or this shard's (bounds, gids, mask) candidate list
+    plus the global (cut_val, cut_id) pair from ``merge_block_cutoff``."""
+    c = local.c
+    rank = jnp.arange(plan.budget)[None, :]
+    if scfg.variant == "sp":
+        # faithful SP: round 0 only seeds θ; its documents are not returned
+        scores0 = jnp.full_like(scores0, NEG)
+    if block_cut is None:
+        width = plan.budget * c  # full width: every η-cut survivor is scored
+        bvals, bidx = jax.lax.top_k(p2.flat_bounds, width)
+        sel_sb = jnp.take_along_axis(p2.loc_idx, bidx // c, axis=1)
+        blk_ids = sel_sb * c + bidx % c
+        blk_mask = bvals > NEG / 2
+    else:
+        lb_vals, lb_gids, lb_mask, cut_v, cut_id = block_cut
+        # membership at the global cutoff: exactly the owned members of the
+        # global top-block_budget survive — phase-3 width shrinks from
+        # budget*c to block_budget per shard (the bounded-cost point)
+        blk_mask = lb_mask & canonical_keep_mask(lb_vals, lb_gids, cut_v, cut_id)
+        blk_ids = jnp.where(blk_mask, lb_gids - lo * c, 0)  # local block ids
 
     scores1, pos1 = score_blocks(local, qdense, blk_ids, blk_mask, scfg.doc_layout, impl)
 
@@ -249,14 +335,15 @@ def _phase23_local(
     vals_k = jnp.where(vals_k > NEG / 2, vals_k, jnp.float32(NEG))
 
     # distinct-visit accounting, partitioned by ownership: summed over shards it
-    # reproduces the single-device counters exactly (each candidate has one owner)
+    # reproduces the single-device counters exactly (each candidate has one
+    # owner, and the competitive keep-set partitions the single-device one)
     n_owned0 = owned0.sum(axis=1, dtype=jnp.int32)
     in_round0 = ((blk_ids[:, :, None] // c == loc0[:, None, :]) & owned0[:, None, :]).any(2)
     n_blk = n_owned0 * c + (blk_mask & ~in_round0).sum(axis=1, dtype=jnp.int32)
-    n_sb = n_owned0 + (eligible & (rank >= plan.g0)).sum(axis=1, dtype=jnp.int32)
+    n_sb = n_owned0 + (p2.eligible & (rank >= plan.g0)).sum(axis=1, dtype=jnp.int32)
     # load balance: this shard's share of the global top-γ candidate list — the
     # ownership skew contiguous superblock ranges can produce (ROADMAP item)
-    n_cand = (owned & (rank < plan.gamma)).sum(axis=1, dtype=jnp.int32)
+    n_cand = (p2.owned & (rank < plan.gamma)).sum(axis=1, dtype=jnp.int32)
     return ids_k, vals_k, n_sb, n_blk, n_cand
 
 
@@ -267,7 +354,7 @@ def _split_cfg(cfg, dyn):
     return cfg, dyn
 
 
-def _validate(scfg: StaticConfig, impl: str, c: int, ns_true: int) -> None:
+def _validate(scfg: StaticConfig, impl: str) -> None:
     if scfg.variant not in ("lsp0", "lsp1", "lsp2", "sp"):
         raise ValueError(
             f"ShardedRetriever: variant {scfg.variant!r} has no superblock level to shard on"
@@ -278,19 +365,6 @@ def _validate(scfg: StaticConfig, impl: str, c: int, ns_true: int) -> None:
         raise ValueError("ShardedRetriever: shards carry the fwd quantized operand only")
     if impl == "legacy":
         raise ValueError("ShardedRetriever: legacy scoring is a single-device baseline")
-    budget = min(scfg.resolved_sb_budget(), ns_true)
-    if scfg.block_budget and scfg.block_budget < budget * c:
-        raise NotImplementedError(
-            f"ShardedRetriever: competitive block_budget={scfg.block_budget} < "
-            f"budget*c={budget * c} needs the cross-shard bounds merge (one more "
-            "O(P*block_budget) collective to cut the globally top-bounded blocks; "
-            "see the ROADMAP open item) which is not implemented. Use "
-            "block_budget=0 (θ/η pruning only), or serve this config on the "
-            "single-device fallback: the 'local' backend of the unified API — "
-            "repro.api.Retriever.from_index(index, backend='local') (= "
-            "core.lsp.jit_search) — honours competitive budgets behind the same "
-            "StaticConfig/DynamicParams contract."
-        )
 
 
 # ------------------------------------------------------------------- host loop
@@ -312,7 +386,7 @@ def sharded_retrieve(
     scfg, dyn = _split_cfg(cfg, dyn)
     meta = shards[0]
     ns_true = ns_true if ns_true is not None else sum(s.n_superblocks for s in shards)
-    _validate(scfg, impl, meta.c, ns_true)
+    _validate(scfg, impl)
     plan = make_plan(scfg, ns_true, meta.n_superblocks, meta.c, meta.b, len(shards))
     d = dynamic_args(dyn, qb_full.tids.shape[0], scfg.k_max)
     bounds_impl = impl
@@ -340,11 +414,28 @@ def sharded_retrieve(
     th_lists = jnp.concatenate([jax.lax.top_k(s0, plan.k_l)[0] for _, _, s0, _ in r0], axis=1)
     theta = merge_theta(th_lists, plan, d.k)
 
-    # stage 3: eligibility + block pruning + scoring, local canonical top-k
+    # stage 3: eligibility + block bounds + θ/η cut per shard
+    p2s = [
+        _phase2_local(s, p * plan.ns_l, qb_pr, g_vals, g_ids, theta, scfg, d, impl, plan)
+        for p, s in enumerate(shards)
+    ]
+    # cross-shard bounds merge: only when the block budget binds — each shard's
+    # canonical top-block_budget bound list concatenates (the host-loop's
+    # all_gather) into the global cutoff every shard masks its keep-set at
+    cuts = [None] * plan.n_shards
+    if plan.competitive:
+        lbs = [_local_block_candidates(p2, plan) for p2 in p2s]
+        cut_v, cut_id = merge_block_cutoff(
+            jnp.concatenate([lb[0] for lb in lbs], axis=1),
+            jnp.concatenate([lb[1] for lb in lbs], axis=1),
+            plan,
+        )
+        cuts = [(lb[0], lb[1], lb[2], cut_v, cut_id) for lb in lbs]
+    # phase 3: block selection + scoring, local canonical top-k
     parts = [
-        _phase23_local(
-            s, p * plan.ns_l, qb_pr, qdense, g_vals, g_ids, theta,
-            r0[p][0], r0[p][1], r0[p][2], r0[p][3], scfg, d, impl, plan,
+        _phase3_local(
+            s, p * plan.ns_l, qdense, p2s[p],
+            r0[p][0], r0[p][1], r0[p][2], r0[p][3], cuts[p], scfg, d, impl, plan,
         )
         for p, s in enumerate(shards)
     ]
@@ -443,9 +534,19 @@ def make_sharded_mesh_fn(
         )
         theta = merge_theta(th_lists, plan, d.k)
 
-        ids_k, vals_k, n_sb, n_blk, n_cand = _phase23_local(
-            local, lo, qb_pr, qdense, g_vals, g_ids, theta,
-            owned0, loc0, scores0, pos0, scfg, d, impl, plan,
+        p2 = _phase2_local(local, lo, qb_pr, g_vals, g_ids, theta, scfg, d, impl, plan)
+        cut = None
+        if plan.competitive:
+            # cross-shard bounds merge: local top-block_budget bound lists
+            # all_gather over `model` into [Q, P·block_budget]; the canonical
+            # cutoff pair replicates, each shard masks its own keep-set at it
+            lb_vals, lb_gids, lb_mask = _local_block_candidates(p2, plan)
+            cat_v = jax.lax.all_gather(lb_vals, "model", axis=1, tiled=True)
+            cat_g = jax.lax.all_gather(lb_gids, "model", axis=1, tiled=True)
+            cut_v, cut_id = merge_block_cutoff(cat_v, cat_g, plan)
+            cut = (lb_vals, lb_gids, lb_mask, cut_v, cut_id)
+        ids_k, vals_k, n_sb, n_blk, n_cand = _phase3_local(
+            local, lo, qdense, p2, owned0, loc0, scores0, pos0, cut, scfg, d, impl, plan,
         )
         fids = jax.lax.all_gather(ids_k, "model", axis=1, tiled=True)
         fvals = jax.lax.all_gather(vals_k, "model", axis=1, tiled=True)
@@ -573,7 +674,7 @@ class ShardedRetriever:
         self.ns_true = ns_true
         self.vocab = shards[0].vocab
         self.mesh = mesh
-        _validate(scfg, impl, shards[0].c, ns_true)
+        _validate(scfg, impl)
         self._traces = {"n": 0}
         traces = self._traces
         if mesh is not None:

@@ -65,6 +65,23 @@ class IndexStoreError(RuntimeError):
     """Manifest/layout/fingerprint mismatch: the on-disk index cannot be trusted."""
 
 
+class ShardedPromotionError(IndexStoreError, ValueError):
+    """A sharded retriever cannot be promoted to mutable or saved in place.
+
+    Shards are a *serving* projection of one logical index: the per-shard set
+    carries padded superblock tails and no recoverable global corpus, so an
+    in-place mutable promotion (or a ``Retriever.save`` of the shard list)
+    would persist something that cannot round-trip. The error names the exact
+    workaround for its operation; ``operation``/``workaround`` are also carried
+    as attributes for programmatic handling. Derives from ``ValueError`` too so
+    pre-typed callers that caught the old refusal keep working."""
+
+    def __init__(self, operation: str, workaround: str):
+        self.operation = operation
+        self.workaround = workaround
+        super().__init__(f"{operation} is unsupported on a sharded index set — {workaround}")
+
+
 def _encode(obj: Any, path: str, arrays: dict[str, np.ndarray]) -> dict:
     if obj is None:
         return {"kind": "none"}

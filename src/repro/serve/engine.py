@@ -132,6 +132,10 @@ class ServeStats:
     compactions: int = 0  # background generation folds completed
     compaction_failures: int = 0  # operational compaction faults (loop kept alive)
     last_compaction_ms: float = 0.0
+    # rows whose tombstone overfetch clipped at the compiled k_max (reported by
+    # MutableRetrieverAdapter): each may come up short of k until compaction —
+    # a freshness hazard, gated to zero in benchmarks.freshness_suite
+    overfetch_saturated: int = 0
     bucket_batches: dict = field(default_factory=dict)  # (batch, nq) -> count
 
     def __post_init__(self):
@@ -203,6 +207,10 @@ class ServeStats:
         with self._lock:
             self.compaction_failures += 1
 
+    def record_overfetch_saturated(self, n: int) -> None:
+        with self._lock:
+            self.overfetch_saturated += n
+
     def _snapshot(self) -> np.ndarray:
         with self._lock:
             return np.asarray(self.latencies_ms, dtype=np.float64)
@@ -233,6 +241,7 @@ class ServeStats:
                 "compactions": self.compactions,
                 "compaction_failures": self.compaction_failures,
                 "last_compaction_ms": self.last_compaction_ms,
+                "overfetch_saturated": self.overfetch_saturated,
                 "bucket_batches": {f"{b}x{q}": n for (b, q), n in sorted(self.bucket_batches.items())},
                 "mean_ms": float(lat.mean()) if lat.size else 0.0,
                 "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
@@ -777,6 +786,10 @@ class RetrievalEngine:
             # retrievers) — fills key on it, so keys are always truthful even
             # when a mutation lands mid-batch
             served_seq = int(getattr(out, "delta_seq", 0) or 0)
+            # rows whose tombstone overfetch clipped at k_max (0 for immutable
+            # retrievers): surfaced as a ServeStats counter so operators — and
+            # the freshness audit — see short-window hazards, not silence
+            saturated = int(getattr(out, "overfetch_saturated", 0) or 0)
         except _OPERATIONAL_ERRORS as exc:  # backend fault: fail this batch, keep serving
             for it in items:
                 _try_set_exception(it.fut, exc)
@@ -821,6 +834,8 @@ class RetrievalEngine:
             _try_set_result(it.fut, _response_from(
                 rec, epoch=epoch, cache_hit=False, delta_seq=served_seq
             ))
+        if saturated:
+            self.stats.record_overfetch_saturated(saturated)
         self.stats.record_batch(bucket)
         if self.slo is not None:
             self.slo.observe(self._qsize())  # served-latency view: recovery happens here

@@ -29,8 +29,13 @@ property the post-compaction parity tests pin.
 Saturation caveat: when ``k + T > k_max`` the overfetch clips at the compiled
 program's widest window, and a query whose top-k is buried under > k_max − k
 tombstoned main hits could lose tail results until compaction folds the
-tombstones away. ``CompactionManager``'s ``max_tombstones`` trigger bounds
-that window; size it well below ``k_max − k``.
+tombstones away. The adapter does not fail such queries — it serves the best
+window it has — but it **reports** them: every clipped row increments
+``MutableRetrievalResult.overfetch_saturated``, the engine folds that into
+``ServeStats`` (``overfetch_saturated`` in ``summary()``), and the freshness
+audit (``benchmarks.freshness_suite``) gates on the serving arm staying
+saturation-free. ``CompactionManager``'s ``max_tombstones`` trigger bounds
+the window; size it well below ``k_max − k``.
 
 ``CompactionManager`` owns the background rebuild loop: poked after every
 mutation (and on a slow poll timer), it folds main+delta−tombstones into a
@@ -67,6 +72,9 @@ class MutableRetrievalResult(NamedTuple):
     theta: np.ndarray  # float32 [Q] — max(θ_main, k-th delta score)
     shard_candidates: Optional[np.ndarray] = None
     delta_seq: int = 0
+    # rows whose tombstone overfetch clipped at the compiled k_max — those rows
+    # can come up short of k until compaction (module doc, "Saturation caveat")
+    overfetch_saturated: int = 0
 
 
 def _translate_ids(ids: np.ndarray, ext_ids: np.ndarray) -> np.ndarray:
@@ -131,7 +139,9 @@ class MutableRetrieverAdapter:
         k_max = self.static_cfg.k_max if self.static_cfg is not None else max(p.k for p in rows)
         k_rows = np.asarray([p.k for p in rows], np.int64)
         # overfetch the main traversal so tombstone drops cannot starve the
-        # window; saturates at the compiled program's k_max (see module doc)
+        # window; saturates at the compiled program's k_max (see module doc) —
+        # clipped rows are counted, not hidden: they can come up short of k
+        n_saturated = sum(1 for p in rows if p.k + n_tomb > k_max)
         eff = [replace(p, k=min(p.k + n_tomb, k_max)) for p in rows]
         out = runtime(qb, eff)
         main_ids = _translate_ids(np.asarray(out.doc_ids), view.ext_ids)
@@ -168,6 +178,7 @@ class MutableRetrieverAdapter:
             theta=theta,
             shard_candidates=_shard_candidates(out),
             delta_seq=view.seq,
+            overfetch_saturated=n_saturated,
         )
 
     def _row_params(self, dyn, q: int) -> list:

@@ -68,7 +68,9 @@ def test_sharded_retriever_mesh_bit_identical_to_hostloop_and_single():
         idx = build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab,
                           IndexBuildConfig(b=8, c=8, kmeans_iters=2))
         qb = make_query_batch(make_queries(ccfg, corpus, 8), corpus.vocab)
-        for variant, kw in [("lsp0", {}), ("lsp2", dict(mu=0.4, eta=0.7))]:
+        for variant, kw in [("lsp0", {}), ("lsp2", dict(mu=0.4, eta=0.7)),
+                            ("lsp0", dict(block_budget=3)),  # competitive: bounds-merge collective
+                            ("sp", dict(mu=0.5, eta=0.8, block_budget=17))]:
             cfg = RetrievalConfig(variant=variant, k=10, gamma=16, gamma0=8, beta=0.5, **kw)
             ref = retrieve(idx, qb, cfg, impl="ref")
             for model, data in ((4, 1), (2, 2)):

@@ -85,6 +85,35 @@ def test_block_budget_degrades_gracefully(tiny_index, tiny_qb, oracle):
     assert tight > 0.2  # still returns sensible results
 
 
+def test_oversized_block_budget_clamps_on_every_variant(tiny_index, tiny_qb):
+    """One clamp rule (core.lsp.resolve_block_budget): a ``block_budget`` wider
+    than the candidate axis must clamp to it on EVERY variant — the lsp/sp
+    variants clamp to budget·c (identical results to no budget), bmp clamps to
+    n_blocks (identical results to an exactly-full budget). Before unification
+    the bmp path took ``block_budget or 4·γ·c`` unclamped."""
+    for variant, kw in [
+        ("lsp0", {}), ("lsp1", {}), ("lsp2", dict(mu=0.4, eta=0.7)),
+        ("sp", dict(mu=0.5, eta=0.8)),
+    ]:
+        big = RetrievalConfig(variant=variant, k=10, gamma=16, gamma0=4, beta=0.5,
+                              block_budget=10**6, **kw)
+        none = RetrievalConfig(variant=variant, k=10, gamma=16, gamma0=4, beta=0.5, **kw)
+        a = retrieve(tiny_index, tiny_qb, big, impl="ref")
+        b = retrieve(tiny_index, tiny_qb, none, impl="ref")
+        np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids), variant)
+        np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores), variant)
+        np.testing.assert_array_equal(
+            np.asarray(a.n_blocks_scored), np.asarray(b.n_blocks_scored), variant
+        )
+    big = RetrievalConfig(variant="bmp", k=10, gamma=16, gamma0=4, beta=0.5, block_budget=10**6)
+    full = RetrievalConfig(variant="bmp", k=10, gamma=16, gamma0=4, beta=0.5,
+                           block_budget=tiny_index.n_blocks)
+    a = retrieve(tiny_index, tiny_qb, big, impl="ref")
+    b = retrieve(tiny_index, tiny_qb, full, impl="ref")
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+
 def test_blocks_scored_accounting(tiny_index, tiny_qb):
     """n_blocks_scored counts DISTINCT blocks: round-0 blocks (γ0·c) plus surviving
     phase-3 blocks outside the round-0 superblocks. For the sp variant phase-3 may

@@ -211,14 +211,35 @@ def test_pressure_and_compaction_trigger(mut_corpus):
 
 def test_sharded_set_promotion_refused(mut_corpus):
     """A persisted sharded set has no recoverable per-shard corpus; the facade
-    must refuse promotion with an actionable error, not corrupt state."""
+    must refuse promotion with a TYPED error naming the exact workaround, not
+    corrupt state. The error stays a ValueError too (pre-typed callers)."""
     corpus, _, _ = mut_corpus
     from repro.distributed.retrieval import shard_index
+    from repro.index.store import ShardedPromotionError
 
     index = build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab, BCFG)
     retr = Retriever.from_index(list(shard_index(index, 2)), params=DynamicParams(k=K))
-    with pytest.raises(ValueError, match="sharded"):
+    with pytest.raises(ShardedPromotionError, match="sharded") as ei:
         retr.add([(np.array([1, 2], np.int32), np.ones(2, np.float32))])
+    assert isinstance(ei.value, ValueError)
+    # the workaround is actionable: it names both recovery paths
+    assert "Retriever.load" in ei.value.workaround
+    assert "Retriever.build" in ei.value.workaround
+
+
+def test_sharded_save_refused_with_workaround(mut_corpus):
+    """Retriever.save on a sharded backend is a typed refusal that names
+    save_sharded_index — not a silent mis-persist of the padded shard list."""
+    corpus, _, _ = mut_corpus
+    from repro.distributed.retrieval import shard_index
+    from repro.index.store import ShardedPromotionError
+
+    index = build_index(corpus.doc_ptr, corpus.tids, corpus.ws, corpus.vocab, BCFG)
+    retr = Retriever.from_index(list(shard_index(index, 2)), params=DynamicParams(k=K))
+    with pytest.raises(ShardedPromotionError, match="save_sharded_index") as ei:
+        retr.save("/nonexistent/never-written")
+    assert isinstance(ei.value, (ValueError, RuntimeError))
+    assert "save_sharded_index" in ei.value.workaround
 
 
 # ---- persistence -------------------------------------------------------------------

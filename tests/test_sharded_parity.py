@@ -164,6 +164,91 @@ def test_ragged_tail_shards(seed, n_docs, n_shards, variant):
     assert (np.asarray(res.doc_ids) < idx.n_docs).all(), "padding leaked into results"
 
 
+# ---- competitive block budgets: cross-shard bounds merge ---------------------------
+
+
+@given(
+    seed=integers(0, 10_000),
+    n_docs=integers(192, 640),
+    geom=sampled_from(_GEOM),
+    variant=sampled_from(_VARIANTS),
+    gamma_frac=sampled_from([0.25, 0.5, 1.0]),
+    eta=sampled_from([0.25, 1.0, 4.0]),
+    bb_frac=sampled_from([0.01, 0.1, 0.3, 0.7, 1.0, 2.0]),  # bb=1 … bb>budget·c
+    n_shards=sampled_from([1, 2, 3, 4]),
+)
+def test_competitive_block_budget_bit_identical(
+    seed, n_docs, geom, variant, gamma_frac, eta, bb_frac, n_shards
+):
+    """A competitive ``block_budget`` (< budget·c) cuts the flattened η-survivor
+    blocks to the canonical (bound desc, global block-id asc) top-budget. The
+    sharded path derives that cut from an O(P·block_budget) bounds merge — and
+    must stay bit-identical to single-device on ids, scores, θ and counters,
+    with per-query phase-3 work capped by the budget on BOTH paths."""
+    _, idx, qb = _build_case(seed, n_docs, 96, geom)
+    cfg0 = _cfg_case(idx, variant, gamma_frac, 0.5, eta, 0.5, 0.66, 10)
+    budget = min(cfg0.resolved_sb_budget(), idx.n_superblocks)
+    bb = max(1, int(round(bb_frac * budget * idx.c)))
+    cfg = RetrievalConfig(
+        variant=cfg0.variant, k=cfg0.k, gamma=cfg0.gamma, gamma0=cfg0.gamma0,
+        eta=cfg0.eta, mu=cfg0.mu, beta=cfg0.beta, block_budget=bb,
+    )
+    ref = retrieve(idx, qb, cfg, impl="ref")
+    res = sharded_retrieve(
+        shard_index(idx, n_shards), qb, cfg, impl="ref", ns_true=idx.n_superblocks
+    )
+    _assert_bit_identical(ref, res)
+    # the budget really bounds phase-3: distinct blocks beyond round-0's γ0·c
+    # can only come from the ≤ block_budget survivors of the competitive cut
+    n_blk = np.asarray(res.n_blocks_scored)
+    assert (n_blk <= cfg.gamma0 * idx.c + bb).all(), (int(n_blk.max()), bb)
+    # and per-shard shares partition the global count — nothing double-scored
+    np.testing.assert_array_equal(
+        np.asarray(res.shard_blocks).sum(axis=1), np.asarray(ref.n_blocks_scored)
+    )
+
+
+@given(
+    seed=integers(0, 10_000),
+    n_base=sampled_from([3, 5, 8]),
+    copies=sampled_from([16, 24, 40]),
+    n_shards=sampled_from([2, 3, 4]),
+    variant=sampled_from(["lsp0", "lsp1"]),
+    bb=sampled_from([1, 2, 3, 7, 12]),
+)
+def test_competitive_budget_ties_at_merge_boundary(seed, n_base, copies, n_shards, variant, bb):
+    """Duplicated-document corpora make many blocks share the exact same
+    BoundSum, so a small ``block_budget`` lands the competitive cutoff inside
+    an equal-bound run that straddles shard boundaries. The canonical (bound
+    desc, global block-id asc) tie-break must pick the same block set on both
+    paths — this is exactly where a value-only bounds merge diverges."""
+    rng = np.random.default_rng(seed)
+    vocab = 64
+    base = [np.sort(rng.choice(vocab, rng.integers(4, 9), replace=False)) for _ in range(n_base)]
+    docs = [base[i % n_base] for i in range(n_base * copies)]
+    lens = np.array([len(d) for d in docs], np.int64)
+    doc_ptr = np.zeros(len(docs) + 1, np.int64)
+    np.cumsum(lens, out=doc_ptr[1:])
+    tids = np.concatenate(docs).astype(np.int32)
+    ws = np.ones_like(tids, np.float32)  # constant weights -> tied bounds everywhere
+    idx = build_index(
+        doc_ptr, tids, ws, vocab,
+        IndexBuildConfig(b=4, c=8, kmeans_iters=1, d_proj=16, seed=seed),
+    )
+    qt = base[rng.integers(0, n_base)].astype(np.int32)
+    qb = make_query_batch([(qt, np.ones_like(qt, np.float32))], vocab)
+    cfg = RetrievalConfig(
+        variant=variant, k=10, gamma=max(2, idx.n_superblocks // 2), gamma0=2,
+        beta=1.0, block_budget=bb,
+    )
+    ref = retrieve(idx, qb, cfg, impl="ref")
+    res = sharded_retrieve(
+        shard_index(idx, n_shards), qb, cfg, impl="ref", ns_true=idx.n_superblocks
+    )
+    _assert_bit_identical(ref, res)
+    assert (np.asarray(res.n_blocks_scored) <= cfg.gamma0 * idx.c + bb).all()
+
+
 # ---- pruning-safety invariants under sharding --------------------------------------
 
 
@@ -293,14 +378,16 @@ def test_sharded_retriever_rejects_unsupported_configs(tiny_index):
         ShardedRetriever(tiny_index, RetrievalConfig(doc_layout="flat"), n_shards=2)
     with pytest.raises(ValueError, match="legacy"):
         ShardedRetriever(tiny_index, RetrievalConfig(), n_shards=2, impl="legacy")
-    # a competitive block budget needs the (unimplemented) cross-shard bounds
-    # merge — the refusal must name the missing collective AND the fallback
-    with pytest.raises(NotImplementedError, match="cross-shard bounds merge") as ei:
-        ShardedRetriever(
-            tiny_index, RetrievalConfig(gamma=8, gamma0=8, block_budget=2), n_shards=2
-        )
-    assert "single-device" in str(ei.value)
-    assert "block_budget=0" in str(ei.value)
+
+
+def test_sharded_retriever_serves_competitive_block_budget(tiny_index, tiny_qb):
+    """Regression for the former NotImplementedError: a competitive
+    ``block_budget`` (< budget·c) now serves on the sharded path via the
+    cross-shard bounds merge — bit-identical to single-device."""
+    cfg = RetrievalConfig(variant="lsp0", k=10, gamma=8, gamma0=4, beta=0.5, block_budget=2)
+    ref = retrieve(tiny_index, tiny_qb, cfg, impl="ref")
+    sr = ShardedRetriever(tiny_index, cfg, n_shards=2, impl="ref")
+    _assert_bit_identical(ref, sr(tiny_qb))
 
 
 def test_sharded_retriever_callable_and_warmup(tiny_index, tiny_corpus):
