@@ -1,0 +1,78 @@
+"""Known-bad fixture: every lock-order rule fires.
+
+``Inverted`` nests its two locks both ways (classic AB/BA deadlock),
+``AcquireRelease`` does the same through the acquire()/release() form,
+``Ring`` rotates three locks so no single pair is inverted but the ring
+deadlocks, and ``Holder`` reaches a sleep through a call while locked.
+"""
+
+import threading
+import time
+
+
+class Inverted:
+    def __init__(self):
+        self._a_lock = threading.Lock()
+        self._b_lock = threading.Lock()
+
+    def ab(self):
+        with self._a_lock:
+            with self._b_lock:
+                pass
+
+    def ba(self):
+        with self._b_lock:
+            with self._a_lock:
+                pass
+
+
+class AcquireRelease:
+    def __init__(self):
+        self._x_lock = threading.Lock()
+        self._y_lock = threading.Lock()
+
+    def xy(self):
+        self._x_lock.acquire()
+        with self._y_lock:
+            pass
+        self._x_lock.release()
+
+    def yx(self):
+        with self._y_lock:
+            self._x_lock.acquire()
+            self._x_lock.release()
+
+
+class Ring:
+    def __init__(self):
+        self._r1_lock = threading.Lock()
+        self._r2_lock = threading.Lock()
+        self._r3_lock = threading.Lock()
+
+    def one_two(self):
+        with self._r1_lock:
+            with self._r2_lock:
+                pass
+
+    def two_three(self):
+        with self._r2_lock:
+            with self._r3_lock:
+                pass
+
+    def three_one(self):
+        with self._r3_lock:
+            with self._r1_lock:
+                pass
+
+
+def _slow():
+    time.sleep(0.1)
+
+
+class Holder:
+    def __init__(self):
+        self._hold_lock = threading.Lock()
+
+    def step(self):
+        with self._hold_lock:
+            _slow()

@@ -1,0 +1,31 @@
+"""Known-good fixture: one global lock order, nothing blocking while held.
+
+``Ordered`` always takes ``_outer_lock`` before ``_inner_lock``; calls made
+under a lock reach only non-blocking helpers; the sleep lives outside any
+critical section. Must stay clean under the FULL pass battery.
+"""
+
+import threading
+import time
+
+
+class Ordered:
+    def __init__(self):
+        self._outer_lock = threading.Lock()
+        self._inner_lock = threading.Lock()
+        self.depth = 0
+
+    def outer_then_inner(self):
+        with self._outer_lock:
+            with self._inner_lock:
+                self._bump()
+
+    def inner_only(self):
+        with self._inner_lock:
+            self._bump()
+
+    def _bump(self):
+        self.depth += 1
+
+    def idle(self):
+        time.sleep(0.01)

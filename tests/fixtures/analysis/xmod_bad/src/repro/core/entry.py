@@ -1,0 +1,12 @@
+"""xmod_bad: the jit entry lives here; the host sync it reaches does not."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.helper import leak
+
+
+@jax.jit
+def jit_entry(x):
+    y = jnp.abs(x)
+    return leak(y)

@@ -1,0 +1,10 @@
+"""xmod_bad: no jit entry in this module — only the cross-module closure
+from ``entry.jit_entry`` can mark ``leak`` jit-reachable and flag the
+``float()`` host sync."""
+
+import jax.numpy as jnp
+
+
+def leak(y):
+    z = jnp.sum(y)
+    return float(z)

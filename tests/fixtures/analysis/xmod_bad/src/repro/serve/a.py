@@ -1,0 +1,18 @@
+"""xmod_bad: takes A_LOCK then (through b.take_b) B_LOCK; module b nests the
+opposite way — an inverted pair no single module can see."""
+
+import threading
+
+from repro.serve.b import take_b
+
+A_LOCK = threading.Lock()
+
+
+def a_then_b():
+    with A_LOCK:
+        take_b()
+
+
+def take_a():
+    with A_LOCK:
+        pass

@@ -1,0 +1,17 @@
+"""xmod_bad: the other half of the inverted pair (B_LOCK before A_LOCK)."""
+
+import threading
+
+from repro.serve.a import take_a
+
+B_LOCK = threading.Lock()
+
+
+def b_then_a():
+    with B_LOCK:
+        take_a()
+
+
+def take_b():
+    with B_LOCK:
+        pass

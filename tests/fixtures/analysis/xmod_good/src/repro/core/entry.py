@@ -1,0 +1,12 @@
+"""xmod_good: the same cross-module shape as xmod_bad, all on-device."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.helper import compute
+
+
+@jax.jit
+def jit_entry(x):
+    y = jnp.abs(x)
+    return compute(y)

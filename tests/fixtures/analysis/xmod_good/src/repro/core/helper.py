@@ -1,0 +1,8 @@
+"""xmod_good: jit-reachable from entry.py, stays traced — must scan clean."""
+
+import jax.numpy as jnp
+
+
+def compute(y):
+    z = jnp.sum(y)
+    return z * 2.0

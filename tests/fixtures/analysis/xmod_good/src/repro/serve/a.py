@@ -1,0 +1,17 @@
+"""xmod_good: A_LOCK is always taken before B_LOCK, across both modules."""
+
+import threading
+
+from repro.serve.b import take_b
+
+A_LOCK = threading.Lock()
+
+
+def a_then_b():
+    with A_LOCK:
+        take_b()
+
+
+def take_a():
+    with A_LOCK:
+        pass

@@ -1,0 +1,10 @@
+"""xmod_good: B_LOCK is only ever the innermost lock."""
+
+import threading
+
+B_LOCK = threading.Lock()
+
+
+def take_b():
+    with B_LOCK:
+        pass

@@ -1,7 +1,10 @@
-"""Analyzer self-tests (ISSUE 7): every known-bad fixture is flagged with the
-expected rule codes, every known-good fixture is clean under the FULL battery,
-and a whole-tree run agrees exactly with the reviewed baseline (so CI's
-``python -m tools.analysis --check`` gates the same state these tests pin)."""
+"""Analyzer self-tests: every known-bad fixture is flagged with the expected
+rule codes, every known-good fixture is clean under the FULL battery, the
+cross-module mini-trees prove whole-program reachability (a host sync / lock
+inversion NO single module can see), a whole-tree run agrees exactly with the
+reviewed baseline (so CI's ``python -m tools.analysis --check`` gates the same
+state these tests pin), and the mutation catalog is 100% caught — each mutant
+by its expected pass and rule."""
 
 import json
 import subprocess
@@ -47,6 +50,11 @@ BAD_EXPECTATIONS = {
         ("pallas-contracts", "missing-divisibility-assert"),
         ("pallas-contracts", "dequant-astype"),
     },
+    "bad_lock_order.py": {
+        ("lock-order", "lock-order-inconsistent"),
+        ("lock-order", "lock-cycle"),
+        ("lock-order", "held-blocking-path"),
+    },
 }
 
 
@@ -64,11 +72,51 @@ def test_bad_fixture_flags_every_expected_rule(name):
         "good_trace_safety.py",
         "good_lock_discipline.py",
         "good_pallas_contracts.py",
+        "good_lock_order.py",
     ],
 )
 def test_good_fixture_is_clean_under_all_passes(name):
     got = _codes(FIXTURES / name)
     assert not got, f"{name}: false positives: {sorted(got)}"
+
+
+def _tree_codes(root: Path) -> set:
+    an = Analyzer(root)
+    return {(f.invariant, f.code) for f in an.collect()}
+
+
+def test_xmod_bad_tree_needs_whole_program_analysis():
+    """The host sync is two modules from the nearest @jax.jit and the lock
+    inversion is split across two files — per-module runs see neither."""
+    got = _tree_codes(FIXTURES / "xmod_bad")
+    assert ("trace-safety", "host-sync") in got, sorted(got)
+    assert ("lock-order", "lock-order-inconsistent") in got, sorted(got)
+    # the same files in single-module fallback mode (run(mod)) miss both
+    from tools.analysis.core import ModuleSource
+    from tools.analysis.passes.lock_order import LockOrderPass
+    from tools.analysis.passes.trace_safety import TraceSafetyPass
+
+    root = FIXTURES / "xmod_bad"
+    per_file = set()
+    for p in Analyzer(root).tree_files():
+        mod = ModuleSource.load(p, root)
+        for cls in (TraceSafetyPass, LockOrderPass):
+            per_file |= {(f.invariant, f.code) for f in cls().run(mod)}
+    assert ("trace-safety", "host-sync") not in per_file
+    assert ("lock-order", "lock-order-inconsistent") not in per_file
+
+
+def test_xmod_good_tree_is_clean():
+    assert not _tree_codes(FIXTURES / "xmod_good")
+
+
+def test_mutation_catalog_fully_caught():
+    from tools.analysis.mutants import CATALOG, run_all
+
+    results = run_all(REPO)
+    assert len(results) == len(CATALOG) >= 10
+    missed = [r.mutant.mid for r in results if not r.caught]
+    assert not missed, f"mutants not caught by their expected pass/rule: {missed}"
 
 
 def test_tree_findings_equal_baseline_and_all_justified():

@@ -7,26 +7,61 @@ Modes
   --update-baseline  rewrite the baseline from a full tree scan, preserving
                      existing justifications; new entries start unjustified
                      (and therefore fail --check until written up)
+  --diff [REF]       scan only files changed vs a git ref (default
+                     origin/main, falling back to main, then HEAD) — the fast
+                     local/pre-commit mode; project-aware passes still see the
+                     whole tree, findings are filtered to the changed files
 
-Positional paths restrict the scan to those files (fixture tests, the CI
-mutation smoke); with paths given, stale-entry detection is skipped.
+Positional paths restrict the scan to those files (fixture tests, the mutant
+harness); with paths or --diff given, stale-entry detection is skipped.
 """
 
 from __future__ import annotations
 
 import argparse
+import subprocess
 import sys
 from pathlib import Path
 
 from tools.analysis import baseline as bl
-from tools.analysis.core import Analyzer
+from tools.analysis.core import Analyzer, in_scan_tree
 from tools.analysis.passes import default_passes, passes_by_name
 from tools.analysis.report import render_json, render_text
 
 
+def _changed_files(root: Path, ref: str, explicit_ref: bool) -> list:
+    """Scan-tree .py files changed vs ``ref`` (committed, staged, or unstaged),
+    plus untracked ones. Falls back origin/main -> main -> HEAD unless the ref
+    was given explicitly."""
+
+    def git(*args):
+        return subprocess.run(
+            ["git", *args], cwd=root, capture_output=True, text=True
+        )
+
+    candidates = [ref] if explicit_ref else [ref, "main", "HEAD"]
+    resolved = None
+    for cand in candidates:
+        if git("rev-parse", "--verify", "--quiet", cand + "^{commit}").returncode == 0:
+            resolved = cand
+            break
+    if resolved is None:
+        raise SystemExit(f"--diff: cannot resolve ref(s) {', '.join(candidates)}")
+    diff = git("diff", "--name-only", resolved, "--", "*.py")
+    if diff.returncode != 0:
+        raise SystemExit(f"--diff: git diff failed: {diff.stderr.strip()}")
+    untracked = git("ls-files", "--others", "--exclude-standard", "--", "*.py")
+    names = set(diff.stdout.split()) | set(untracked.stdout.split())
+    out = []
+    for rel in sorted(names):
+        if in_scan_tree(rel) and (root / rel).is_file():
+            out.append(str(root / rel))
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m tools.analysis", description=__doc__)
-    ap.add_argument("paths", nargs="*", help="restrict to these files (default: src/repro tree)")
+    ap.add_argument("paths", nargs="*", help="restrict to these files (default: full scan tree)")
     ap.add_argument("--root", default=".", help="repo root (default: cwd)")
     ap.add_argument("--baseline", default=None, help="baseline JSON path")
     ap.add_argument("--check", action="store_true", help="gate: nonzero exit on violations")
@@ -34,11 +69,24 @@ def main(argv=None) -> int:
     ap.add_argument("--json", action="store_true", help="machine-readable output")
     ap.add_argument("--pass", dest="passes", action="append", metavar="NAME",
                     help="run only this pass (repeatable)")
+    ap.add_argument("--diff", nargs="?", const="origin/main", default=None, metavar="REF",
+                    help="scan only files changed vs REF (default origin/main)")
     args = ap.parse_args(argv)
 
     root = Path(args.root)
     passes = passes_by_name(args.passes) if args.passes else default_passes()
     analyzer = Analyzer(root, passes=passes)
+
+    if args.diff is not None:
+        if args.paths:
+            print("--diff and positional paths are mutually exclusive", file=sys.stderr)
+            return 2
+        changed = _changed_files(root, args.diff, explicit_ref=args.diff != "origin/main")
+        if not changed:
+            print(f"--diff {args.diff}: no changed scan-tree files; nothing to do")
+            return 0
+        args.paths = changed
+
     tree_scan = not args.paths
     findings = analyzer.fingerprinted(args.paths or None)
 
@@ -59,11 +107,20 @@ def main(argv=None) -> int:
         return 0
 
     d = bl.diff(findings, base, tree_scan)
-    print(render_json(d, base) if args.json else render_text(d, base, args.check, tree_scan))
+    project = analyzer._project  # populated iff a project-aware pass ran
+    stats = project.stats() if project is not None else None
+    print(
+        render_json(d, base, stats)
+        if args.json
+        else render_text(d, base, args.check, tree_scan, stats)
+    )
     if args.check:
         return 0 if d.clean(tree_scan) else 1
     return 0
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    try:
+        sys.exit(main())
+    except BrokenPipeError:  # report piped into head/less that quit early
+        sys.exit(1)

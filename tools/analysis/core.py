@@ -1,21 +1,63 @@
-"""Analyzer core: source model, findings, pass protocol, tree walker.
+"""Analyzer core: source model, findings, pass protocol, project index, walker.
 
 A ``Finding`` is identified by a *fingerprint* that hashes the invariant, the
 rule code, the file, and the stripped source line — NOT the line number — so a
 reviewed baseline survives unrelated edits that shift code up or down. Two
 identical violations on identical lines in one file are disambiguated with an
 occurrence suffix (``#1``, ``#2``, ...).
+
+Whole-program analysis rides on ``ProjectIndex``: every scanned tree is loaded
+once, imports are resolved into a module graph, and each function gets a
+best-effort, name-based resolution of its call sites into a cross-module call
+graph. Resolution is deliberately conservative — a call either resolves to a
+project function (class methods included, through ``self.attr``/local-variable
+types inferred from ``x = ClassName(...)`` assignments and annotations),
+classifies as *external* (stdlib/jax/builtins), or stays *unresolved* and is
+counted as such, never guessed. Passes that declare ``project_aware = True``
+receive the whole index on tree scans and can close reachability over module
+boundaries; their single-module ``run`` remains the fallback for explicitly
+listed files (fixtures, temp copies), so precision never regresses below the
+old intra-module analyzer.
 """
 
 from __future__ import annotations
 
 import ast
+import builtins
 import hashlib
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Iterable, Optional
 
 SRC_PREFIX = "src/repro"
+
+# Trees covered by a default (no-paths) scan. Passes narrow per-tree coverage
+# via ``applies`` — lock passes never run on benchmark scripts, trace-safety
+# covers the jax-bearing trees only. ``src/repro/launch`` rides the src tree.
+SCAN_ROOTS = ("src/repro", "tools", "benchmarks")
+
+_BUILTIN_NAMES = frozenset(dir(builtins))
+
+
+def in_scan_tree(relpath: str) -> bool:
+    return any(relpath == r or relpath.startswith(r + "/") for r in SCAN_ROOTS)
+
+
+def module_name(relpath: str) -> Optional[str]:
+    """Dotted import name for a scanned file: ``src/repro/core/lsp.py`` ->
+    ``repro.core.lsp``; ``tools/analysis/core.py`` -> ``tools.analysis.core``.
+    ``None`` for files outside the scan roots or non-importable names."""
+    if not relpath.endswith(".py") or not in_scan_tree(relpath):
+        return None
+    p = relpath[:-3]
+    if p.startswith("src/"):
+        p = p[4:]
+    if p.endswith("/__init__"):
+        p = p[: -len("/__init__")]
+    parts = p.split("/")
+    if not all(part.isidentifier() for part in parts):
+        return None
+    return ".".join(parts)
 
 
 @dataclass
@@ -82,14 +124,361 @@ def fingerprint_findings(findings: Iterable[Finding]) -> dict:
     return out
 
 
+# -- project index -------------------------------------------------------------
+
+
+class ClassInfo:
+    """A top-level class: its methods and the inferred types of its attrs."""
+
+    def __init__(self, modname: str, name: str, node: ast.ClassDef):
+        self.modname = modname
+        self.name = name
+        self.node = node
+        self.methods: dict = {}  # method name -> FunctionInfo key
+        self.attr_types: dict = {}  # attr name -> (modname, classname)
+
+
+class FunctionInfo:
+    """One def anywhere in the project, with its resolved call sites."""
+
+    def __init__(self, key, node, mod, cls_name):
+        self.key = key  # (modname, qualname)
+        self.modname, self.qualname = key
+        self.node = node
+        self.mod = mod  # ModuleSource
+        self.cls = cls_name  # enclosing class name, or None
+        self.local_types: dict = {}  # local/param name -> (modname, classname)
+        self.callees: list = []  # resolved project keys, call order
+        self.call_targets: dict = {}  # id(ast.Call) -> key
+        self.n_external = 0
+        self.n_unresolved = 0
+
+
+class _ModTable:
+    def __init__(self):
+        self.imports: dict = {}  # alias -> ("module", target) | ("symbol", target_mod, name)
+        self.classes: dict = {}  # class name -> ClassInfo
+        self.functions_top: dict = {}  # top-level function name -> key
+        self.globals: set = set()  # module-level assigned names
+
+
+class ProjectIndex:
+    """Module graph + best-effort cross-module call graph over a file set.
+
+    Name-based and conservative: every call site is resolved to a project
+    function, classified external (imports that leave the project, builtins),
+    or counted unresolved. Unresolved edges are never guessed — passes fall
+    back to their intra-module behavior for them.
+    """
+
+    def __init__(self, mods: list):
+        self.modules: dict = {}  # modname -> ModuleSource
+        self.tables: dict = {}  # modname -> _ModTable
+        self.functions: dict = {}  # key -> FunctionInfo
+        self.fn_by_node: dict = {}  # id(def node) -> FunctionInfo
+        for mod in mods:
+            mn = module_name(mod.relpath)
+            if mn is None:  # single-module fallback (fixtures, temp copies)
+                mn = Path(mod.relpath).stem or "__single__"
+            self.modules[mn] = mod
+        for mn, mod in self.modules.items():
+            self._index_module(mn, mod)
+        for mn, mod in self.modules.items():
+            self._infer_types(mn)
+        for fi in self.functions.values():
+            self._resolve_calls(fi)
+
+    @classmethod
+    def single(cls, mod: ModuleSource) -> "ProjectIndex":
+        return cls([mod])
+
+    # -- construction ----------------------------------------------------------
+
+    def _index_module(self, mn: str, mod: ModuleSource) -> None:
+        t = self.tables[mn] = _ModTable()
+        for node in mod.tree.body:
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    t.imports[a.asname or a.name.split(".")[0]] = (
+                        ("module", a.name) if a.asname else ("module", a.name.split(".")[0])
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.level == 0 and node.module:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    t.imports[a.asname or a.name] = ("symbol", node.module, a.name)
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    for leaf in ast.walk(tgt):
+                        if isinstance(leaf, ast.Name):
+                            t.globals.add(leaf.id)
+            elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+                t.globals.add(node.target.id)
+
+        def register(parent: ast.AST, qual: str, cls_name, cls_info) -> None:
+            for child in ast.iter_child_nodes(parent):
+                if isinstance(child, ast.ClassDef):
+                    ci = None
+                    if not qual:  # only top-level classes join the module table
+                        ci = ClassInfo(mn, child.name, child)
+                        t.classes[child.name] = ci
+                    register(child, f"{qual}{child.name}.", child.name, ci)
+                elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    key = (mn, f"{qual}{child.name}")
+                    fi = FunctionInfo(key, child, mod, cls_name)
+                    self.functions[key] = fi
+                    self.fn_by_node[id(child)] = fi
+                    if cls_info is not None:
+                        cls_info.methods[child.name] = key
+                    elif not qual:
+                        t.functions_top[child.name] = key
+                    register(child, f"{qual}{child.name}.", None, None)
+                else:
+                    register(child, qual, cls_name, cls_info)
+
+        register(mod.tree, "", None, None)
+
+    # -- name resolution -------------------------------------------------------
+
+    def _resolve_chain(self, mn: str, parts: list, depth: int = 0):
+        """Resolve a dotted chain in module context. Returns ``("func", key)``,
+        ``("class", (mod, cls))``, ``("module", modname)``, ``("external",)``,
+        or ``None`` (unresolved)."""
+        if depth > 6 or not parts or mn not in self.tables:
+            return None
+        t = self.tables[mn]
+        head, rest = parts[0], parts[1:]
+        if head in t.classes:
+            base = ("class", (mn, head))
+        elif head in t.functions_top:
+            base = ("func", t.functions_top[head])
+        elif head in t.imports:
+            imp = t.imports[head]
+            if imp[0] == "module":
+                target = imp[1]
+                if target in self.modules:
+                    base = ("module", target)
+                elif any(m.startswith(target + ".") for m in self.modules):
+                    base = ("module", target)  # package prefix of project modules
+                else:
+                    return ("external",)
+            else:
+                _, target, sym = imp
+                if f"{target}.{sym}" in self.modules:
+                    base = ("module", f"{target}.{sym}")
+                elif target in self.modules:
+                    base = self._resolve_chain(target, [sym], depth + 1)
+                    if base in (None, ("external",)):
+                        return base
+                elif any(m.startswith(target + ".") or m == target for m in self.modules):
+                    return None  # project package, symbol we cannot see
+                else:
+                    return ("external",)
+        elif head in _BUILTIN_NAMES:
+            return ("external",)
+        else:
+            return None
+        for p in rest:
+            if base[0] == "module":
+                sub = f"{base[1]}.{p}"
+                if sub in self.modules or any(m.startswith(sub + ".") for m in self.modules):
+                    base = ("module", sub)
+                elif base[1] in self.tables:
+                    base = self._resolve_chain(base[1], [p], depth + 1)
+                    if base in (None, ("external",)):
+                        return base
+                else:
+                    return None
+            elif base[0] == "class":
+                base = self._method(base[1], p)
+                if base is None:
+                    return None
+            else:
+                return None
+        return base
+
+    def _method(self, classref, name: str):
+        cm, cc = classref
+        ci = self.tables.get(cm, _ModTable()).classes.get(cc)
+        if ci and name in ci.methods:
+            return ("func", ci.methods[name])
+        return None
+
+    def _classref(self, mn: str, node: ast.AST, depth: int = 0):
+        """(modname, classname) a value expression constructs, best effort."""
+        if depth > 4:
+            return None
+        if isinstance(node, ast.Call):
+            parts = dotted(node.func)
+            if parts:
+                r = self._resolve_chain(mn, parts.split("."))
+                if r and r[0] == "class":
+                    return r[1]
+            return None
+        if isinstance(node, ast.IfExp):
+            return self._classref(mn, node.body, depth + 1) or self._classref(
+                mn, node.orelse, depth + 1
+            )
+        if isinstance(node, (ast.Name, ast.Attribute)):  # annotation position
+            parts = dotted(node)
+            if parts:
+                r = self._resolve_chain(mn, parts.split("."))
+                if r and r[0] == "class":
+                    return r[1]
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            r = self._resolve_chain(mn, node.value.split("."))
+            if r and r[0] == "class":
+                return r[1]
+        return None
+
+    # -- type inference --------------------------------------------------------
+
+    def _infer_types(self, mn: str) -> None:
+        t = self.tables[mn]
+        for ci in t.classes.values():
+            for n in ast.walk(ci.node):
+                if isinstance(n, ast.Assign):
+                    ref = self._classref(mn, n.value)
+                    if ref is None:
+                        continue
+                    for tgt in n.targets:
+                        if (
+                            isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"
+                        ):
+                            ci.attr_types.setdefault(tgt.attr, ref)
+                elif isinstance(n, ast.AnnAssign) and n.annotation is not None:
+                    tgt = n.target
+                    if (
+                        isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"
+                    ):
+                        ref = self._classref(mn, n.annotation)
+                        if ref:
+                            ci.attr_types.setdefault(tgt.attr, ref)
+        for fi in self.functions.values():
+            if fi.modname != mn:
+                continue
+            a = fi.node.args
+            for p in a.posonlyargs + a.args + a.kwonlyargs:
+                if p.annotation is not None:
+                    ref = self._classref(mn, p.annotation)
+                    if ref:
+                        fi.local_types[p.arg] = ref
+            for n in _own_nodes(fi.node):
+                if isinstance(n, ast.Assign):
+                    ref = self._classref(mn, n.value)
+                    if ref:
+                        for tgt in n.targets:
+                            if isinstance(tgt, ast.Name):
+                                fi.local_types.setdefault(tgt.id, ref)
+                elif isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name):
+                    ref = self._classref(mn, n.annotation) if n.annotation else None
+                    if ref is None and n.value is not None:
+                        ref = self._classref(mn, n.value)
+                    if ref:
+                        fi.local_types.setdefault(n.target.id, ref)
+
+    # -- call resolution -------------------------------------------------------
+
+    def _resolve_calls(self, fi: FunctionInfo) -> None:
+        for n in _own_nodes(fi.node):
+            if not isinstance(n, ast.Call):
+                continue
+            r = self.resolve_call(fi, n)
+            if r is None:
+                fi.n_unresolved += 1
+            elif r == ("external",):
+                fi.n_external += 1
+            else:
+                key = None
+                if r[0] == "func":
+                    key = r[1]
+                elif r[0] == "class":  # constructor: body is __init__ when present
+                    m = self._method(r[1], "__init__")
+                    key = m[1] if m else None
+                if key is not None:
+                    fi.call_targets[id(n)] = key
+                    fi.callees.append(key)
+                else:
+                    fi.n_external += 1  # project class with no visible __init__
+
+    def resolve_call(self, fi: FunctionInfo, call: ast.Call):
+        chain = dotted(call.func)
+        if not chain:
+            return None  # lambda/subscript/chained-call receivers
+        parts = chain.split(".")
+        if parts[0] == "self" and fi.cls is not None and len(parts) >= 2:
+            ci = self.tables[fi.modname].classes.get(fi.cls)
+            if ci is None:
+                return None
+            if len(parts) == 2:
+                if parts[1] in ci.methods:
+                    return ("func", ci.methods[parts[1]])
+                ref = ci.attr_types.get(parts[1])
+                return self._method(ref, "__call__") if ref else None
+            if len(parts) == 3:
+                ref = ci.attr_types.get(parts[1])
+                return self._method(ref, parts[2]) if ref else None
+            return None
+        if parts[0] in fi.local_types:
+            ref = fi.local_types[parts[0]]
+            if len(parts) == 1:
+                return self._method(ref, "__call__")
+            if len(parts) == 2:
+                return self._method(ref, parts[1])
+            return None
+        return self._resolve_chain(fi.modname, parts)
+
+    # -- accounting ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        resolved = sum(len(fi.callees) for fi in self.functions.values())
+        return {
+            "modules": len(self.modules),
+            "functions": len(self.functions),
+            "calls_resolved": resolved,
+            "calls_external": sum(fi.n_external for fi in self.functions.values()),
+            "calls_unresolved": sum(fi.n_unresolved for fi in self.functions.values()),
+        }
+
+
+def dotted(node: ast.AST) -> str:
+    """'jax.lax.top_k' for an Attribute/Name chain; '' when not a chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _own_nodes(fn: ast.AST):
+    """Walk a function body, NOT descending into nested function defs."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
 class AnalysisPass:
     """One invariant. Subclasses set ``name``/``description``, narrow the file
-    set with ``applies`` (consulted only for tree scans — explicitly listed
-    files outside ``src/`` always run every pass, which is how fixture tests
-    and the CI mutation smoke drive the analyzer), and emit via ``run``."""
+    set with ``applies`` (consulted for tree-scoped files — explicitly listed
+    files outside the scan roots always run every pass, which is how fixture
+    tests and the mutant harness's temp copies drive the analyzer), and emit
+    via ``run``. Passes with ``project_aware = True`` additionally implement
+    ``run_project(ProjectIndex)``, used for tree scans; ``run`` stays the
+    single-module fallback."""
 
     name: str = ""
     description: str = ""
+    project_aware: bool = False
 
     def applies(self, relpath: str) -> bool:
         return relpath.startswith(SRC_PREFIX)
@@ -97,19 +486,12 @@ class AnalysisPass:
     def run(self, mod: ModuleSource) -> list:
         raise NotImplementedError
 
+    def run_project(self, project: ProjectIndex) -> list:
+        raise NotImplementedError
+
     # -- shared AST helpers ----------------------------------------------------
 
-    @staticmethod
-    def dotted(node: ast.AST) -> str:
-        """'jax.lax.top_k' for an Attribute/Name chain; '' when not a chain."""
-        parts = []
-        while isinstance(node, ast.Attribute):
-            parts.append(node.attr)
-            node = node.value
-        if isinstance(node, ast.Name):
-            parts.append(node.id)
-            return ".".join(reversed(parts))
-        return ""
+    dotted = staticmethod(dotted)
 
     def finding(self, mod: ModuleSource, node: ast.AST, code: str, message: str) -> Finding:
         line = getattr(node, "lineno", 0)
@@ -134,21 +516,53 @@ class Analyzer:
 
             passes = default_passes()
         self.passes = passes
+        self._project: Optional[ProjectIndex] = None
 
     def tree_files(self) -> list:
-        return sorted((self.root / SRC_PREFIX).rglob("*.py"))
+        out = []
+        for sr in SCAN_ROOTS:
+            d = self.root / sr
+            if d.is_dir():
+                out.extend(sorted(d.rglob("*.py")))
+        return out
+
+    def project(self) -> ProjectIndex:
+        """The whole-program index over the scan trees, built once per run."""
+        if self._project is None:
+            mods = [ModuleSource.load(p, self.root) for p in self.tree_files()]
+            self._project = ProjectIndex(mods)
+        return self._project
 
     def collect(self, paths: Optional[list] = None) -> list:
-        explicit = paths is not None
-        files = [Path(p) for p in paths] if explicit else self.tree_files()
         findings: list = []
-        for path in files:
-            mod = ModuleSource.load(path, self.root)
-            in_src = mod.relpath.startswith(SRC_PREFIX)
+        if paths is None:
+            proj = self.project()
             for p in self.passes:
-                # tree scope rules govern src/ files; anything else listed
-                # explicitly (fixtures, temp copies) gets the full battery
-                if in_src and not p.applies(mod.relpath):
+                if p.project_aware:
+                    findings.extend(p.run_project(proj))
+                else:
+                    for mod in proj.modules.values():
+                        if p.applies(mod.relpath):
+                            findings.extend(p.run(mod))
+            return findings
+
+        mods = [ModuleSource.load(Path(pth), self.root) for pth in paths]
+        wanted = {m.relpath for m in mods if in_scan_tree(m.relpath)}
+        # project-aware passes need whole-program context even for a file
+        # subset (--diff): run them over the full index, keep findings that
+        # land in the requested files
+        if wanted and any(p.project_aware for p in self.passes):
+            proj = self.project()
+            for p in self.passes:
+                if p.project_aware:
+                    findings.extend(f for f in p.run_project(proj) if f.file in wanted)
+        for mod in mods:
+            tree_scoped = in_scan_tree(mod.relpath)
+            for p in self.passes:
+                # tree scope rules govern in-tree files; anything else listed
+                # explicitly (fixtures, temp copies) gets the full battery via
+                # each pass's single-module fallback
+                if tree_scoped and (p.project_aware or not p.applies(mod.relpath)):
                     continue
                 findings.extend(p.run(mod))
         return findings

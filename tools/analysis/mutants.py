@@ -1,0 +1,446 @@
+"""Mutation self-verification: the analyzer proving it still catches bugs.
+
+A static analyzer that silently stops matching is worse than none — the CI
+gate keeps passing while the invariant rots. This harness injects a catalog of
+*known-bad* mutations (each a real bug class this codebase has rules for) into
+temp copies of the real modules, runs the full tree analyzer over the mutated
+copy, and asserts every mutant is caught **by the expected pass and rule in
+the expected file**. Any catalog miss is an analyzer regression, not a code
+bug: ``--check`` (CI-gated) exits nonzero.
+
+The copy preserves relative paths (``src/repro/...``) so tree scope rules and
+the reviewed baseline apply exactly as on the real tree; an unmutated copy
+must scan clean against the baseline before any mutant runs, so a miss can
+never be explained away by environment drift.
+
+Usage::
+
+    python -m tools.analysis.mutants            # report, exit 0
+    python -m tools.analysis.mutants --check    # exit 1 unless 100% caught
+    python -m tools.analysis.mutants --json     # machine-readable report
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from tools.analysis import baseline as bl
+from tools.analysis.core import SCAN_ROOTS, Analyzer
+
+
+@dataclass(frozen=True)
+class Append:
+    relpath: str
+    code: str
+
+
+@dataclass(frozen=True)
+class Replace:
+    relpath: str
+    old: str
+    new: str
+
+
+@dataclass(frozen=True)
+class Mutant:
+    """One known-bad edit and the exact (pass, rule, file) that must flag it."""
+
+    mid: str
+    title: str
+    expect_pass: str
+    expect_rule: str
+    expect_file: str
+    edits: tuple
+
+    def expected(self) -> str:
+        return f"{self.expect_pass}/{self.expect_rule} in {self.expect_file}"
+
+
+CATALOG = (
+    Mutant(
+        mid="raw-topk-merge",
+        title="raw jax.lax.top_k merge outside core/topk.py",
+        expect_pass="canonical-topk",
+        expect_rule="raw-topk",
+        expect_file="src/repro/core/merge.py",
+        edits=(
+            Append(
+                "src/repro/core/merge.py",
+                "def _mutant_merge_topk(scores, k):\n"
+                "    import jax\n"
+                "    return jax.lax.top_k(scores, k)\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="raw-argsort-rank",
+        title="raw jnp.argsort ranking in the exact oracle",
+        expect_pass="canonical-topk",
+        expect_rule="raw-sort",
+        expect_file="src/repro/core/exact.py",
+        edits=(
+            Append(
+                "src/repro/core/exact.py",
+                "def _mutant_rank(scores):\n"
+                "    import jax.numpy as jnp\n"
+                "    return jnp.argsort(scores)\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="item-under-jit",
+        title=".item() host sync inside a jitted function",
+        expect_pass="trace-safety",
+        expect_rule="host-sync",
+        expect_file="src/repro/core/lsp.py",
+        edits=(
+            Append(
+                "src/repro/core/lsp.py",
+                "@jax.jit\n"
+                "def _mutant_sync(x):\n"
+                "    s = jnp.sum(x)\n"
+                "    return s.item()\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="traced-branch",
+        title="Python `if` on a traced value under jit",
+        expect_pass="trace-safety",
+        expect_rule="traced-branch",
+        expect_file="src/repro/core/threshold.py",
+        edits=(
+            Append(
+                "src/repro/core/threshold.py",
+                "@jax.jit\n"
+                "def _mutant_branch(x):\n"
+                "    m = jnp.max(x)\n"
+                "    if m > 0:\n"
+                "        return m\n"
+                "    return -m\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="cross-module-host-sync",
+        title="host sync two modules away from the nearest @jax.jit",
+        expect_pass="trace-safety",
+        expect_rule="host-sync",
+        # the sync lives in merge.py, which has NO jit entry of its own — only
+        # the cross-module closure through lsp.py can flag it
+        expect_file="src/repro/core/merge.py",
+        edits=(
+            Append(
+                "src/repro/core/merge.py",
+                "def _mutant_leak(v):\n"
+                "    import jax.numpy as jnp\n"
+                "    w = jnp.asarray(v)\n"
+                "    return float(w)\n",
+            ),
+            Append(
+                "src/repro/core/lsp.py",
+                "from repro.core.merge import _mutant_leak\n"
+                "\n"
+                "\n"
+                "@jax.jit\n"
+                "def _mutant_bridge(x):\n"
+                "    return _mutant_leak(jnp.abs(x))\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="stats-unlocked-counter",
+        title="ServeStats counter mutated outside the stats lock",
+        expect_pass="lock-discipline",
+        expect_rule="stats-unlocked",
+        expect_file="src/repro/serve/engine.py",
+        edits=(
+            Replace(
+                "src/repro/serve/engine.py",
+                "    def record_cache_miss(self) -> None:\n"
+                "        with self._lock:\n"
+                "            self.cache_misses += 1\n",
+                "    def record_cache_miss(self) -> None:\n"
+                "        self.cache_misses += 1\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="raw-future-set",
+        title="future resolved without the _try_set_* wrappers",
+        expect_pass="lock-discipline",
+        expect_rule="raw-future-set",
+        expect_file="src/repro/serve/engine.py",
+        edits=(
+            Append(
+                "src/repro/serve/engine.py",
+                "def _mutant_resolve(fut, value):\n"
+                "    fut.set_result(value)\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="broad-except-swallow",
+        title="except Exception that swallows instead of re-raising",
+        expect_pass="lock-discipline",
+        expect_rule="broad-except",
+        expect_file="src/repro/serve/chaos.py",
+        edits=(
+            Append(
+                "src/repro/serve/chaos.py",
+                "def _mutant_swallow(fn):\n"
+                "    try:\n"
+                "        return fn()\n"
+                "    except Exception:\n"
+                "        return None\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="index-map-arity",
+        title="BlockSpec index map arity != grid rank",
+        expect_pass="pallas-contracts",
+        expect_rule="index-map-arity",
+        expect_file="src/repro/kernels/doc_score/kernel.py",
+        edits=(
+            Append(
+                "src/repro/kernels/doc_score/kernel.py",
+                "def _mutant_bad_grid(x):\n"
+                "    grid = (4, 4)\n"
+                "    return pl.pallas_call(\n"
+                "        _mutant_bad_grid,\n"
+                "        grid=grid,\n"
+                "        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],\n"
+                "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),\n"
+                "        out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),\n"
+                "    )(x)\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="lock-order-inversion",
+        title="_retriever_lock taken before _swap_lock (engine swaps nest "
+        "the other way)",
+        expect_pass="lock-order",
+        expect_rule="lock-order-inconsistent",
+        expect_file="src/repro/serve/engine.py",
+        edits=(
+            Append(
+                "src/repro/serve/engine.py",
+                "def _mutant_inverted(engine: RetrievalEngine):\n"
+                "    with engine._retriever_lock:\n"
+                "        with engine._swap_lock:\n"
+                "            pass\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="lock-cycle-ring",
+        title="three locks acquired in a rotating order (no inverted pair)",
+        expect_pass="lock-order",
+        expect_rule="lock-cycle",
+        expect_file="src/repro/serve/engine.py",
+        edits=(
+            Append(
+                "src/repro/serve/engine.py",
+                "class _MutantRing:\n"
+                "    def __init__(self):\n"
+                "        import threading\n"
+                "        self._ring_a_lock = threading.Lock()\n"
+                "        self._ring_b_lock = threading.Lock()\n"
+                "        self._ring_c_lock = threading.Lock()\n"
+                "\n"
+                "    def ab(self):\n"
+                "        with self._ring_a_lock:\n"
+                "            with self._ring_b_lock:\n"
+                "                pass\n"
+                "\n"
+                "    def bc(self):\n"
+                "        with self._ring_b_lock:\n"
+                "            with self._ring_c_lock:\n"
+                "                pass\n"
+                "\n"
+                "    def ca(self):\n"
+                "        with self._ring_c_lock:\n"
+                "            with self._ring_a_lock:\n"
+                "                pass\n",
+            ),
+        ),
+    ),
+    Mutant(
+        mid="held-blocking-path",
+        title="sleep reached through a call while a lock is held",
+        expect_pass="lock-order",
+        expect_rule="held-blocking-path",
+        expect_file="src/repro/serve/engine.py",
+        edits=(
+            Append(
+                "src/repro/serve/engine.py",
+                "def _mutant_snooze():\n"
+                "    import time\n"
+                "    time.sleep(0.01)\n"
+                "\n"
+                "\n"
+                "def _mutant_hold(engine: RetrievalEngine):\n"
+                "    with engine._retriever_lock:\n"
+                "        _mutant_snooze()\n",
+            ),
+        ),
+    ),
+)
+
+
+@dataclass
+class Result:
+    mutant: Mutant
+    caught: bool
+    matched_line: int = 0
+    new_findings: list = field(default_factory=list)  # (invariant, code, file, line)
+
+
+class HarnessError(RuntimeError):
+    """The harness itself is unusable (copy drift, bad anchor) — distinct from
+    a mutant miss so CI failures read correctly."""
+
+
+def _copy_tree(repo_root: Path, dest: Path) -> None:
+    for sr in SCAN_ROOTS:
+        src = repo_root / sr
+        if not src.is_dir():
+            continue
+        for p in sorted(src.rglob("*.py")):
+            rel = p.relative_to(repo_root)
+            out = dest / rel
+            out.parent.mkdir(parents=True, exist_ok=True)
+            out.write_text(p.read_text())
+
+
+def _apply(root: Path, edit) -> tuple:
+    """Apply one edit; returns (path, original text) for revert."""
+    path = root / edit.relpath
+    orig = path.read_text()
+    if isinstance(edit, Append):
+        path.write_text(orig + "\n\n" + edit.code)
+    else:
+        if orig.count(edit.old) != 1:
+            raise HarnessError(
+                f"anchor for Replace in {edit.relpath} matched "
+                f"{orig.count(edit.old)} times (need exactly 1) — the module "
+                "changed under the catalog; update the mutant"
+            )
+        path.write_text(orig.replace(edit.old, edit.new))
+    return path, orig
+
+
+def run_all(repo_root: Path) -> list:
+    """Run every catalog mutant against a temp copy of the scan trees."""
+    tmp = Path(tempfile.mkdtemp(prefix="analysis-mutants-"))
+    try:
+        _copy_tree(repo_root, tmp)
+        clean = Analyzer(tmp).fingerprinted()
+        base = bl.Baseline.load(bl.DEFAULT_BASELINE)
+        d0 = bl.diff(clean, base, tree_scan=True)
+        if not d0.clean(tree_scan=True):
+            raise HarnessError(
+                f"unmutated copy does not scan clean vs the baseline "
+                f"({len(d0.new)} new, {len(d0.stale)} stale, "
+                f"{len(d0.unjustified)} unjustified) — fix the tree or the "
+                "baseline before trusting mutation results"
+            )
+        results = []
+        for m in CATALOG:
+            reverts = [_apply(tmp, e) for e in m.edits]
+            try:
+                mutated = Analyzer(tmp).fingerprinted()
+            finally:
+                for path, orig in reverts:
+                    path.write_text(orig)
+            fresh = [f for fp, f in mutated.items() if fp not in clean]
+            hit = [
+                f
+                for f in fresh
+                if f.invariant == m.expect_pass
+                and f.code == m.expect_rule
+                and f.file == m.expect_file
+            ]
+            results.append(
+                Result(
+                    mutant=m,
+                    caught=bool(hit),
+                    matched_line=hit[0].line if hit else 0,
+                    new_findings=sorted(
+                        (f.invariant, f.code, f.file, f.line) for f in fresh
+                    ),
+                )
+            )
+        return results
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.analysis.mutants", description=__doc__)
+    ap.add_argument("--root", default=".", help="repo root (default: cwd)")
+    ap.add_argument("--check", action="store_true", help="exit 1 unless every mutant is caught")
+    ap.add_argument("--json", action="store_true", help="machine-readable report")
+    args = ap.parse_args(argv)
+
+    try:
+        results = run_all(Path(args.root))
+    except HarnessError as e:
+        print(f"HARNESS ERROR: {e}", file=sys.stderr)
+        return 2
+
+    missed = [r for r in results if not r.caught]
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "caught": len(results) - len(missed),
+                    "total": len(results),
+                    "mutants": [
+                        {
+                            "id": r.mutant.mid,
+                            "title": r.mutant.title,
+                            "expected": r.mutant.expected(),
+                            "caught": r.caught,
+                            "line": r.matched_line,
+                            "new_findings": [
+                                {"invariant": i, "code": c, "file": f, "line": ln}
+                                for i, c, f, ln in r.new_findings
+                            ],
+                        }
+                        for r in results
+                    ],
+                },
+                indent=2,
+            )
+        )
+    else:
+        for r in results:
+            mark = "CAUGHT" if r.caught else "MISSED"
+            where = f":{r.matched_line}" if r.caught else ""
+            print(f"{mark}  {r.mutant.mid}: {r.mutant.expected()}{where}")
+            if not r.caught:
+                print(f"        {r.mutant.title}")
+                for i, c, f, ln in r.new_findings:
+                    print(f"        saw only [{i}/{c}] {f}:{ln}")
+        print(f"{len(results) - len(missed)}/{len(results)} mutants caught")
+        if missed:
+            print(
+                "a missed mutant means a pass regressed — it no longer flags a "
+                "bug class it is on record as catching"
+            )
+    if args.check and missed:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,9 +3,16 @@
 from tools.analysis.passes.canonical_topk import CanonicalTopkPass
 from tools.analysis.passes.trace_safety import TraceSafetyPass
 from tools.analysis.passes.lock_discipline import LockDisciplinePass
+from tools.analysis.passes.lock_order import LockOrderPass
 from tools.analysis.passes.pallas_contracts import PallasContractsPass
 
-ALL_PASSES = [CanonicalTopkPass, TraceSafetyPass, LockDisciplinePass, PallasContractsPass]
+ALL_PASSES = [
+    CanonicalTopkPass,
+    TraceSafetyPass,
+    LockDisciplinePass,
+    LockOrderPass,
+    PallasContractsPass,
+]
 
 
 def default_passes():

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import ast
 
-from tools.analysis.core import AnalysisPass, ModuleSource
+from tools.analysis.core import AnalysisPass, ModuleSource, in_scan_tree
 
 # The only modules allowed to touch device sort/top-k primitives directly.
 ALLOWED_FILES = (
@@ -47,7 +47,9 @@ class CanonicalTopkPass(AnalysisPass):
     )
 
     def applies(self, relpath: str) -> bool:
-        return super().applies(relpath) and relpath not in ALLOWED_FILES
+        # the whole scan tree — a raw device sort in a benchmark or tool forks
+        # parity for whoever copies it just the same
+        return in_scan_tree(relpath) and relpath not in ALLOWED_FILES
 
     def run(self, mod: ModuleSource) -> list:
         out = []

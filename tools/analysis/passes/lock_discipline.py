@@ -1,10 +1,14 @@
 """lock-discipline: the serving layer's unwritten concurrency rules, written.
 
-Covers ``serve/`` and ``index/``: the mutable index (DESIGN.md §12) shares the
-engine's conventions — the delta-segment append lock and the compaction swap
-lock are gated by the same blocking-under-lock and unlocked-counter rules as
-the engine's ``_retriever_lock``/``_swap_lock`` (in particular, a compaction
-build or a backend warmup must never run inside ``MutableIndex._lock``).
+Covers ``serve/``, ``index/``, ``distributed/``, and ``ckpt/checkpoint.py``:
+the mutable index (DESIGN.md §12) shares the engine's conventions — the
+delta-segment append lock and the compaction swap lock are gated by the same
+blocking-under-lock and unlocked-counter rules as the engine's
+``_retriever_lock``/``_swap_lock`` (in particular, a compaction build or a
+backend warmup must never run inside ``MutableIndex._lock``); the distributed
+transports and the checkpoint module's per-directory save lock
+(``dir_lock(directory)``, a lock *factory* — recognized in call form) are held
+across the same future/stat conventions.
 
 The engine's exactly-once future resolution and torn-read-free stats
 (DESIGN.md §6, §10, §11) rest on four conventions:
@@ -47,7 +51,18 @@ _DISPATCH = {"self._warm", "self.retriever", "self.warmup", "retriever"}
 _EXEMPT_METHODS = {"__init__", "__post_init__"}
 
 
+def _join_is_not_blocking(recv: ast.AST) -> bool:
+    """os.path.join / "sep".join look like thread joins to the attr check but
+    never block; a thread/process join has an object receiver, not these."""
+    if isinstance(recv, (ast.Constant, ast.JoinedStr)):
+        return True
+    d = AnalysisPass.dotted(recv)
+    return d in ("os.path", "posixpath", "ntpath") or d.endswith(".path")
+
+
 def _is_lock_expr(expr: ast.AST) -> bool:
+    if isinstance(expr, ast.Call):  # lock factories: dir_lock(directory)
+        expr = expr.func
     d = AnalysisPass.dotted(expr)
     return bool(d) and bool(_LOCK_NAME.search(d.rsplit(".", 1)[-1]))
 
@@ -61,8 +76,11 @@ class LockDisciplinePass(AnalysisPass):
     )
 
     def applies(self, relpath: str) -> bool:
-        return relpath.startswith(SRC_PREFIX + "/serve/") or relpath.startswith(
-            SRC_PREFIX + "/index/"
+        return (
+            relpath.startswith(SRC_PREFIX + "/serve/")
+            or relpath.startswith(SRC_PREFIX + "/index/")
+            or relpath.startswith(SRC_PREFIX + "/distributed/")
+            or relpath == SRC_PREFIX + "/ckpt/checkpoint.py"
         )
 
     def run(self, mod: ModuleSource) -> list:
@@ -178,6 +196,8 @@ class LockDisciplinePass(AnalysisPass):
                 attr = call.func.attr
                 recv = self.dotted(call.func.value)
                 if attr in _BLOCKING_ATTRS:
+                    if attr == "join" and _join_is_not_blocking(call.func.value):
+                        return None
                     return f"blocks on .{attr}()"
                 if attr in ("get", "put"):
                     has_kw = any(k.arg in ("timeout", "block") for k in call.keywords)

@@ -1,0 +1,385 @@
+"""lock-order: deadlock-shaped facts about the serving layer's lock graph.
+
+``lock_discipline`` checks per-site conventions (counters under the stats
+lock, no blocking at a locked *site*). This pass checks the *graph*: every
+lock acquisition in ``serve/``, ``index/``, and ``ckpt/`` — ``with`` items and
+``acquire()``/``release()`` pairs — is attributed to a lock object (``self.X``
+through the enclosing class, local receivers through inferred types,
+``dir_lock(...)``-style factories through the resolved callee) and becomes a
+node in a directed acquisition graph, with an edge A→B for every site that
+takes B while holding A, including acquisitions that happen *inside resolved
+callees* any number of calls away.
+
+Three rules fall out:
+
+* ``lock-order-inconsistent`` — both A→B and B→A exist: two threads running
+  the two paths concurrently can each hold one lock and wait on the other.
+  The classic fix is a single global order (document it, then baseline the
+  survivor with the argument for why the paths cannot overlap).
+* ``lock-cycle`` — a cycle of length ≥ 3 through the acquisition graph: no
+  single pair is inverted, but the ring deadlocks all the same.
+* ``held-blocking-path`` — a call made while holding a lock reaches a
+  blocking operation (sleep/join/result/wait, queue ops, retriever dispatch)
+  through one or more resolved calls. ``lock_discipline`` flags blocking
+  written literally under a ``with``; this extends the same contract to
+  paths the intra-module pass cannot see.
+
+Receivers that resolve to no known class get *function-scoped* lock ids: they
+still participate in held-sets and edges within their function, but never
+alias a lock in another function — an unresolved name can add missed
+deadlocks, never false ones.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.analysis.core import (
+    SRC_PREFIX,
+    AnalysisPass,
+    ModuleSource,
+    ProjectIndex,
+    dotted,
+    in_scan_tree,
+)
+
+_LOCK_NAME = re.compile(r"lock", re.IGNORECASE)
+_QUEUE_NAME = re.compile(r"(^|[._])q($|[_\d])|queue", re.IGNORECASE)
+
+_BLOCKING_ATTRS = {"join", "result", "wait"}
+_DISPATCH = {"self._warm", "self.retriever", "self.warmup", "retriever"}
+
+_SCOPES = (
+    SRC_PREFIX + "/serve/",
+    SRC_PREFIX + "/index/",
+    SRC_PREFIX + "/ckpt/",
+)
+
+
+def _lock_like(name: str) -> bool:
+    return bool(name) and bool(_LOCK_NAME.search(name.rsplit(".", 1)[-1]))
+
+
+def _join_is_not_blocking(recv: ast.AST) -> bool:
+    """os.path.join / "sep".join look like thread joins but never block."""
+    if isinstance(recv, (ast.Constant, ast.JoinedStr)):
+        return True
+    d = dotted(recv)
+    return d in ("os.path", "posixpath", "ntpath") or d.endswith(".path")
+
+
+class _FnFacts:
+    """What one function does with locks, from a single linear body walk."""
+
+    def __init__(self):
+        self.acquires: set = set()  # lock ids taken anywhere in the body
+        self.edges: list = []  # (held_id, taken_id, witness node)
+        self.blocking: tuple = None  # (reason, witness node) or None
+        self.locked_calls: list = []  # (held ids tuple, call node, callee key)
+
+
+class LockOrderPass(AnalysisPass):
+    name = "lock-order"
+    description = (
+        "cross-module lock acquisition graph: inverted pair orders and cycles "
+        "deadlock; blocking reached through calls under a held lock stalls "
+        "every thread sharing it"
+    )
+    project_aware = True
+
+    def applies(self, relpath: str) -> bool:
+        if not in_scan_tree(relpath):
+            return True  # fixtures / temp copies listed explicitly
+        return any(relpath.startswith(s) for s in _SCOPES)
+
+    def run(self, mod: ModuleSource) -> list:
+        return self._run(ProjectIndex.single(mod))
+
+    def run_project(self, project: ProjectIndex) -> list:
+        return self._run(project)
+
+    # -- lock identity ---------------------------------------------------------
+
+    def _lock_id(self, project: ProjectIndex, fi, expr: ast.AST):
+        """Stable identity for a lock-valued expression, or None when the
+        expression is not lock-like. Resolution order: lock factories through
+        the call graph, ``self.X`` through the enclosing class, local names
+        through inferred types, module globals; anything else gets a
+        function-scoped id that cannot alias across functions."""
+        private = f"{fi.modname}.{fi.qualname}:"
+        if isinstance(expr, ast.Call):
+            d = dotted(expr.func)
+            if not _lock_like(d):
+                return None
+            key = fi.call_targets.get(id(expr))
+            if key is not None:
+                return f"{key[0]}.{key[1]}"
+            return f"{private}{d}()"
+        d = dotted(expr)
+        if not _lock_like(d):
+            return None
+        parts = d.split(".")
+        if parts[0] == "self" and fi.cls is not None and len(parts) == 2:
+            return f"{fi.modname}.{fi.cls}.{parts[1]}"
+        if parts[0] in fi.local_types and len(parts) == 2:
+            tm, tc = fi.local_types[parts[0]]
+            return f"{tm}.{tc}.{parts[1]}"
+        if len(parts) == 1 and parts[0] in project.tables.get(fi.modname, _Empty).globals:
+            return f"{fi.modname}.{parts[0]}"
+        return f"{private}{d}"
+
+    # -- per-function facts ----------------------------------------------------
+
+    def _blocking_reason(self, call: ast.Call):
+        d = dotted(call.func)
+        if d in ("time.sleep", "sleep"):
+            return "sleeps"
+        if d in _DISPATCH or d.startswith("self.retriever"):
+            return "dispatches into the retriever"
+        if isinstance(call.func, ast.Attribute):
+            attr = call.func.attr
+            recv = dotted(call.func.value)
+            if attr in _BLOCKING_ATTRS:
+                if attr == "join" and _join_is_not_blocking(call.func.value):
+                    return None
+                return f"blocks on .{attr}()"
+            if attr in ("get", "put"):
+                has_kw = any(k.arg in ("timeout", "block") for k in call.keywords)
+                queue_recv = bool(recv) and bool(_QUEUE_NAME.search(recv))
+                dict_get = attr == "get" and len(call.args) == 2 and not call.keywords
+                if (has_kw or queue_recv) and not dict_get:
+                    return f"blocks on .{attr}()"
+        return None
+
+    def _scan_function(self, project: ProjectIndex, fi) -> _FnFacts:
+        facts = _FnFacts()
+        held: list = []
+
+        def acquire(lid: str, node: ast.AST) -> None:
+            for h in held:
+                if h != lid:
+                    facts.edges.append((h, lid, node))
+            facts.acquires.add(lid)
+            held.append(lid)
+
+        def visit(node: ast.AST) -> None:
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                taken = []
+                for item in node.items:
+                    visit(item.context_expr)
+                    lid = self._lock_id(project, fi, item.context_expr)
+                    if lid is not None:
+                        acquire(lid, node)
+                        taken.append(lid)
+                for stmt in node.body:
+                    visit(stmt)
+                for _ in taken:
+                    held.pop()
+                return
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                return  # nested defs run later, not under these locks
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Attribute) and node.func.attr in (
+                    "acquire",
+                    "release",
+                ):
+                    lid = self._lock_id(project, fi, node.func.value)
+                    if lid is not None:
+                        if node.func.attr == "acquire":
+                            acquire(lid, node)
+                        elif lid in held:
+                            held.remove(lid)
+                        for child in ast.iter_child_nodes(node):
+                            visit(child)
+                        return
+                if facts.blocking is None:
+                    reason = self._blocking_reason(node)
+                    if reason is not None:
+                        facts.blocking = (reason, node)
+                if held:
+                    key = fi.call_targets.get(id(node))
+                    if key is not None:
+                        facts.locked_calls.append((tuple(held), node, key))
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        for stmt in fi.node.body:
+            visit(stmt)
+        return facts
+
+    # -- the pass --------------------------------------------------------------
+
+    def _run(self, project: ProjectIndex) -> list:
+        facts = {fi.key: self._scan_function(project, fi) for fi in project.functions.values()}
+
+        # transitive lock/blocking effects over resolved call edges
+        acq_trans = {k: set(f.acquires) for k, f in facts.items()}
+        block_via = {k: ("", f.blocking[0]) if f.blocking else None for k, f in facts.items()}
+        changed = True
+        while changed:
+            changed = False
+            for k, f in facts.items():
+                fi = project.functions[k]
+                for callee in fi.callees:
+                    if callee not in facts:
+                        continue
+                    extra = acq_trans[callee] - acq_trans[k]
+                    if extra:
+                        acq_trans[k] |= extra
+                        changed = True
+                    if block_via[k] is None and block_via[callee] is not None:
+                        hop, reason = block_via[callee]
+                        step = f"{callee[0]}.{callee[1]}"
+                        block_via[k] = (f"{step} -> {hop}" if hop else step, reason)
+                        changed = True
+
+        scope_keys = [
+            k for k in facts if self.applies(project.functions[k].mod.relpath)
+        ]
+
+        out = []
+        # edge graph: direct nesting plus acquisitions inside resolved callees
+        edge_witness: dict = {}  # (held, taken) -> (mod, node)
+
+        def add_edge(a: str, b: str, mod, node) -> None:
+            if a != b and (a, b) not in edge_witness:
+                edge_witness[(a, b)] = (mod, node)
+
+        for k in scope_keys:
+            fi = project.functions[k]
+            for a, b, node in facts[k].edges:
+                add_edge(a, b, fi.mod, node)
+            for held, node, callee in facts[k].locked_calls:
+                for taken in sorted(acq_trans.get(callee, ())):
+                    for h in held:
+                        add_edge(h, taken, fi.mod, node)
+
+        # rule 1: both orders of a pair exist somewhere
+        reported_pairs = set()
+        for (a, b), (mod, node) in sorted(
+            edge_witness.items(), key=lambda kv: (kv[1][0].relpath, kv[1][1].lineno, kv[0])
+        ):
+            if (b, a) not in edge_witness or frozenset((a, b)) in reported_pairs:
+                continue
+            reported_pairs.add(frozenset((a, b)))
+            omod, onode = edge_witness[(b, a)]
+            out.append(
+                self.finding(
+                    mod,
+                    node,
+                    "lock-order-inconsistent",
+                    f"`{b}` is taken while holding `{a}` here, but the opposite "
+                    f"order exists at {omod.relpath}:{onode.lineno} — two threads "
+                    "on these paths can each hold one lock and wait forever on "
+                    "the other; pick one global order",
+                )
+            )
+
+        # rule 2: cycles of length >= 3 (pairs are rule 1's job)
+        out.extend(self._cycles(edge_witness, reported_pairs))
+
+        # rule 3: blocking reached through >= 1 resolved call while locked
+        # (blocking written literally under the `with` is lock_discipline's
+        # per-site rule; this pass owns the paths it cannot see)
+        for k in scope_keys:
+            fi = project.functions[k]
+            seen_sites = set()
+            for held, node, callee in facts[k].locked_calls:
+                bv = block_via.get(callee)
+                if bv is None or id(node) in seen_sites:
+                    continue
+                seen_sites.add(id(node))
+                hop, reason = bv
+                path = f"{callee[0]}.{callee[1]}" + (f" -> {hop}" if hop else "")
+                out.append(
+                    self.finding(
+                        fi.mod,
+                        node,
+                        "held-blocking-path",
+                        f"call {reason} via `{path}` while holding `{held[-1]}` — "
+                        "every thread contending that lock stalls behind the "
+                        "blocked call",
+                    )
+                )
+        return out
+
+    def _cycles(self, edge_witness: dict, reported_pairs: set) -> list:
+        """Tarjan SCCs over the acquisition graph; an SCC of >= 3 locks is a
+        deadlock ring no pairwise rule catches."""
+        graph: dict = {}
+        for a, b in edge_witness:
+            graph.setdefault(a, set()).add(b)
+            graph.setdefault(b, set())
+        index: dict = {}
+        low: dict = {}
+        on_stack: set = set()
+        stack: list = []
+        sccs: list = []
+        counter = [0]
+
+        def strongconnect(v: str) -> None:
+            work = [(v, iter(sorted(graph[v])))]
+            index[v] = low[v] = counter[0]
+            counter[0] += 1
+            stack.append(v)
+            on_stack.add(v)
+            while work:
+                node, it = work[-1]
+                advanced = False
+                for w in it:
+                    if w not in index:
+                        index[w] = low[w] = counter[0]
+                        counter[0] += 1
+                        stack.append(w)
+                        on_stack.add(w)
+                        work.append((w, iter(sorted(graph[w]))))
+                        advanced = True
+                        break
+                    if w in on_stack:
+                        low[node] = min(low[node], index[w])
+                if advanced:
+                    continue
+                work.pop()
+                if work:
+                    parent = work[-1][0]
+                    low[parent] = min(low[parent], low[node])
+                if low[node] == index[node]:
+                    scc = []
+                    while True:
+                        w = stack.pop()
+                        on_stack.discard(w)
+                        scc.append(w)
+                        if w == node:
+                            break
+                    sccs.append(scc)
+
+        for v in sorted(graph):
+            if v not in index:
+                strongconnect(v)
+
+        out = []
+        for scc in sccs:
+            if len(scc) < 3:
+                continue
+            members = sorted(scc)
+            inner = sorted(
+                (e for e in edge_witness if e[0] in scc and e[1] in scc),
+                key=lambda e: (edge_witness[e][0].relpath, edge_witness[e][1].lineno),
+            )
+            mod, node = edge_witness[inner[0]]
+            out.append(
+                self.finding(
+                    mod,
+                    node,
+                    "lock-cycle",
+                    f"locks {{{', '.join(members)}}} form an acquisition cycle — "
+                    "no single pair is inverted but the ring deadlocks; break "
+                    "one edge or impose a total order",
+                )
+            )
+        return out
+
+
+class _Empty:
+    globals: frozenset = frozenset()

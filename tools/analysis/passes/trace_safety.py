@@ -14,18 +14,30 @@ bodies) forces a trace-time decision on a *traced value*:
   not run time — a classic silent-wrong-count bug (the deliberate trace
   counters in ``core/lsp.py`` are exactly this, baselined as such).
 
-Reachability is intra-module: entry points are jit/shard_map/pallas/scan-family
-call sites plus ``*_ref``-parameter kernel defs, closed over same-module calls.
-Taint is seeded from jnp/jax call results, NOT from function parameters — a
-parameter named ``k`` used as ``int(k)`` on an isinstance-guarded host path is
-fine; the value classes that matter here are the ones jnp/jax produced.
+Reachability is inter-procedural: entry points are jit/shard_map/pallas/scan-
+family call sites plus ``*_ref``-parameter kernel defs, closed over same-module
+calls (name-based, as before) AND over cross-module edges the ``ProjectIndex``
+resolves — ``jit_search`` in ``core/lsp.py`` reaching ``core/topk.py`` and
+``core/merge.py`` marks those callees jit-reachable too, so a host sync three
+modules away from the nearest ``@jax.jit`` still flags. Unresolved edges fall
+back to the intra-module behavior, so precision never regresses: the project
+run is a strict superset of the per-module run. Taint is seeded from jnp/jax
+call results, NOT from function parameters — a parameter named ``k`` used as
+``int(k)`` on an isinstance-guarded host path is fine; the value classes that
+matter here are the ones jnp/jax produced.
 """
 
 from __future__ import annotations
 
 import ast
 
-from tools.analysis.core import SRC_PREFIX, AnalysisPass, ModuleSource
+from tools.analysis.core import (
+    SRC_PREFIX,
+    AnalysisPass,
+    ModuleSource,
+    ProjectIndex,
+    in_scan_tree,
+)
 
 _JIT_WRAPPERS = {
     "jax.jit",
@@ -53,6 +65,18 @@ _JIT_WRAPPERS = {
 # attribute accesses that are static under tracing — a traced name reached only
 # through these does not taint the enclosing expression
 _STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+# function forms of the same: jnp.ndim(x) is a Python int however traced x is
+_STATIC_CALLS = {
+    "jnp.ndim",
+    "jnp.shape",
+    "jnp.size",
+    "jnp.result_type",
+    "jax.numpy.ndim",
+    "jax.numpy.shape",
+    "jax.numpy.size",
+    "jax.numpy.result_type",
+}
 
 _TRACED_CALL_PREFIXES = ("jnp.", "jax.", "lax.", "pl.", "pltpu.")
 
@@ -140,9 +164,12 @@ class TraceSafetyPass(AnalysisPass):
         "host syncs, Python control flow on traced values, and mutable captures "
         "inside jit-reachable functions defeat the zero-recompile contract"
     )
+    project_aware = True
 
     def applies(self, relpath: str) -> bool:
-        return any(relpath.startswith(s) for s in _SCOPES) or not relpath.startswith("src/")
+        if not in_scan_tree(relpath):
+            return True  # fixtures / temp copies listed explicitly
+        return any(relpath.startswith(s) for s in _SCOPES) or relpath.startswith("benchmarks/")
 
     def run(self, mod: ModuleSource) -> list:
         fns = _collect_functions(mod.tree)
@@ -152,6 +179,57 @@ class TraceSafetyPass(AnalysisPass):
         for info in fns.values():
             if info.entry:
                 out.extend(self._check_function(mod, info.node))
+        return out
+
+    def run_project(self, project: ProjectIndex) -> list:
+        """Inter-procedural scan: intra-module seeding and closure exactly as
+        ``run``, plus reachability propagated along resolved cross-module call
+        edges. Emits the union — every function the intra pass would check is
+        still checked, so unresolved edges cost recall, never precision."""
+        state: dict = {}  # modname -> (mod, fns, node->info)
+        for mn, mod in project.modules.items():
+            if not self.applies(mod.relpath):
+                continue
+            fns = _collect_functions(mod.tree)
+            self._mark_entries(mod.tree, fns)
+            for info in fns.values():
+                for n in _own_nodes(info.node):
+                    if isinstance(n, ast.Call) and isinstance(n.func, ast.Name):
+                        info.calls.add(n.func.id)
+            state[mn] = (mod, fns, {id(i.node): i for i in fns.values()})
+
+        changed = True
+        while changed:
+            changed = False
+            for mn, (mod, fns, _) in state.items():
+                for info in list(fns.values()):
+                    if not info.entry:
+                        continue
+                    for callee in info.calls:  # intra-module, name-based
+                        tgt = fns.get(callee)
+                        if tgt is not None and not tgt.entry:
+                            tgt.entry = True
+                            changed = True
+                    fi = project.fn_by_node.get(id(info.node))
+                    if fi is None:
+                        continue
+                    for key in fi.callees:  # cross-module, resolved
+                        if key[0] == mn:
+                            continue  # intra edges already closed above
+                        other = state.get(key[0])
+                        tfi = project.functions.get(key)
+                        if other is None or tfi is None:
+                            continue
+                        tinfo = other[2].get(id(tfi.node))
+                        if tinfo is not None and not tinfo.entry:
+                            tinfo.entry = True
+                            changed = True
+
+        out = []
+        for mn, (mod, fns, _) in state.items():
+            for info in fns.values():
+                if info.entry:
+                    out.extend(self._check_function(mod, info.node))
         return out
 
     # -- reachability ----------------------------------------------------------
@@ -213,6 +291,8 @@ class TraceSafetyPass(AnalysisPass):
                 n = stack.pop()
                 if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
                     continue  # x.shape / x.dtype: do not descend into x
+                if isinstance(n, ast.Call) and self.dotted(n.func) in _STATIC_CALLS:
+                    continue  # jnp.ndim(x): static int, do not descend into x
                 # strict <: the RHS of the tainting assignment itself is
                 # evaluated before the target binds (k = jnp.full(..., int(k)))
                 if isinstance(n, ast.Name) and tainted.get(n.id, 10**9) < at_line:

@@ -15,7 +15,7 @@ def _fmt(fp: str, f, mark: str) -> str:
     )
 
 
-def render_text(d: Diff, baseline: Baseline, check: bool, tree_scan: bool) -> str:
+def render_text(d: Diff, baseline: Baseline, check: bool, tree_scan: bool, stats=None) -> str:
     lines = []
     for fp, f in sorted(d.new.items(), key=lambda kv: (kv[1].file, kv[1].line)):
         lines.append(_fmt(fp, f, "FAIL"))
@@ -39,6 +39,13 @@ def render_text(d: Diff, baseline: Baseline, check: bool, tree_scan: bool) -> st
             )
     n_new, n_base = len(d.new), len(d.matched)
     summary = f"{n_new} unbaselined finding(s), {n_base} baselined"
+    if stats:
+        lines.append(
+            f"project index: {stats['modules']} modules, {stats['functions']} "
+            f"functions; call edges {stats['calls_resolved']} resolved / "
+            f"{stats['calls_external']} external / "
+            f"{stats['calls_unresolved']} unresolved"
+        )
     if d.unjustified:
         summary += f", {len(d.unjustified)} unjustified baseline entr(ies)"
     if tree_scan and d.stale:
@@ -53,7 +60,7 @@ def render_text(d: Diff, baseline: Baseline, check: bool, tree_scan: bool) -> st
     return "\n".join(lines)
 
 
-def render_json(d: Diff, baseline: Baseline) -> str:
+def render_json(d: Diff, baseline: Baseline, stats=None) -> str:
     def row(fp, f, baselined):
         return {
             "fingerprint": fp,
@@ -73,4 +80,6 @@ def render_json(d: Diff, baseline: Baseline) -> str:
         "unjustified": d.unjustified,
         "stale": d.stale,
     }
+    if stats is not None:
+        payload["project"] = stats
     return json.dumps(payload, indent=2)
